@@ -1,0 +1,212 @@
+"""Analytic FLOPs / HBM-traffic estimator for the roofline terms.
+
+Why analytic: XLA:CPU's cost analysis counts while-loop bodies ONCE
+(trip-count-unaware), so `compiled.cost_analysis()['flops']` under-reports
+layer-scanned programs by ~L x.  We therefore derive the compute and memory
+terms from a model-aware estimator (we wrote every model, so the op
+inventory is exact at matmul granularity) and CROSS-CHECK against the raw
+XLA number: raw x layer-trip-count must land within ~2x of the estimate
+(asserted in tests/test_roofline.py).
+
+Conventions: one matmul MAC = 2 FLOPs; backward = 2x forward (train = 3x);
+attention uses the exact causal/windowed average KV length; MoE includes
+the one-hot dispatch/combine einsum overhead (the "einsum" impl) or not
+("gather") — the delta is one of the §Perf hillclimbs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.configs.base import InputShape, ModelConfig
+
+MOE_GROUP = 2048
+
+
+def _avg_kv(S: int, window) -> float:
+    """Average attended KV length per query under causal (+window) masking."""
+    if window is None or window >= S:
+        return (S + 1) / 2.0
+    W = window
+    return (W * (W + 1) / 2.0 + (S - W) * W) / S
+
+
+def _attn_flops_per_token(cfg: ModelConfig, kv_len: float) -> float:
+    D, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    proj = 2 * D * H * Dh + 2 * 2 * D * Hkv * Dh + 2 * H * Dh * D
+    attn = 2 * 2 * kv_len * H * Dh          # qk^T and pv
+    return proj + attn
+
+
+def _mlp_flops_per_token(cfg: ModelConfig, d_ff: int) -> float:
+    mults = 3 if cfg.mlp_type == "swiglu" else 2
+    return 2 * mults * cfg.d_model * d_ff
+
+
+def _moe_flops_per_token(cfg: ModelConfig, group: int, impl: str) -> float:
+    D, E, Fe, k = cfg.d_model, cfg.n_experts, cfg.d_expert, cfg.top_k
+    router = 2 * D * E
+    experts = 2 * 3 * D * Fe * k
+    if impl == "einsum":
+        # dispatch + combine one-hot matmuls: each costs 2*E*C*D per token
+        # (with C = G*k*cf/E per group), i.e. the waste grows with group size
+        dispatch = 2 * (2 * E * _cap(group, cfg) * D)
+    else:
+        dispatch = 0.0    # gather impl: index ops, no matmul FLOPs
+    return router + experts + dispatch
+
+
+def _cap(group: int, cfg: ModelConfig) -> int:
+    c = int(group * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(4, -(-c // 4) * 4)
+
+
+def _ssm_flops_per_token(cfg: ModelConfig, decode: bool) -> float:
+    D, din, N, H, P = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                       cfg.n_ssm_heads, cfg.ssm_head_dim)
+    K = cfg.ssm_conv
+    X = 2 * din + 2 * N + H
+    proj = 2 * D * X + 2 * din * D           # in_proj + out_proj
+    conv = 2 * K * (din + 2 * N)
+    if decode:
+        ssd = 2 * H * P * N * 2               # state update + readout
+    else:
+        Q = cfg.ssm_chunk
+        ssd = (2 * Q * N                      # chunk scores (shared heads)
+               + 2 * Q * H * P                # intra apply
+               + 2 * 2 * H * P * N)           # state build + inter readout
+    return proj + conv + ssd
+
+
+def _rglru_flops_per_token(cfg: ModelConfig) -> float:
+    D = cfg.d_model
+    W = cfg.rglru_width or D
+    branches = 2 * 2 * D * W                  # rnn_in + gate_in
+    gates = 2 * 2 * W * W                     # w_a, w_x
+    conv = 2 * cfg.ssm_conv * W
+    scan = 8 * W
+    out = 2 * W * D
+    return branches + gates + conv + scan + out
+
+
+@dataclass
+class Estimate:
+    forward_flops: float          # global, one forward pass
+    total_flops: float            # global, the lowered program (train=3x fwd)
+    model_flops: float            # 6 N D (active params for MoE)
+    hbm_bytes_per_device: float   # dominant HBM traffic, per device, per step
+    tokens: int
+
+
+def estimate(cfg: ModelConfig, shape: InputShape, *, n_devices: int = 256,
+             model_shards: int = 16, moe_impl: str = "einsum") -> Estimate:
+    decode = shape.kind == "decode"
+    S = 1 if decode else shape.seq_len
+    B = shape.global_batch
+    if cfg.family == "vlm" and not decode:
+        S = S + cfg.n_image_tokens
+    tokens = B * S
+    kv_len = (float(min(shape.seq_len, cfg.sliding_window or shape.seq_len))
+              if decode else _avg_kv(S, cfg.sliding_window))
+
+    per_tok = 0.0
+    L = cfg.n_layers
+    if cfg.family in ("dense", "moe", "vlm"):
+        ffn = (_moe_flops_per_token(cfg, min(MOE_GROUP, tokens), moe_impl)
+               if cfg.n_experts else _mlp_flops_per_token(cfg, cfg.d_ff))
+        per_tok = L * (_attn_flops_per_token(cfg, kv_len) + ffn)
+    elif cfg.family == "ssm":
+        per_tok = L * _ssm_flops_per_token(cfg, decode)
+    elif cfg.family == "hybrid":
+        period = cfg.hybrid_period
+        n_attn = L // period
+        n_rec = L - n_attn
+        w_kv = (float(min(shape.seq_len, cfg.sliding_window))
+                if decode else _avg_kv(S, cfg.sliding_window))
+        per_tok = (n_attn * (_attn_flops_per_token(cfg, w_kv)
+                             + _mlp_flops_per_token(cfg, cfg.d_ff))
+                   + n_rec * (_rglru_flops_per_token(cfg)
+                              + _mlp_flops_per_token(cfg, cfg.d_ff)))
+    elif cfg.family == "audio":
+        Te = cfg.encoder_seq
+        enc_tokens = B * Te
+        enc_per_tok = cfg.n_encoder_layers * (
+            _attn_flops_per_token(cfg, Te) + _mlp_flops_per_token(cfg, cfg.d_ff))
+        dec_self_kv = float(shape.seq_len) if decode else _avg_kv(S, None)
+        dec_per_tok = L * (_attn_flops_per_token(cfg, dec_self_kv)
+                           + _attn_flops_per_token(cfg, Te)   # cross-attn
+                           + _mlp_flops_per_token(cfg, cfg.d_ff))
+        enc_total = 0.0 if decode else enc_tokens * enc_per_tok
+        fwd = enc_total + tokens * (dec_per_tok + 2 * cfg.d_model * cfg.vocab_size)
+        return _finish(cfg, shape, fwd, tokens, n_devices, model_shards)
+
+    unembed = 2 * cfg.d_model * cfg.vocab_size
+    fwd = tokens * (per_tok + unembed)
+    return _finish(cfg, shape, fwd, tokens, n_devices, model_shards)
+
+
+def _finish(cfg: ModelConfig, shape: InputShape, fwd: float, tokens: int,
+            n_devices: int, model_shards: int) -> Estimate:
+    train = shape.kind == "train"
+    total = fwd * 3.0 if train else fwd
+    n_active = cfg.param_count(active_only=True)
+    model_flops = (6 if train else 2) * n_active * tokens
+
+    # HBM traffic per device (napkin; coefficients documented in §Roofline)
+    p_bytes = cfg.param_count() * 2.0
+    if train:
+        # fwd read + bwd read of (model-sharded) params + local opt update
+        param_traffic = 2 * (p_bytes / model_shards) * 2 \
+            + (p_bytes / n_devices) * 12
+        act_traffic = tokens / n_devices * cfg.d_model * cfg.n_layers * 2 * 8 * 3
+    else:
+        param_traffic = p_bytes / model_shards
+        act_traffic = tokens / n_devices * cfg.d_model * cfg.n_layers * 2 * 8
+    cache_traffic = 0.0
+    if shape.kind == "decode":
+        cache_traffic = _cache_bytes(cfg, shape) / n_devices
+    hbm = param_traffic + act_traffic + cache_traffic
+    return Estimate(forward_flops=fwd, total_flops=total,
+                    model_flops=model_flops, hbm_bytes_per_device=hbm,
+                    tokens=tokens)
+
+
+def _cache_bytes(cfg: ModelConfig, shape: InputShape) -> float:
+    B = shape.global_batch
+    S = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+    if cfg.family == "ssm":
+        st = cfg.n_layers * B * (cfg.n_ssm_heads * cfg.ssm_head_dim
+                                 * cfg.ssm_state * 4
+                                 + (cfg.ssm_conv - 1)
+                                 * (cfg.d_inner + 2 * cfg.ssm_state) * 2)
+        return float(st)
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // cfg.hybrid_period
+        n_rec = cfg.n_layers - n_attn
+        W = cfg.rglru_width or cfg.d_model
+        kv = n_attn * B * min(shape.seq_len, cfg.sliding_window) \
+            * cfg.n_kv_heads * cfg.head_dim_ * 2 * 2
+        st = n_rec * B * W * (4 + (cfg.ssm_conv - 1) * 2)
+        return float(kv + st)
+    kv = cfg.n_layers * B * S * cfg.n_kv_heads * cfg.head_dim_ * 2 * 2
+    if cfg.family == "audio":
+        kv += cfg.n_layers * B * cfg.encoder_seq * cfg.n_kv_heads \
+            * cfg.head_dim_ * 2 * 2
+    return float(kv)
+
+
+def roofline_terms(est: Estimate, coll_bytes_per_device: float, *,
+                   n_devices: int = 256,
+                   peak_flops: float = 197e12, hbm_bw: float = 819e9,
+                   ici_bw: float = 50e9) -> Dict[str, float]:
+    compute_s = est.total_flops / (n_devices * peak_flops)
+    memory_s = est.hbm_bytes_per_device / hbm_bw
+    collective_s = coll_bytes_per_device / ici_bw
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom.replace("_s", "")
+    terms["model_flops_ratio"] = (est.model_flops / est.total_flops
+                                  if est.total_flops else 0.0)
+    return terms

@@ -1,0 +1,106 @@
+"""§Roofline — three-term roofline per (arch x shape) from the dry-run.
+
+Reads the per-combo JSON records produced by ``repro.launch.dryrun``
+(collective bytes parsed from the post-SPMD HLO, loop-trip-corrected) and
+combines them with the analytic compute/memory estimator.  Emits the table
+EXPERIMENTS.md §Roofline embeds.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--results DIR] [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import canonical, get_config, get_shape  # noqa: E402
+from repro.launch.dryrun import effective_config  # noqa: E402
+
+from . import analytic  # noqa: E402
+
+
+def load_records(results_dir: str, mesh_tag: str = "singlepod",
+                 suffix: str = "") -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(
+            results_dir, f"dryrun_*_{mesh_tag}{suffix}.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def analyse(rec: Dict) -> Optional[Dict]:
+    if "skipped" in rec or "error" in rec:
+        return None
+    shape = get_shape(rec["shape"])
+    cfg, _note = effective_config(rec["arch"], shape)
+    n_dev = rec.get("n_devices", 256)
+    model_shards = 16
+    est = analytic.estimate(cfg, shape, n_devices=n_dev,
+                            model_shards=model_shards,
+                            moe_impl=rec.get("moe_impl") or "einsum")
+    coll = rec["collective_bytes_per_device"]["total"]
+    terms = analytic.roofline_terms(est, coll, n_devices=n_dev)
+    # cross-check: raw XLA flops x outer loop trips vs analytic
+    trips = rec.get("loop_trip_counts", [])
+    raw = rec.get("flops_per_device_raw", 0.0) * n_dev
+    raw_scaled = raw * (trips[0] if trips else 1)
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": "x".join(str(d) for d in rec["mesh"]),
+        **{k: terms[k] for k in ("compute_s", "memory_s", "collective_s",
+                                 "bottleneck", "model_flops_ratio")},
+        "total_flops": est.total_flops,
+        "model_flops": est.model_flops,
+        "hbm_bytes_dev": est.hbm_bytes_per_device,
+        "coll_bytes_dev": coll,
+        "xla_raw_flops_scaled": raw_scaled,
+        "xla_vs_analytic": raw_scaled / est.total_flops if est.total_flops else 0,
+        "note": rec.get("note", ""),
+    }
+
+
+def table(rows: List[Dict], md: bool = False) -> str:
+    cols = ["arch", "shape", "bottleneck", "compute_s", "memory_s",
+            "collective_s", "model_flops_ratio", "xla_vs_analytic", "note"]
+    lines = []
+    if md:
+        lines.append("| " + " | ".join(cols) + " |")
+        lines.append("|" + "---|" * len(cols))
+    for r in rows:
+        vals = []
+        for c in cols:
+            v = r[c]
+            vals.append(f"{v:.3e}" if isinstance(v, float) and "ratio" not in c
+                        and "vs" not in c else
+                        (f"{v:.3f}" if isinstance(v, float) else str(v)))
+        lines.append(("| " + " | ".join(vals) + " |") if md
+                     else ",".join(vals))
+    return "\n".join(lines)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--results", default="benchmarks/results")
+    p.add_argument("--mesh", default="singlepod")
+    p.add_argument("--suffix", default="")
+    p.add_argument("--md", action="store_true")
+    args = p.parse_args()
+    rows = [a for a in (analyse(r) for r in load_records(
+        args.results, args.mesh, args.suffix)) if a is not None]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    if not args.md:
+        print("arch,shape,bottleneck,compute_s,memory_s,collective_s,"
+              "model_flops_ratio,xla_vs_analytic,note")
+    print(table(rows, md=args.md))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Benchmark harness entry: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Prints ``name,metric,value`` CSV rows: raw measurements first, then each
+benchmark's derived paper-claim checks.  ``--full`` runs paper-scale
+workloads (slower); the default is a quick pass sized for CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from . import (fig9_financial, fig9_router, fig9_swe, fig10_control_loop,  # noqa: E402
+               sec62_policies, table4_two_level)
+
+BENCHES = {
+    "fig9a_financial": fig9_financial,
+    "fig9b_router": fig9_router,
+    "fig9c_swe": fig9_swe,
+    "fig10_control_loop": fig10_control_loop,
+    "table4_two_level": table4_two_level,
+    "sec62_policies": sec62_policies,
+}
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true")
+    p.add_argument("--only", default=None)
+    p.add_argument("--out", default="benchmarks/results")
+    args = p.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    print("bench,metric,value")
+    all_rows = {}
+    for name, mod in BENCHES.items():
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        rows = mod.run(quick=not args.full)
+        wall = time.perf_counter() - t0
+        all_rows[name] = rows
+        for r in rows:
+            tag = "/".join(str(r[k]) for k in ("system", "policy", "rps",
+                                               "futures", "nodes")
+                           if k in r)
+            for k, v in r.items():
+                if k in ("n", "bench", "system", "policy") or not isinstance(
+                        v, (int, float)):
+                    continue
+                val = f"{v:.4f}" if isinstance(v, float) else str(v)
+                print(f"{name}[{tag}],{k},{val}")
+        for line in mod.derive(rows):
+            print(f"{name},derived,{line}")
+        print(f"{name},wall_seconds,{wall:.1f}")
+        with open(os.path.join(args.out, f"{name}.json"), "w") as f:
+            json.dump(rows, f, indent=2, default=str)
+    print(f"done,benches,{len(all_rows)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""End-to-end serving driver: a REAL JAX model served with batched requests
+through the NALAR-integrated inference engine (the paper's kind is serving,
+so this is the deliverable-(b) end-to-end driver).
+
+Two engine instances (NALAR agent instances) serve a reduced qwen3-family
+model with continuous batching, paged KV cache, session prefix reuse, and a
+NALAR-driven session migration between engines mid-run.
+
+    PYTHONPATH=src python examples/serve_engine.py [--arch qwen3-0.6b]
+"""
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import KVRegistry
+from repro.models import build_model
+from repro.serving import InferenceEngine, Request, SamplingParams
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="qwen3-0.6b")
+    p.add_argument("--requests", type=int, default=12)
+    p.add_argument("--max-new", type=int, default=12)
+    args = p.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    print(f"[serve] arch={cfg.arch_id} (reduced, CPU) vocab={cfg.vocab_size}")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    registry = KVRegistry()
+    engines = [InferenceEngine(model, params, max_batch=4, max_seq=128,
+                               kv_registry=registry,
+                               instance_id=f"llm:{i}") for i in range(2)]
+
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    reqs = []
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              size=int(rng.integers(6, 24))).tolist()
+        r = Request.make(prompt, session_id=f"user{i % 4}",
+                         sampling=SamplingParams(max_new_tokens=args.max_new))
+        engines[i % 2].submit(r)
+        reqs.append(r)
+
+    # continuous batching across both engines until drained
+    while not all(r.finished for r in reqs):
+        for e in engines:
+            e.step()
+    wall = time.perf_counter() - t0
+
+    done = sum(r.finished for r in reqs)
+    toks = sum(len(r.generated) for r in reqs)
+    print(f"[serve] {done}/{len(reqs)} requests, {toks} tokens "
+          f"in {wall:.1f}s ({toks / wall:.1f} tok/s on CPU)")
+    for e in engines:
+        print(f"[serve] {e.instance_id} telemetry: {e.telemetry()}")
+
+    # NALAR K,V-cache migration: move user0's session from llm:0 to llm:1
+    payload = engines[0].pool.export_session("user0")
+    if payload is not None:
+        engines[1].pool.import_session("user0", payload)
+        moved = registry.migrate("user0", "llm:0", "llm:1")
+        print(f"[serve] migrated session user0 ({moved} cached tokens) "
+              f"llm:0 -> llm:1")
+        follow = engines[1].generate(
+            rng.integers(0, cfg.vocab_size, size=6).tolist(),
+            session_id="user0",
+            sampling=SamplingParams(max_new_tokens=6))
+        print(f"[serve] follow-up on llm:1 reused "
+              f"{follow.prefix_reused_tokens} prefix tokens "
+              f"(prefix_hits={engines[1].metrics.prefix_hits})")
+    print("[serve] OK")
+
+
+if __name__ == "__main__":
+    main()

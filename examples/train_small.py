@@ -1,0 +1,55 @@
+"""Train a ~small language model for a few hundred steps on CPU with the
+full training substrate (synthetic corpus, AdamW + cosine, checkpointing).
+
+Default is a reduced qwen3-family config sized for CPU minutes; pass
+--steps/--dmodel to scale up (the same code path trains the full configs on
+the production mesh via repro.launch.train).
+
+    PYTHONPATH=src python examples/train_small.py --steps 200
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.training import checkpoint, train
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="qwen3-0.6b")
+    p.add_argument("--steps", type=int, default=200)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--dmodel", type=int, default=0)
+    p.add_argument("--ckpt", default="/tmp/repro_train_small.ckpt")
+    args = p.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    if args.dmodel:
+        cfg = cfg.replace(d_model=args.dmodel)
+    model = build_model(cfg)
+    print(f"[train] {cfg.arch_id}: L={cfg.n_layers} d={cfg.d_model} "
+          f"V={cfg.vocab_size}")
+
+    def log(step, metrics):
+        print(f"[train] step {step:4d} loss={metrics['loss']:.4f} "
+              f"gnorm={metrics['grad_norm']:.2f} lr={metrics['lr']:.2e}")
+
+    params, result = train(model, steps=args.steps, batch_size=args.batch,
+                           seq_len=args.seq, peak_lr=1e-3, warmup=20,
+                           log_fn=log, log_every=20)
+    print(f"[train] {result.steps} steps in {result.wall_seconds:.1f}s; "
+          f"loss {result.first_loss:.3f} -> {result.last_loss:.3f}")
+    n = checkpoint.save(args.ckpt, params)
+    print(f"[train] checkpoint: {args.ckpt} ({n / 1e6:.1f} MB)")
+    assert result.last_loss < result.first_loss, "loss must decrease"
+    print("[train] OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""repro.core — NALAR's contribution: futures-centric agent serving runtime.
+
+Public API:
+    NalarRuntime, deployment          runtime + entry point
+    AgentSpec, parse_spec, emulated   agent declaration / stub generation
+    Directives                        runtime hints (Table 1)
+    Future                            coordination handle (§3.2)
+    ManagedList/ManagedDict           managed state (§3.3)
+    Policy, ActionSink, ClusterView   policy interface (§4.2, Table 2)
+    + the default/example policy library
+"""
+
+from .clock import Kernel, RealTimeKernel, SimKernel
+from .controller_global import GlobalController
+from .controller_local import ComponentController, LocalSchedule
+from .directives import Directives
+from .executor import (AgentInstance, EmulatedMethod, FixedLatency,
+                       LatencyModel, LLMLatency, LognormalLatency)
+from .future import Future, FutureMetadata, FutureState, FutureTable
+from .kv_registry import KVRegistry, Residency
+from .node_store import NodeStore, StoreCluster
+from .policy import (Action, ActionSink, ClusterView, HighPrioritySessionPolicy,
+                     HoLMitigationPolicy, InstanceView, LoadBalancePolicy,
+                     LPTPolicy, LPTSchedule, Policy, PolicyChain,
+                     ResourceReassignmentPolicy, SRTFPolicy, SRTFSchedule,
+                     default_policies)
+from .runtime import NalarRuntime, Router, current_runtime, deployment
+from .session import SessionRegistry, get_context, set_context
+from .state import ManagedDict, ManagedList, SessionStateStore, managedDict, managedList
+from .stubs import AgentSpec, Stub, emulated, parse_spec
+from .telemetry import Telemetry
+
+__all__ = [
+    "AgentInstance", "AgentSpec", "Action", "ActionSink", "ClusterView",
+    "ComponentController", "Directives", "EmulatedMethod", "FixedLatency",
+    "Future", "FutureMetadata", "FutureState", "FutureTable",
+    "GlobalController", "HighPrioritySessionPolicy", "HoLMitigationPolicy",
+    "InstanceView", "Kernel", "KVRegistry", "LatencyModel", "LLMLatency",
+    "LoadBalancePolicy", "LocalSchedule", "LognormalLatency", "LPTPolicy",
+    "LPTSchedule", "ManagedDict", "ManagedList", "NalarRuntime", "NodeStore",
+    "Policy", "PolicyChain", "RealTimeKernel", "Residency",
+    "ResourceReassignmentPolicy", "Router", "SRTFPolicy", "SRTFSchedule",
+    "SessionRegistry", "SessionStateStore", "SimKernel", "StoreCluster",
+    "Stub", "Telemetry", "current_runtime", "default_policies", "deployment",
+    "emulated", "get_context", "managedDict", "managedList", "parse_spec",
+    "set_context",
+]

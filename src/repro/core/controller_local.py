@@ -1,0 +1,344 @@
+"""Component-level controller: event-driven local enforcement (paper §4.1).
+
+One controller per agent instance.  Three roles (verbatim from the paper):
+ 1. local scheduling with policies installed by the global controller, plus
+    maintenance of future metadata for migration and value propagation;
+ 2. the interface between stubs and the runtime — stubs invoke the controller,
+    never user code directly;
+ 3. serving-time metrics (queue length, latencies, resource use) pushed to the
+    node store for the global controller's periodic computations.
+
+Migration (Fig. 8) is coordinated entirely among component controllers; the
+global controller only issues the command.
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+from typing import Any, Dict, List, Optional
+
+from .executor import AgentInstance, EmulatedMethod
+from .future import Future, FutureState, resolve_args
+
+
+class LocalSchedule:
+    """Local scheduling policy installed by the global controller.
+
+    ``order_key(fut, now)``: smaller runs first.  Default: priority then FCFS.
+    Swappable at runtime via the policy interface (§4.2) — e.g. SRTF installs
+    a remaining-work key, LPT a longest-processing-time key.
+    """
+
+    name = "priority_fcfs"
+
+    def order_key(self, fut: Future, now: float):
+        return (-fut.meta.priority, fut.meta.created_at)
+
+
+class ComponentController:
+    def __init__(self, runtime, instance: AgentInstance) -> None:
+        self.runtime = runtime
+        self.inst = instance
+        self.kernel = runtime.kernel
+        self.store = runtime.stores.get(instance.node_id)
+        self.schedule_policy: LocalSchedule = LocalSchedule()
+        # stable across processes (str hash is salted; crc32 is not)
+        import zlib
+        self._rng = random.Random(zlib.crc32(instance.instance_id.encode()))
+        self._lock = threading.RLock()
+        # futures parked here waiting on dependencies: fid -> set of dep fids
+        self._parked: Dict[str, set] = {}
+        self._publish_metrics()
+        # consume policy/commands written to the node store asynchronously
+        self.store.subscribe(f"cmd:{instance.instance_id}", self._on_command)
+
+    # ------------------------------------------------------------ submission
+    def submit(self, fut: Future) -> None:
+        """A stub routed ``fut`` here.  Park until deps ready, then enqueue."""
+        if not self.inst.alive:
+            # instance died between routing and arrival: re-route
+            self.runtime.dispatch(fut)
+            return
+        fut.meta.executor = self.inst.instance_id
+        fut.meta.scheduled_at = self.kernel.now()
+        fut._set_state(FutureState.SCHEDULED)
+        pending = set(fut.unresolved_deps(self.runtime.futures))
+        with self._lock:
+            if pending:
+                self._parked[fut.fid] = pending
+                for dep in pending:
+                    self.runtime.register_dep_consumer(dep, self)
+            else:
+                self._enqueue(fut)
+        self._maybe_dispatch()
+
+    def on_dep_ready(self, dep_fid: str) -> None:
+        """Push-based readiness: a producer transferred a dependency value."""
+        ready: List[Future] = []
+        with self._lock:
+            for fid, deps in list(self._parked.items()):
+                deps.discard(dep_fid)
+                if not deps:
+                    del self._parked[fid]
+                    fut = self.runtime.futures.get(fid)
+                    if fut is not None:
+                        ready.append(fut)
+        for fut in ready:
+            with self._lock:
+                self._enqueue(fut)
+        if ready:
+            self._maybe_dispatch()
+
+    def _enqueue(self, fut: Future) -> None:
+        self.inst.enqueue(fut)
+        self._publish_metrics()
+
+    # -------------------------------------------------------------- dispatch
+    def _maybe_dispatch(self) -> None:
+        with self._lock:
+            if not self.inst.alive or self.inst.busy or self.inst.qsize() == 0:
+                return
+            now = self.kernel.now()
+            order = sorted(self.inst.queue, key=lambda f: self.schedule_policy.order_key(f, now))
+            head = order[0]
+            batch = [head]
+            if self.inst.directives.batchable:
+                for f in order[1:]:
+                    if len(batch) >= self.inst.directives.max_batch:
+                        break
+                    if f.meta.method == head.meta.method:
+                        batch.append(f)
+            self.inst.dequeue_selected(batch)
+            self.inst.running = list(batch)
+        self._execute(batch)
+
+    def _execute(self, batch: List[Future]) -> None:
+        now = self.kernel.now()
+        for f in batch:
+            f._set_state(FutureState.RUNNING)
+            f.meta.started_at = now
+        method = self.inst.methods.get(batch[0].meta.method)
+        if isinstance(method, EmulatedMethod):
+            self._execute_emulated(batch, method)
+        elif callable(method):
+            self._execute_composite(batch[0], method)
+        else:
+            for f in batch:
+                self._complete(f, error=AttributeError(
+                    f"{self.inst.agent_type} has no method {f.meta.method}"))
+
+    def _execute_emulated(self, batch: List[Future], method: EmulatedMethod) -> None:
+        # enrich hints with execution context so cost models can consult
+        # session-state (e.g. K,V-cache locality — §4.3.2)
+        hints = [dict(f.meta.work_hint,
+                      session_id=f.meta.session_id,
+                      instance=self.inst.instance_id,
+                      now=self.kernel.now()) for f in batch]
+        service = method.latency.service_time(hints, self._rng)
+        now = self.kernel.now()
+        self.inst.metrics.busy_until = now + service
+        self.inst.metrics.record_service(service)
+
+        def finish() -> None:
+            done_any = False
+            for f in batch:
+                if f.state != FutureState.RUNNING:
+                    continue  # preempted/migrated mid-flight
+                done_any = True
+                try:
+                    self.runtime.enter_agent_context(f, self.inst)
+                    args, kwargs = resolve_args(f.args, f.kwargs)
+                    value = method.compute(*args, **kwargs)
+                    self._complete(f, value=value)
+                except BaseException as e:  # noqa: BLE001 — fault reporting (§5)
+                    self._complete(f, error=e)
+                finally:
+                    self.runtime.exit_agent_context()
+            if not done_any:
+                # entire batch was preempted away; free the instance
+                self._maybe_dispatch()
+
+        self.kernel.schedule(service, finish, tag=f"exec:{self.inst.instance_id}")
+
+    def _execute_composite(self, fut: Future, fn) -> None:
+        """User-code agent method that may itself call stubs: run on a driver
+        thread so nested future blocking works under virtual time."""
+        def body() -> None:
+            start = self.kernel.now()
+            try:
+                self.runtime.enter_agent_context(fut, self.inst)
+                args, kwargs = resolve_args(fut.args, fut.kwargs)
+                value = fn(*args, **kwargs)
+                err: Optional[BaseException] = None
+            except BaseException as e:  # noqa: BLE001
+                value, err = None, e
+            finally:
+                self.runtime.exit_agent_context()
+            self.inst.metrics.record_service(self.kernel.now() - start)
+            if err is None:
+                self._complete(fut, value=value)
+            else:
+                self._complete(fut, error=err)
+
+        self.kernel.spawn_driver(body, name=f"agent:{fut.fid}")
+
+    # ------------------------------------------------------------ completion
+    def _complete(self, fut: Future, value: Any = None,
+                  error: Optional[BaseException] = None) -> None:
+        now = self.kernel.now()
+        with self._lock:
+            if fut in self.inst.running:
+                self.inst.running.remove(fut)
+        if error is not None:
+            self.inst.metrics.failed += 1
+            fut.fail(error, now)
+        else:
+            self.inst.metrics.completed += 1
+            fut.materialize(value, now)
+        # push the value to each consumer controller (push-based readiness)
+        for consumer in list(fut.meta.consumers):
+            ctrl = self.runtime.controller_of(consumer)
+            if ctrl is not None and ctrl is not self:
+                delay = self.runtime.net_latency(self.inst.node_id, ctrl.inst.node_id)
+                self.kernel.schedule(delay, lambda c=ctrl, fid=fut.fid: c.on_dep_ready(fid))
+            elif ctrl is self:
+                self.on_dep_ready(fut.fid)
+        self.runtime.telemetry.on_future_done(fut, self.inst, now)
+        self._publish_metrics()
+        self._maybe_dispatch()
+
+    # ------------------------------------------------------------- migration
+    def migrate_out(self, fut: Future, dst_instance_id: str) -> bool:
+        """Fig. 8 protocol, steps 2–6, coordinated locally.
+
+        Returns True if migration happened (future was still movable here).
+        """
+        dst_ctrl = self.runtime.controller_of(dst_instance_id)
+        if dst_ctrl is None:
+            return False
+        with self._lock:
+            queued = self.inst.remove_queued(fut)
+            parked = fut.fid in self._parked
+            if parked:
+                pending = self._parked.pop(fut.fid)
+            if not queued and not parked:
+                # running: movable only if the agent declared `preemptable`
+                # (Table 1) — preemption-with-restart semantics: the pending
+                # completion event becomes a no-op (state check) and the
+                # future re-executes at the destination.
+                preempt_fn = self.inst.directives.preemptable
+                if (preempt_fn is None or fut not in self.inst.running
+                        or len(self.inst.running) != 1):
+                    return False
+                self.inst.running.remove(fut)
+                fut._set_state(FutureState.PENDING)
+                fut.meta.work_hint["preempted"] = \
+                    fut.meta.work_hint.get("preempted", 0) + 1
+                if callable(preempt_fn):
+                    preempt_fn(fut)
+                queued = True   # treat as movable from here on
+        now = self.kernel.now()
+        # Step 2+3: for unresolved deps, repoint the consumer registration so
+        # producers push values to the destination instead of here.
+        if parked and pending:
+            for dep in pending:
+                self.runtime.register_dep_consumer(dep, dst_ctrl)
+        # Step 4: notify creator that the executor changed (metadata update).
+        fut.meta.executor = dst_instance_id
+        self.runtime.telemetry.on_migration(fut, self.inst.instance_id,
+                                            dst_instance_id, now)
+        # Step 5: transfer session state; cost modelled as a delay on activation.
+        bytes_moved = self.runtime.migrate_session_state(
+            fut.meta.session_id, self.inst.agent_type, dst_ctrl.inst.node_id)
+        delay = self.runtime.state_transfer_delay(
+            self.inst.node_id, dst_ctrl.inst.node_id, bytes_moved)
+        # also move KV-cache residency hints for the session (§4.3.2)
+        self.runtime.kv_registry.migrate(fut.meta.session_id,
+                                         self.inst.instance_id, dst_instance_id)
+
+        # Step 6: activate at destination.
+        def activate() -> None:
+            if parked and pending:
+                with dst_ctrl._lock:
+                    still = {d for d in pending
+                             if not self.runtime.futures.get(d).available}
+                    if still:
+                        dst_ctrl._parked[fut.fid] = still
+                    else:
+                        dst_ctrl._enqueue(fut)
+                dst_ctrl._maybe_dispatch()
+            else:
+                dst_ctrl.submit(fut)
+
+        self.kernel.schedule(delay, activate, tag="migrate-activate")
+        self._publish_metrics()
+        return True
+
+    def migrate_session(self, session_id: str, dst_instance_id: str) -> int:
+        """Move all queued/parked futures of a session (Table 2 ``migrate``)."""
+        with self._lock:
+            movable = [f for f in list(self.inst.queue)
+                       if f.meta.session_id == session_id]
+            movable += [self.runtime.futures.get(fid)
+                        for fid, _ in list(self._parked.items())
+                        if self.runtime.futures.get(fid) is not None
+                        and self.runtime.futures.get(fid).meta.session_id == session_id]
+        n = 0
+        for f in movable:
+            if f is not None and self.migrate_out(f, dst_instance_id):
+                n += 1
+        return n
+
+    # ----------------------------------------------------- commands & policy
+    def _on_command(self, field: str, payload: Any) -> None:
+        """Commands written by the global controller into the node store."""
+        kind = payload.get("kind") if isinstance(payload, dict) else None
+        if kind == "migrate_session":
+            self.migrate_session(payload["session_id"], payload["dst"])
+        elif kind == "migrate_future":
+            fut = self.runtime.futures.get(payload["fid"])
+            if fut is not None:
+                self.migrate_out(fut, payload["dst"])
+        elif kind == "set_schedule":
+            self.schedule_policy = payload["policy"]
+            self._maybe_dispatch()
+        elif kind == "kill":
+            self.shutdown(drain_to=payload.get("drain_to"))
+
+    def shutdown(self, drain_to: Optional[str] = None) -> None:
+        self.inst.alive = False
+        with self._lock:
+            pending = list(self.inst.queue)
+            parked = [self.runtime.futures.get(fid)
+                      for fid in list(self._parked)]
+        # drain queued AND parked work; fall back to re-routing through the
+        # runtime when no explicit drain target was given
+        for f in pending + [p for p in parked if p is not None]:
+            if drain_to and self.migrate_out(f, drain_to):
+                continue
+            with self._lock:
+                dequeued = self.inst.remove_queued(f)
+                if f.fid in self._parked:
+                    self._parked.pop(f.fid)
+                    dequeued = True
+            if dequeued:
+                self.runtime.dispatch(f)
+        self._publish_metrics()
+
+    # -------------------------------------------------------------- metrics
+    def _publish_metrics(self) -> None:
+        m = self.inst.metrics
+        self.store.hset_many(f"metrics:{self.inst.instance_id}", {
+            "agent_type": self.inst.agent_type,
+            "node": self.inst.node_id,
+            "qsize": self.inst.qsize(),
+            "busy": self.inst.busy,
+            "busy_until": m.busy_until,
+            "ema_service": m.ema_service,
+            "completed": m.completed,
+            "failed": m.failed,
+            "alive": self.inst.alive,
+            "waiting_sessions": list(self.inst.waiting_sessions),
+            "updated_at": self.kernel.now(),
+        })

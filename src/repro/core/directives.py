@@ -1,0 +1,50 @@
+"""Runtime directive (hint) interface — paper §3.4, Table 1.
+
+Directives let developers declare execution properties the runtime exploits:
+batching, statefulness, preemptability, instance bounds, resource demands.
+
+Constraint from §5 (Discussion): managed state cannot be combined with
+batchable agents — batching aggregates requests across sessions, making state
+attribution impossible.  ``validate()`` enforces it.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+
+@dataclass
+class Directives:
+    # True: successive calls of one session route to the same instance, and
+    # sessions are never migrated (§5: stricter than managed-state sessions,
+    # which may migrate *with* their state).
+    stateful: bool = False
+    # True: the module accepts a batch of requests.
+    batchable: bool = False
+    max_batch: int = 8
+    # Name of a preemption hook; None means not preemptable.
+    preemptable: Optional[Callable] = None
+    max_instances: int = 8
+    min_instances: int = 1
+    # {"GPU": n, "CPU": n, "MEM": gb} per instance.
+    resources: Dict[str, float] = field(default_factory=dict)
+    # Does this agent keep managed (session) state?  Set automatically when the
+    # agent code touches managedList/managedDict; may also be declared.
+    uses_managed_state: bool = False
+
+    def validate(self) -> None:
+        if self.batchable and self.uses_managed_state:
+            raise ValueError(
+                "directive conflict: managed state cannot be combined with "
+                "batchable agents (paper §5) — batching mixes sessions, making "
+                "state attribution impossible")
+        if self.min_instances > self.max_instances:
+            raise ValueError("min_instances > max_instances")
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+
+    def merged(self, **overrides) -> "Directives":
+        d = Directives(**{**self.__dict__, **overrides})
+        d.validate()
+        return d

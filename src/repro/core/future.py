@@ -1,0 +1,214 @@
+"""Futures as first-class runtime objects (paper §3.2, §4.3.1, Table 3).
+
+A NALAR future represents a long-running agent-driven computation.  Its
+*value* is immutable once materialized; its *metadata* (executor, consumers,
+priority) is mutable, which is what enables late binding and migration of
+already-routed work — the key departure from Ray/CIEL futures.
+
+Three runtime operations (Fig. 7):
+  Op 1  creation            non-blocking
+  Op 2  register consumer   non-blocking (first value access registers caller)
+  Op 3  return              ``value()`` blocks until push-based materialization
+
+Readiness is push-based: when a future resolves, the producing component
+controller immediately transfers the value to every registered consumer.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Dict, List, Optional
+
+_future_ids = itertools.count()
+
+
+class FutureState(str, Enum):
+    PENDING = "pending"        # created, not yet dispatched/running
+    SCHEDULED = "scheduled"    # routed to an executor queue
+    RUNNING = "running"
+    READY = "ready"            # value materialized
+    FAILED = "failed"
+    CANCELLED = "cancelled"
+
+
+@dataclass
+class FutureMetadata:
+    """Mutable coordination metadata (Table 3)."""
+
+    dependencies: List[str] = field(default_factory=list)   # future ids needed
+    creator: str = ""          # "agent_name:instance_id" (or "driver:<rid>")
+    executor: str = ""         # where the computation is slated to run
+    consumers: List[str] = field(default_factory=list)      # who needs the value
+    session_id: str = ""
+    request_id: str = ""
+    agent_type: str = ""       # agent/tool that computes this future
+    method: str = ""
+    priority: float = 0.0      # higher = more urgent
+    created_at: float = 0.0
+    scheduled_at: float = -1.0
+    started_at: float = -1.0
+    ready_at: float = -1.0
+    # bookkeeping for emulated execution / cost models
+    work_hint: Dict[str, Any] = field(default_factory=dict)
+
+
+class Future:
+    """Coordination handle returned by auto-generated stubs.
+
+    Driver code interacts only via ``available`` and ``value`` (§3.2 API);
+    everything else is runtime-internal.
+    """
+
+    __slots__ = (
+        "fid", "meta", "_state", "_value", "_error", "_ready_evt",
+        "_runtime", "_lock", "args", "kwargs",
+    )
+
+    def __init__(self, runtime: Any, meta: FutureMetadata,
+                 args: tuple = (), kwargs: Optional[dict] = None) -> None:
+        self.fid = f"f{next(_future_ids)}"
+        self.meta = meta
+        self._state = FutureState.PENDING
+        self._value: Any = None
+        self._error: Optional[BaseException] = None
+        self._ready_evt = threading.Event()
+        self._runtime = runtime
+        self._lock = threading.Lock()
+        self.args = args
+        self.kwargs = kwargs or {}
+
+    # ------------------------------------------------------------ public API
+    @property
+    def available(self) -> bool:
+        """True iff the value is materialized (non-blocking)."""
+        return self._state in (FutureState.READY, FutureState.FAILED)
+
+    def value(self, timeout: Optional[float] = None) -> Any:
+        """Blocking access (Op 3).  Registers the caller as a consumer."""
+        if not self._ready_evt.is_set():
+            self._runtime.register_consumer(self)
+            ok = self._runtime.kernel.wait_event(self._ready_evt, timeout)
+            if not ok:
+                raise TimeoutError(f"future {self.fid} not ready within {timeout}s")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+    # ------------------------------------------------------- runtime-internal
+    @property
+    def state(self) -> FutureState:
+        return self._state
+
+    def _set_state(self, s: FutureState) -> None:
+        self._state = s
+
+    def materialize(self, value: Any, now: float) -> None:
+        """Make the value available and push readiness to waiters.
+
+        Value immutability: a second materialization is a runtime bug.
+        """
+        with self._lock:
+            if self._state == FutureState.READY:
+                raise RuntimeError(f"future {self.fid} materialized twice")
+            self._value = value
+            self._state = FutureState.READY
+            self.meta.ready_at = now
+        self._runtime.kernel.notify(self._ready_evt)
+
+    def fail(self, error: BaseException, now: float) -> None:
+        with self._lock:
+            if self._state in (FutureState.READY, FutureState.FAILED):
+                return
+            self._error = error
+            self._state = FutureState.FAILED
+            self.meta.ready_at = now
+        self._runtime.kernel.notify(self._ready_evt)
+
+    def unresolved_deps(self, table: "FutureTable") -> List[str]:
+        out = []
+        for dep in self.meta.dependencies:
+            f = table.get(dep)
+            if f is not None and not f.available:
+                out.append(dep)
+        return out
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"Future({self.fid}, {self.meta.agent_type}.{self.meta.method}, "
+                f"{self._state.value}, exec={self.meta.executor})")
+
+
+class FutureTable:
+    """Process-wide registry mapping fid -> Future.
+
+    In the distributed deployment this is sharded across node stores; the
+    in-process table keeps one authoritative object per future while the node
+    stores hold serialized metadata mirrors (what Fig. 10 measures).
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._futures: Dict[str, Future] = {}
+
+    def add(self, f: Future) -> None:
+        with self._lock:
+            self._futures[f.fid] = f
+
+    def get(self, fid: str) -> Optional[Future]:
+        with self._lock:
+            return self._futures.get(fid)
+
+    def remove(self, fid: str) -> None:
+        with self._lock:
+            self._futures.pop(fid, None)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._futures)
+
+    def snapshot(self) -> List[Future]:
+        with self._lock:
+            return list(self._futures.values())
+
+
+def resolve_args(args: tuple, kwargs: dict) -> tuple:
+    """Replace Future objects in call args with their materialized values.
+
+    Called by the executing component controller once all dependencies are
+    ready (push-based: the values have already arrived).
+    """
+    def r(x: Any) -> Any:
+        if isinstance(x, Future):
+            assert x.available, "dependency not materialized before execution"
+            return x.value()
+        if isinstance(x, (list, tuple)):
+            t = type(x)
+            return t(r(i) for i in x)
+        if isinstance(x, dict):
+            return {k: r(v) for k, v in x.items()}
+        return x
+
+    return tuple(r(a) for a in args), {k: r(v) for k, v in kwargs.items()}
+
+
+def extract_dependencies(args: tuple, kwargs: dict) -> List[str]:
+    """Scan call arguments for Future objects (dynamic dep-graph extraction)."""
+    deps: List[str] = []
+
+    def scan(x: Any) -> None:
+        if isinstance(x, Future):
+            deps.append(x.fid)
+        elif isinstance(x, (list, tuple)):
+            for i in x:
+                scan(i)
+        elif isinstance(x, dict):
+            for v in x.values():
+                scan(v)
+
+    for a in args:
+        scan(a)
+    for v in kwargs.values():
+        scan(v)
+    return deps

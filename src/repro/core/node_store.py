@@ -1,0 +1,135 @@
+"""Node-level store: the metadata/telemetry/decision broker (paper §4.1).
+
+The prototype in the paper uses Redis per node.  This reproduction provides an
+in-process store with the same API surface (hashes, atomic check-and-set,
+pub/sub) so the two control levels never synchronise directly: component
+controllers push metrics and local observations; the global controller writes
+policy updates; consumers poll or subscribe asynchronously.
+
+The store is deliberately *not* aware of futures or agents — it moves opaque
+dicts, exactly like the Redis deployment would.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import defaultdict
+from typing import Any, Callable, Dict, List, Optional
+
+
+class NodeStore:
+    """One per node.  Thread-safe; all operations O(1)/O(fields)."""
+
+    def __init__(self, node_id: str) -> None:
+        self.node_id = node_id
+        self._lock = threading.RLock()
+        self._hashes: Dict[str, Dict[str, Any]] = defaultdict(dict)
+        self._subs: Dict[str, List[Callable[[str, Any], None]]] = defaultdict(list)
+        # monotonically increasing version per key, for cheap change detection
+        self._versions: Dict[str, int] = defaultdict(int)
+
+    # ---------------------------------------------------------------- hashes
+    def hset(self, key: str, field: str, value: Any) -> None:
+        with self._lock:
+            self._hashes[key][field] = value
+            self._versions[key] += 1
+            subs = list(self._subs.get(key, ()))
+        for fn in subs:
+            fn(field, value)
+
+    def hset_many(self, key: str, mapping: Dict[str, Any]) -> None:
+        with self._lock:
+            self._hashes[key].update(mapping)
+            self._versions[key] += 1
+            subs = list(self._subs.get(key, ()))
+        for fn in subs:
+            for f, v in mapping.items():
+                fn(f, v)
+
+    def hget(self, key: str, field: str, default: Any = None) -> Any:
+        with self._lock:
+            return self._hashes.get(key, {}).get(field, default)
+
+    def hgetall(self, key: str) -> Dict[str, Any]:
+        with self._lock:
+            return dict(self._hashes.get(key, {}))
+
+    def hdel(self, key: str, field: str) -> bool:
+        with self._lock:
+            h = self._hashes.get(key)
+            if h and field in h:
+                del h[field]
+                self._versions[key] += 1
+                return True
+            return False
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            self._hashes.pop(key, None)
+            self._versions[key] += 1
+
+    def keys(self, prefix: str = "") -> List[str]:
+        with self._lock:
+            return [k for k in self._hashes if k.startswith(prefix)]
+
+    def version(self, key: str) -> int:
+        with self._lock:
+            return self._versions.get(key, 0)
+
+    # --------------------------------------------------- atomic check-and-set
+    def cas(self, key: str, field: str, expect: Any, value: Any) -> bool:
+        """Atomically set ``field`` to ``value`` iff it currently == expect."""
+        with self._lock:
+            cur = self._hashes.get(key, {}).get(field)
+            if cur != expect:
+                return False
+            self._hashes[key][field] = value
+            self._versions[key] += 1
+            return True
+
+    def incr(self, key: str, field: str, amount: float = 1) -> float:
+        with self._lock:
+            cur = self._hashes[key].get(field, 0)
+            new = cur + amount
+            self._hashes[key][field] = new
+            self._versions[key] += 1
+            return new
+
+    # ---------------------------------------------------------------- pubsub
+    def subscribe(self, key: str, fn: Callable[[str, Any], None]) -> None:
+        with self._lock:
+            self._subs[key].append(fn)
+
+    def unsubscribe(self, key: str, fn: Callable[[str, Any], None]) -> None:
+        with self._lock:
+            if fn in self._subs.get(key, []):
+                self._subs[key].remove(fn)
+
+
+class StoreCluster:
+    """Directory of per-node stores.
+
+    In the real deployment each node's store is a local Redis and the global
+    controller reaches them over the network; here the directory hands out
+    references.  ``fetch_latency`` lets benchmarks model the network RTT the
+    paper measures in Fig. 10 ("collecting state for 1,024 futures from 64
+    nodes takes 76 ms").
+    """
+
+    def __init__(self) -> None:
+        self._stores: Dict[str, NodeStore] = {}
+        self._lock = threading.Lock()
+
+    def get(self, node_id: str) -> NodeStore:
+        with self._lock:
+            if node_id not in self._stores:
+                self._stores[node_id] = NodeStore(node_id)
+            return self._stores[node_id]
+
+    def nodes(self) -> List[str]:
+        with self._lock:
+            return list(self._stores)
+
+    def all_stores(self) -> List[NodeStore]:
+        with self._lock:
+            return list(self._stores.values())

@@ -1,0 +1,316 @@
+"""Policy interface and primitives (paper §4.2, Table 2).
+
+Policies are ordinary Python programs run by the global controller's
+single-threaded, push-based loop.  They inspect a ``ClusterView`` (metrics
+aggregated from node stores) and emit actions through the canonical
+primitives:
+
+    route(session_id, agent_type, instance)            session pinning
+    route_weighted(agent_type, instances, weights)     weighted spraying
+    set_priority(session_id, value[, agent_type])
+    migrate(session_id, src_instance, dst_instance)
+    migrate_future(fid, dst_instance)
+    kill(instance)
+    provision(agent_type, node)
+    install_schedule(agent_type, LocalSchedule)        local queue ordering
+
+Actions are *written to node stores*; component controllers consume them
+asynchronously, keeping the global controller off the critical path.
+
+The library at the bottom contains the paper's three default serving policies
+(§6.1) plus the two §6.2 case studies (SRTF ≈12 lines, LPT ≈12 lines).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from .controller_local import LocalSchedule
+
+
+# ------------------------------------------------------------- cluster view
+@dataclass
+class InstanceView:
+    instance_id: str
+    agent_type: str
+    node: str
+    qsize: int
+    busy: bool
+    busy_until: float
+    ema_service: float
+    completed: int
+    failed: int
+    alive: bool
+    waiting_sessions: List[str]
+
+    def eta(self, now: float) -> float:
+        rem = max(0.0, self.busy_until - now) if self.busy else 0.0
+        return rem + self.qsize * max(self.ema_service, 1e-3)
+
+
+@dataclass
+class ClusterView:
+    now: float
+    instances: Dict[str, InstanceView] = field(default_factory=dict)
+    # agent_type -> [instance_id]
+    by_type: Dict[str, List[str]] = field(default_factory=dict)
+    # session_id -> priority
+    session_priority: Dict[str, float] = field(default_factory=dict)
+    # future metadata mirrors collected from node stores (Fig. 10 measures this)
+    futures: Dict[str, dict] = field(default_factory=dict)
+    # node -> free resources
+    node_resources: Dict[str, Dict[str, float]] = field(default_factory=dict)
+
+    def instances_of(self, agent_type: str) -> List[InstanceView]:
+        return [self.instances[i] for i in self.by_type.get(agent_type, [])
+                if self.instances[i].alive]
+
+    def idle_instances(self, agent_type: str) -> List[InstanceView]:
+        return [iv for iv in self.instances_of(agent_type)
+                if not iv.busy and iv.qsize == 0]
+
+
+# ------------------------------------------------------------------ actions
+@dataclass
+class Action:
+    kind: str
+    payload: Dict[str, Any]
+
+
+class ActionSink:
+    """Collects primitive calls during one policy step."""
+
+    def __init__(self) -> None:
+        self.actions: List[Action] = []
+
+    def route(self, session_id: str, agent_type: str, instance: str) -> None:
+        self.actions.append(Action("route", dict(session_id=session_id,
+                                                 agent_type=agent_type,
+                                                 instance=instance)))
+
+    def route_weighted(self, agent_type: str, instances: List[str],
+                       weights: List[float]) -> None:
+        self.actions.append(Action("route_weighted", dict(
+            agent_type=agent_type, instances=instances, weights=weights)))
+
+    def set_priority(self, session_id: str, priority_value: float,
+                     agent: Optional[str] = None) -> None:
+        self.actions.append(Action("set_priority", dict(
+            session_id=session_id, value=priority_value, agent=agent)))
+
+    def migrate(self, session_id: str, src: str, dst: str) -> None:
+        self.actions.append(Action("migrate", dict(
+            session_id=session_id, src=src, dst=dst)))
+
+    def migrate_future(self, fid: str, dst: str) -> None:
+        self.actions.append(Action("migrate_future", dict(fid=fid, dst=dst)))
+
+    def kill(self, instance: str, drain_to: Optional[str] = None) -> None:
+        self.actions.append(Action("kill", dict(instance=instance,
+                                                drain_to=drain_to)))
+
+    def provision(self, agent_type: str, node: str) -> None:
+        self.actions.append(Action("provision", dict(agent_type=agent_type,
+                                                     node=node)))
+
+    def install_schedule(self, agent_type: str, policy: LocalSchedule) -> None:
+        self.actions.append(Action("install_schedule", dict(
+            agent_type=agent_type, policy=policy)))
+
+
+class Policy:
+    """Base class.  ``step`` runs once per global-controller period."""
+
+    name = "base"
+
+    def step(self, view: ClusterView, act: ActionSink) -> None:
+        raise NotImplementedError
+
+
+class PolicyChain(Policy):
+    def __init__(self, *policies: Policy) -> None:
+        self.policies = list(policies)
+        self.name = "+".join(p.name for p in policies)
+
+    def step(self, view: ClusterView, act: ActionSink) -> None:
+        for p in self.policies:
+            p.step(view, act)
+
+
+# ---------------------------------------------------------------- library
+class LoadBalancePolicy(Policy):
+    """Default policy 1 (§6.1): balance load across instances via routing.
+
+    Installs weighted routing inversely proportional to instance ETA.
+    """
+
+    name = "load_balance"
+
+    def step(self, view: ClusterView, act: ActionSink) -> None:
+        for agent_type, ids in view.by_type.items():
+            ivs = view.instances_of(agent_type)
+            if len(ivs) < 2:
+                continue
+            etas = [iv.eta(view.now) for iv in ivs]
+            weights = [1.0 / (0.05 + e) for e in etas]
+            s = sum(weights)
+            act.route_weighted(agent_type, [iv.instance_id for iv in ivs],
+                               [w / s for w in weights])
+
+
+class HoLMitigationPolicy(Policy):
+    """Default policy 2 (§6.1): migrate sessions stuck behind long work.
+
+    If a session waits in a busy instance's queue while a sibling instance is
+    idle, migrate the session there.  (Generalizes the Fig. 6 example.)
+    """
+
+    name = "hol_mitigation"
+
+    def __init__(self, wait_threshold: float = 0.5) -> None:
+        self.wait_threshold = wait_threshold
+
+    def step(self, view: ClusterView, act: ActionSink) -> None:
+        for agent_type in view.by_type:
+            ivs = view.instances_of(agent_type)
+            idle = [iv for iv in ivs if not iv.busy and iv.qsize == 0]
+            if not idle:
+                continue
+            busy = sorted((iv for iv in ivs if iv.qsize > 0),
+                          key=lambda iv: -iv.eta(view.now))
+            for iv in busy:
+                if iv.eta(view.now) < self.wait_threshold or not idle:
+                    break
+                # prefer the highest-priority waiting session
+                sessions = sorted(
+                    iv.waiting_sessions,
+                    key=lambda s: -view.session_priority.get(s, 0.0))
+                if not sessions:
+                    continue
+                dst = idle.pop(0)
+                act.migrate(sessions[0], iv.instance_id, dst.instance_id)
+
+
+class ResourceReassignmentPolicy(Policy):
+    """Default policy 3 (§6.1): move capacity from low-load to high-load types.
+
+    If an agent type's average queue exceeds ``hot`` while another type sits
+    idle (< ``cold``) and shares a resource profile, kill one cold instance
+    and provision a hot one on the freed node.
+    """
+
+    name = "resource_reassignment"
+
+    def __init__(self, hot: float = 4.0, cold: float = 0.25,
+                 cooldown: float = 5.0) -> None:
+        self.hot = hot
+        self.cold = cold
+        self.cooldown = cooldown
+        self._last_change = -1e9
+
+    def step(self, view: ClusterView, act: ActionSink) -> None:
+        if view.now - self._last_change < self.cooldown:
+            return
+        load: Dict[str, float] = {}
+        for agent_type in view.by_type:
+            ivs = view.instances_of(agent_type)
+            if ivs:
+                load[agent_type] = sum(iv.qsize for iv in ivs) / len(ivs)
+        if not load:
+            return
+        hot_type = max(load, key=load.get)
+        cold_candidates = [t for t, l in load.items()
+                           if t != hot_type and l <= self.cold
+                           and len(view.instances_of(t)) > 1]
+        if load[hot_type] < self.hot or not cold_candidates:
+            return
+        cold_type = min(cold_candidates, key=lambda t: load[t])
+        victims = sorted(view.instances_of(cold_type),
+                         key=lambda iv: iv.eta(view.now))
+        victim = victims[0]
+        survivors = [iv for iv in view.instances_of(cold_type)
+                     if iv.instance_id != victim.instance_id]
+        act.kill(victim.instance_id,
+                 drain_to=survivors[0].instance_id if survivors else None)
+        act.provision(hot_type, victim.node)
+        self._last_change = view.now
+
+
+class SRTFSchedule(LocalSchedule):
+    """Shortest-remaining-time-first local queue order (§6.2 Minimize JCT).
+
+    In call-graph workloads, later-stage calls have less remaining work, so
+    deeper futures run first; ties broken by expected service time.
+    """
+
+    name = "srtf"
+
+    def order_key(self, fut, now: float):
+        depth = fut.meta.work_hint.get("graph_depth", 0)
+        est = fut.meta.work_hint.get("est_service", 1.0)
+        return (-depth, est, fut.meta.created_at)
+
+
+class SRTFPolicy(Policy):
+    """The paper's 12-line JCT policy: install SRTF ordering everywhere."""
+
+    name = "srtf"
+
+    def step(self, view: ClusterView, act: ActionSink) -> None:
+        for agent_type in view.by_type:
+            act.install_schedule(agent_type, SRTFSchedule())
+
+
+class LPTSchedule(LocalSchedule):
+    """Longest-processing-time-first (§6.2 Control Makespan): re-entrant
+    (retried) jobs first, then longest estimated service."""
+
+    name = "lpt"
+
+    def order_key(self, fut, now: float):
+        retries = fut.meta.work_hint.get("retry", 0)
+        est = fut.meta.work_hint.get("est_service", 1.0)
+        return (-retries, -est, fut.meta.created_at)
+
+
+class LPTPolicy(Policy):
+    name = "lpt"
+
+    def step(self, view: ClusterView, act: ActionSink) -> None:
+        for agent_type in view.by_type:
+            act.install_schedule(agent_type, LPTSchedule())
+
+
+class HighPrioritySessionPolicy(Policy):
+    """Fig. 6 verbatim: boost one session and migrate it away from busy
+    instances whenever a sibling instance has an empty queue."""
+
+    name = "high_priority_session"
+
+    def __init__(self, session_id: str, agents: Optional[List[str]] = None,
+                 priority_value: float = 10.0) -> None:
+        self.session_id = session_id
+        self.agents = agents
+        self.priority_value = priority_value
+        self._boosted = False
+
+    def step(self, view: ClusterView, act: ActionSink) -> None:
+        if not self._boosted:
+            act.set_priority(self.session_id, self.priority_value)
+            self._boosted = True
+        for agent_type in (self.agents or list(view.by_type)):
+            for iv in view.instances_of(agent_type):
+                if self.session_id in iv.waiting_sessions and iv.busy:
+                    for other in view.instances_of(agent_type):
+                        if other.instance_id != iv.instance_id and \
+                                other.qsize == 0 and not other.busy:
+                            act.migrate(self.session_id, iv.instance_id,
+                                        other.instance_id)
+                            return
+
+
+def default_policies() -> PolicyChain:
+    """The three §6.1 defaults, < 100 lines cumulatively."""
+    return PolicyChain(LoadBalancePolicy(), HoLMitigationPolicy(),
+                       ResourceReassignmentPolicy())

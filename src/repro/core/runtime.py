@@ -1,0 +1,442 @@
+"""The NALAR runtime: deployment, routing, and the glue between layers.
+
+``NalarRuntime`` owns the kernel, node stores, future table, session registry,
+state layer, KV registry, telemetry, agent instances and their controllers,
+and the global controller.  ``deployment`` (bottom) is the thin user-facing
+entry mirroring the paper's ``deployment.main(...)``.
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+from typing import Any, Callable, Dict, List, Optional
+
+from .clock import Kernel, RealTimeKernel, SimKernel
+from .controller_global import GlobalController
+from .controller_local import ComponentController
+from .directives import Directives
+from .executor import AgentInstance
+from .future import Future, FutureTable
+from .kv_registry import KVRegistry
+from .node_store import StoreCluster
+from .policy import Policy, default_policies
+from .session import SessionRegistry, clear_context, get_context, set_context
+from .state import SessionStateStore
+from .stubs import AgentSpec, Stub
+from .telemetry import Telemetry
+
+_current_runtime: Optional["NalarRuntime"] = None
+_rt_lock = threading.Lock()
+
+
+def current_runtime() -> Optional["NalarRuntime"]:
+    return _current_runtime
+
+
+def _set_current(rt: Optional["NalarRuntime"]) -> None:
+    global _current_runtime
+    with _rt_lock:
+        _current_runtime = rt
+
+
+class Router:
+    """Routing decisions for newly created futures.
+
+    Precedence: session pin (stateful / route primitive) → managed-state
+    locality → weighted table (load-balance policy) → least-ETA default.
+    """
+
+    def __init__(self, runtime: "NalarRuntime") -> None:
+        self.rt = runtime
+        self._pins: Dict[tuple, str] = {}        # (sid, agent_type) -> iid
+        self._weights: Dict[str, tuple] = {}     # agent_type -> (iids, cum_w)
+        self._rng = random.Random(0xA11CE)
+        # default-routing capability: "least_eta" (NALAR's native policy-1
+        # load balancing), "least_qlen" (queue-length only — blind to
+        # in-flight service time, the HoL trap), "round_robin"
+        self.mode = "least_eta"
+        self._rr: Dict[str, int] = {}
+
+    def pin(self, session_id: str, agent_type: str, instance: str) -> None:
+        self._pins[(session_id, agent_type)] = instance
+
+    def unpin(self, session_id: str, agent_type: str) -> None:
+        self._pins.pop((session_id, agent_type), None)
+
+    def set_weights(self, agent_type: str, instances: List[str],
+                    weights: List[float]) -> None:
+        cum, s = [], 0.0
+        for w in weights:
+            s += w
+            cum.append(s)
+        self._weights[agent_type] = (list(instances), cum)
+
+    def route(self, fut: Future) -> Optional[AgentInstance]:
+        at = fut.meta.agent_type
+        sid = fut.meta.session_id
+        live = self.rt.live_instances(at)
+        if not live:
+            return None
+        spec = self.rt.spec_of(at)
+        # 1. explicit/stateful pin
+        pin = self._pins.get((sid, at))
+        if pin is not None:
+            inst = self.rt.instance(pin)
+            if inst is not None and inst.alive:
+                return inst
+            self.unpin(sid, at)
+        if spec.directives.stateful and sid:
+            inst = min(live, key=lambda i: i.load_score(self.rt.kernel.now()))
+            self.pin(sid, at, inst.instance_id)  # sticky forever (§5)
+            return inst
+        # 2a. K,V-cache locality: route the session to the instance holding
+        # its cache (§4.3.2 — "scheduling is rendered sticky").  NALAR's HoL
+        # policy relieves this by *migrating the cache*, after which the
+        # registry points follow-ups at the new instance.
+        if spec.directives.uses_managed_state and sid:
+            info = self.rt.kv_registry.lookup(sid)
+            if info is not None:
+                inst = self.rt.instance(info.instance_id)
+                if inst is not None and inst.alive and inst.agent_type == at:
+                    return inst
+        # 2b. managed-state locality: prefer the node holding session state
+        if spec.directives.uses_managed_state and sid:
+            names = self.rt.state_store.session_state_names(sid, at)
+            if names:
+                node = self.rt.state_store.placement_of(sid, at, names[0])
+                local = [i for i in live if i.node_id == node]
+                if local:
+                    return min(local, key=lambda i: i.load_score(self.rt.kernel.now()))
+        # 3. weighted table installed by the global policy
+        wt = self._weights.get(at)
+        if wt is not None:
+            iids, cum = wt
+            valid = [(i, c) for i, c in zip(iids, cum)
+                     if self.rt.instance(i) is not None and self.rt.instance(i).alive]
+            if valid:
+                r = self._rng.random() * valid[-1][1]
+                for iid, c in valid:
+                    if r <= c:
+                        inst = self.rt.instance(iid)
+                        if inst is not None:
+                            return inst
+        # 4. default routing, per capability mode
+        if self.mode == "round_robin":
+            idx = self._rr.get(at, 0)
+            self._rr[at] = idx + 1
+            return live[idx % len(live)]
+        if self.mode == "least_qlen":
+            return min(live, key=lambda i: (i.qsize(), i.instance_id))
+        return min(live, key=lambda i: i.load_score(self.rt.kernel.now()))
+
+
+class NalarRuntime:
+    def __init__(self, *, simulate: bool = True,
+                 nodes: Optional[Dict[str, Dict[str, float]]] = None,
+                 policy: Optional[Policy] = None,
+                 control_interval: float = 0.25,
+                 net_latency_same_node: float = 5e-5,
+                 net_latency_cross_node: float = 5e-4,
+                 state_bandwidth: float = 1e9,
+                 seed: int = 0) -> None:
+        self.kernel: Kernel = SimKernel() if simulate else RealTimeKernel()
+        self.stores = StoreCluster()
+        self.futures = FutureTable()
+        self.sessions = SessionRegistry()
+        self.telemetry = Telemetry()
+        self.kv_registry = KVRegistry()
+        self.state_store = SessionStateStore(self.stores)
+        self.router = Router(self)
+        self.rng = random.Random(seed)
+        self._net_same = net_latency_same_node
+        self._net_cross = net_latency_cross_node
+        self._state_bw = state_bandwidth
+        # cluster resources
+        self.nodes: Dict[str, Dict[str, float]] = dict(
+            nodes or {"n0": {"GPU": 8, "CPU": 64}})
+        self._used: Dict[str, Dict[str, float]] = {
+            n: {k: 0.0 for k in caps} for n, caps in self.nodes.items()}
+        for n in self.nodes:
+            self.stores.get(n)  # materialize node stores
+        # agents
+        self._specs: Dict[str, AgentSpec] = {}
+        self._stubs: Dict[str, Stub] = {}
+        self._instances: Dict[str, AgentInstance] = {}
+        self._controllers: Dict[str, ComponentController] = {}
+        self._instance_counter: Dict[str, int] = {}
+        self._agent_ctx = threading.local()
+        self.global_controller = GlobalController(
+            self, policy or default_policies(), interval=control_interval)
+        _set_current(self)
+
+    # ---------------------------------------------------------- agent mgmt
+    def register_agent(self, spec: AgentSpec,
+                       nodes: Optional[List[str]] = None,
+                       instances: Optional[int] = None) -> Stub:
+        spec.validate()
+        self._specs[spec.name] = spec
+        stub = Stub(self, spec)
+        self._stubs[spec.name] = stub
+        n = instances if instances is not None else spec.directives.min_instances
+        node_list = nodes or list(self.nodes)
+        for i in range(n):
+            self.provision_instance(spec.name, node_list[i % len(node_list)])
+        return stub
+
+    def apply_directives(self, agent_type: str, overrides: Dict[str, Any]) -> None:
+        spec = self._specs[agent_type]
+        spec.directives = spec.directives.merged(**overrides)
+
+    def spec_of(self, agent_type: str) -> AgentSpec:
+        return self._specs[agent_type]
+
+    def stub(self, agent_type: str) -> Stub:
+        return self._stubs[agent_type]
+
+    def provision_instance(self, agent_type: str, node: str) -> Optional[str]:
+        spec = self._specs[agent_type]
+        live = self.live_instances(agent_type)
+        if len(live) >= spec.directives.max_instances:
+            return None
+        if not self._reserve(node, spec.directives.resources):
+            return None
+        idx = self._instance_counter.get(agent_type, 0)
+        self._instance_counter[agent_type] = idx + 1
+        iid = f"{agent_type}:{node}/{idx}"
+        inst = AgentInstance(agent_type, iid, node, spec.methods,
+                             spec.directives)
+        self._instances[iid] = inst
+        self._controllers[iid] = ComponentController(self, inst)
+        return iid
+
+    def kill_instance(self, instance_id: str,
+                      drain_to: Optional[str] = None) -> None:
+        inst = self._instances.get(instance_id)
+        if inst is None or not inst.alive:
+            return
+        spec = self._specs[inst.agent_type]
+        live = self.live_instances(inst.agent_type)
+        if len(live) <= spec.directives.min_instances:
+            return  # never go below the floor (Table 1 min_instances)
+        ctrl = self._controllers[instance_id]
+        ctrl.shutdown(drain_to=drain_to)
+        self._release(inst.node_id, spec.directives.resources)
+
+    def instance(self, instance_id: str) -> Optional[AgentInstance]:
+        return self._instances.get(instance_id)
+
+    def controller_of(self, instance_id: str) -> Optional[ComponentController]:
+        return self._controllers.get(instance_id)
+
+    def live_instances(self, agent_type: str) -> List[AgentInstance]:
+        return [i for i in self._instances.values()
+                if i.agent_type == agent_type and i.alive]
+
+    def instances_of_type(self, agent_type: str) -> List[str]:
+        return [i.instance_id for i in self.live_instances(agent_type)]
+
+    def node_of_instance(self, caller: str) -> str:
+        inst = self._instances.get(caller)
+        if inst is not None:
+            return inst.node_id
+        return next(iter(self.nodes))  # drivers live on the entry node
+
+    # ------------------------------------------------------------ resources
+    def _reserve(self, node: str, res: Dict[str, float]) -> bool:
+        caps = self.nodes.get(node)
+        if caps is None:
+            return False
+        used = self._used[node]
+        for k, v in res.items():
+            if used.get(k, 0.0) + v > caps.get(k, 0.0):
+                return False
+        for k, v in res.items():
+            used[k] = used.get(k, 0.0) + v
+        return True
+
+    def _release(self, node: str, res: Dict[str, float]) -> None:
+        used = self._used.get(node, {})
+        for k, v in res.items():
+            used[k] = max(0.0, used.get(k, 0.0) - v)
+
+    def free_resources(self) -> Dict[str, Dict[str, float]]:
+        return {n: {k: caps[k] - self._used[n].get(k, 0.0) for k in caps}
+                for n, caps in self.nodes.items()}
+
+    # --------------------------------------------------------------- network
+    def net_latency(self, src_node: str, dst_node: str) -> float:
+        return self._net_same if src_node == dst_node else self._net_cross
+
+    def state_transfer_delay(self, src_node: str, dst_node: str,
+                             nbytes: int) -> float:
+        if src_node == dst_node:
+            return self._net_same
+        return self._net_cross + nbytes / self._state_bw
+
+    # -------------------------------------------------------------- dispatch
+    def dispatch(self, fut: Future) -> None:
+        self.mirror_future(fut)
+        inst = self.router.route(fut)
+        if inst is None:
+            fut.fail(RuntimeError(
+                f"no live instance of agent {fut.meta.agent_type!r}"),
+                self.kernel.now())
+            return
+        ctrl = self._controllers[inst.instance_id]
+        src_node = self.node_of_instance(fut.meta.creator)
+        delay = self.net_latency(src_node, inst.node_id)
+        self.kernel.schedule(delay, lambda: ctrl.submit(fut), tag="dispatch")
+
+    def register_consumer(self, fut: Future) -> None:
+        """Driver/agent blocked on ``fut.value()`` — record consumership."""
+        _, _, caller = get_context()
+        if caller not in fut.meta.consumers:
+            fut.meta.consumers.append(caller)
+            self.mirror_future(fut)
+
+    def register_dep_consumer(self, dep_fid: str,
+                              ctrl: ComponentController) -> None:
+        dep = self.futures.get(dep_fid)
+        if dep is None:
+            ctrl.on_dep_ready(dep_fid)
+            return
+        iid = ctrl.inst.instance_id
+        if iid not in dep.meta.consumers:
+            dep.meta.consumers.append(iid)
+        if dep.available:
+            # value already materialized: push immediately
+            prod = self._instances.get(dep.meta.executor)
+            src = prod.node_id if prod else ctrl.inst.node_id
+            delay = self.net_latency(src, ctrl.inst.node_id)
+            self.kernel.schedule(delay, lambda: ctrl.on_dep_ready(dep_fid))
+
+    def mirror_future(self, fut: Future) -> None:
+        """Write the metadata mirror into the executor/creator node store."""
+        node = self.node_of_instance(fut.meta.executor or fut.meta.creator)
+        self.stores.get(node).hset_many(f"future:{fut.fid}", {
+            "state": fut.state.value,
+            "agent_type": fut.meta.agent_type,
+            "session": fut.meta.session_id,
+            "executor": fut.meta.executor,
+            "consumers": list(fut.meta.consumers),
+            "dependencies": list(fut.meta.dependencies),
+            "priority": fut.meta.priority,
+            "created_at": fut.meta.created_at,
+        })
+
+    def reprioritize_session(self, session_id: str) -> None:
+        sess = self.sessions.get(session_id)
+        if sess is None:
+            return
+        for fut in self.futures.snapshot():
+            if fut.meta.session_id == session_id and not fut.available:
+                fut.meta.priority = sess.priority_for(fut.meta.agent_type)
+
+    # ------------------------------------------------- managed-state support
+    def migrate_session_state(self, session_id: str, agent_type: str,
+                              dst_node: str) -> int:
+        if not session_id:
+            return 0
+        return self.state_store.migrate_session(session_id, agent_type,
+                                                dst_node)
+
+    def mark_uses_managed_state(self, agent_type: str) -> None:
+        spec = self._specs.get(agent_type)
+        if spec is not None and not spec.directives.uses_managed_state:
+            spec.directives.uses_managed_state = True
+            spec.directives.validate()
+
+    def enter_agent_context(self, fut: Future, inst: AgentInstance) -> None:
+        prev = get_context()
+        stack = getattr(self._agent_ctx, "stack", None)
+        if stack is None:
+            stack = []
+            self._agent_ctx.stack = stack
+        stack.append(prev)
+        set_context(fut.meta.session_id, fut.meta.request_id,
+                    inst.instance_id)
+
+    def exit_agent_context(self) -> None:
+        stack = getattr(self._agent_ctx, "stack", None)
+        if stack:
+            sid, rid, caller = stack.pop()
+            set_context(sid, rid, caller)
+        else:
+            clear_context()
+
+    # --------------------------------------------------------------- drivers
+    def submit_request(self, driver_fn: Callable[..., Any], *args,
+                       session: Optional[str] = None, priority: float = 0.0,
+                       delay: float = 0.0,
+                       on_done: Optional[Callable[[Any, Optional[BaseException]], None]] = None,
+                       **kwargs) -> str:
+        """Run a workflow driver as a request (optionally after ``delay``)."""
+        if session is None:
+            session = self.sessions.new_session(self.kernel.now(),
+                                                priority).session_id
+        rid = self.sessions.new_request(session)
+
+        def launch() -> None:
+            self.telemetry.start_request(rid, session, self.kernel.now())
+
+            def body() -> None:
+                set_context(session, rid, f"driver:{rid}")
+                err: Optional[BaseException] = None
+                out: Any = None
+                try:
+                    out = driver_fn(*args, **kwargs)
+                except BaseException as e:  # noqa: BLE001 — §5 fault reporting
+                    err = e
+                finally:
+                    clear_context()
+                    self.telemetry.end_request(rid, self.kernel.now(),
+                                               failed=err is not None)
+                if on_done is not None:
+                    on_done(out, err)
+
+            self.kernel.spawn_driver(body, name=f"request:{rid}")
+
+        if delay > 0:
+            self.kernel.schedule(delay, launch, tag="request-arrival")
+        else:
+            launch()
+        return rid
+
+    # ------------------------------------------------------------------- run
+    def start(self) -> None:
+        self.global_controller.start()
+
+    def run(self, max_time: float = float("inf")) -> float:
+        t = self.kernel.run(max_time=max_time)
+        self.global_controller.stop()
+        return t
+
+    def shutdown(self) -> None:
+        self.global_controller.stop()
+        if current_runtime() is self:
+            _set_current(None)
+
+
+class deployment:
+    """Paper-style entry: ``deployment.main(driver, *args)`` builds a default
+    runtime (if none is active), runs one request to completion, returns the
+    result."""
+
+    @staticmethod
+    def main(driver_fn: Callable[..., Any], *args,
+             runtime: Optional[NalarRuntime] = None, **kwargs) -> Any:
+        rt = runtime or current_runtime()
+        if rt is None:
+            raise RuntimeError("no active NalarRuntime; construct one first")
+        result: Dict[str, Any] = {}
+
+        def done(out, err):
+            result["out"], result["err"] = out, err
+
+        rt.start()
+        rt.submit_request(driver_fn, *args, on_done=done, **kwargs)
+        rt.run()
+        if result.get("err") is not None:
+            raise result["err"]
+        return result.get("out")

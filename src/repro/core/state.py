@@ -1,0 +1,242 @@
+"""Managed state layer (paper §3.3, §4.3.2).
+
+``managedList`` / ``managedDict`` look like ordinary Python containers but are
+runtime-tracked entities with user-session-based identities.  Logical state is
+indexed by (session_id, agent_type, name) in the node store; the physical copy
+lives wherever the owning agent instance runs and moves with session
+migration.  To the developer the state appears local and stable.
+
+Design notes mirroring the paper:
+* the local controller always knows which session a request belongs to, so
+  state access needs no explicit session plumbing (the session id comes from
+  the thread-local execution context);
+* when an agent begins serving a request, the controller consults the node
+  store and reconstructs the managed containers ("materialization");
+* migration transfers the serialized state between node stores and updates
+  the placement index.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+from .session import get_context
+
+
+class SessionStateStore:
+    """Authoritative registry of managed state, layered on node stores.
+
+    Keys: (session_id, agent_type, name) -> (node_id, payload).
+    The payload is the *logical* value; placement (node_id) is runtime-owned.
+    """
+
+    def __init__(self, store_cluster) -> None:
+        self._cluster = store_cluster
+        self._lock = threading.RLock()
+        # (sid, agent_type, name) -> node_id  (placement index)
+        self._placement: Dict[Tuple[str, str, str], str] = {}
+
+    @staticmethod
+    def _key(sid: str, agent_type: str, name: str) -> str:
+        return f"state:{sid}:{agent_type}:{name}"
+
+    def load(self, sid: str, agent_type: str, name: str, node_id: str,
+             default: Any) -> Any:
+        with self._lock:
+            placed = self._placement.get((sid, agent_type, name))
+            if placed is None:
+                self._placement[(sid, agent_type, name)] = node_id
+                store = self._cluster.get(node_id)
+                store.hset(self._key(sid, agent_type, name), "value", default)
+                return default
+            store = self._cluster.get(placed)
+            v = store.hget(self._key(sid, agent_type, name), "value")
+            if placed != node_id:
+                # State lives elsewhere: materialize locally (the runtime moved
+                # the request here, so the state follows — §4.3.2).
+                self.migrate(sid, agent_type, name, node_id)
+            return v if v is not None else default
+
+    def save(self, sid: str, agent_type: str, name: str, value: Any) -> None:
+        with self._lock:
+            node_id = self._placement.get((sid, agent_type, name))
+            if node_id is None:
+                return
+            self._cluster.get(node_id).hset(
+                self._key(sid, agent_type, name), "value", value)
+
+    def migrate(self, sid: str, agent_type: str, name: str, dst_node: str) -> int:
+        """Move one state object; returns payload size estimate (bytes-ish)."""
+        with self._lock:
+            src_node = self._placement.get((sid, agent_type, name))
+            if src_node is None or src_node == dst_node:
+                self._placement[(sid, agent_type, name)] = dst_node
+                return 0
+            key = self._key(sid, agent_type, name)
+            src = self._cluster.get(src_node)
+            val = src.hget(key, "value")
+            src.delete(key)
+            self._cluster.get(dst_node).hset(key, "value", val)
+            self._placement[(sid, agent_type, name)] = dst_node
+            return _sizeof(val)
+
+    def migrate_session(self, sid: str, agent_type: str, dst_node: str) -> int:
+        """Move all state of (session, agent) to dst.  Returns total bytes."""
+        with self._lock:
+            keys = [k for k in self._placement if k[0] == sid and k[1] == agent_type]
+        return sum(self.migrate(sid, agent_type, name, dst_node)
+                   for (_, _, name) in keys)
+
+    def session_state_names(self, sid: str, agent_type: str) -> List[str]:
+        with self._lock:
+            return [n for (s, a, n) in self._placement
+                    if s == sid and a == agent_type]
+
+    def placement_of(self, sid: str, agent_type: str, name: str) -> Optional[str]:
+        with self._lock:
+            return self._placement.get((sid, agent_type, name))
+
+    def drop_session(self, sid: str) -> None:
+        with self._lock:
+            keys = [k for k in self._placement if k[0] == sid]
+            for k in keys:
+                node = self._placement.pop(k)
+                self._cluster.get(node).delete(self._key(*k))
+
+
+def _sizeof(v: Any) -> int:
+    try:
+        import sys
+        if isinstance(v, (list, tuple)):
+            return sum(_sizeof(i) for i in v) + 56
+        if isinstance(v, dict):
+            return sum(_sizeof(k) + _sizeof(x) for k, x in v.items()) + 64
+        return sys.getsizeof(v)
+    except Exception:
+        return 64
+
+
+# --------------------------------------------------------------------------
+# Developer-facing containers.  They bind lazily: the first access inside an
+# agent resolves (session, agent_type, node) from the execution context that
+# the component controller installed before invoking user code.
+# --------------------------------------------------------------------------
+class _ManagedBase:
+    def __init__(self, name: str, runtime=None) -> None:
+        self._name = name
+        self._runtime = runtime  # bound at first access if None
+
+    def _bind(self) -> Tuple[SessionStateStore, str, str, str]:
+        from .runtime import current_runtime
+        rt = self._runtime or current_runtime()
+        if rt is None:
+            raise RuntimeError(
+                "managed state used outside a NALAR runtime; run the workflow "
+                "via deployment.main() or nalar.testing.local_runtime()")
+        sid, _rid, caller = get_context()
+        agent_type = caller.split(":")[0]
+        node = rt.node_of_instance(caller)
+        rt.mark_uses_managed_state(agent_type)
+        return rt.state_store, sid or "_global", agent_type, node
+
+
+class ManagedList(_ManagedBase):
+    """Drop-in list with session-scoped identity and runtime-managed placement."""
+
+    def _get(self) -> list:
+        store, sid, at, node = self._bind()
+        return store.load(sid, at, self._name, node, default=[])
+
+    def _put(self, v: list) -> None:
+        store, sid, at, _ = self._bind()
+        store.save(sid, at, self._name, v)
+
+    def append(self, item: Any) -> None:
+        v = self._get(); v.append(item); self._put(v)
+
+    def extend(self, items) -> None:
+        v = self._get(); v.extend(items); self._put(v)
+
+    def __getitem__(self, i):
+        return self._get()[i]
+
+    def __setitem__(self, i, val) -> None:
+        v = self._get(); v[i] = val; self._put(v)
+
+    def __len__(self) -> int:
+        return len(self._get())
+
+    def __iter__(self) -> Iterator:
+        return iter(self._get())
+
+    def __contains__(self, item) -> bool:
+        return item in self._get()
+
+    def clear(self) -> None:
+        self._put([])
+
+    def snapshot(self) -> list:
+        return list(self._get())
+
+
+class ManagedDict(_ManagedBase):
+    """Drop-in dict with session-scoped identity and runtime-managed placement."""
+
+    def _get(self) -> dict:
+        store, sid, at, node = self._bind()
+        return store.load(sid, at, self._name, node, default={})
+
+    def _put(self, v: dict) -> None:
+        store, sid, at, _ = self._bind()
+        store.save(sid, at, self._name, v)
+
+    def __getitem__(self, k):
+        v = self._get()
+        if k not in v:
+            raise KeyError(k)
+        return v[k]
+
+    def __setitem__(self, k, val) -> None:
+        v = self._get(); v[k] = val; self._put(v)
+
+    def __delitem__(self, k) -> None:
+        v = self._get(); del v[k]; self._put(v)
+
+    def get(self, k, default=None):
+        return self._get().get(k, default)
+
+    def setdefault(self, k, default=None):
+        v = self._get()
+        out = v.setdefault(k, default)
+        self._put(v)
+        return out
+
+    def __len__(self) -> int:
+        return len(self._get())
+
+    def __iter__(self) -> Iterator:
+        return iter(self._get())
+
+    def __contains__(self, k) -> bool:
+        return k in self._get()
+
+    def items(self):
+        return self._get().items()
+
+    def keys(self):
+        return self._get().keys()
+
+    def values(self):
+        return self._get().values()
+
+    def clear(self) -> None:
+        self._put({})
+
+    def snapshot(self) -> dict:
+        return dict(self._get())
+
+
+# aliases matching the paper's naming
+managedList = ManagedList
+managedDict = ManagedDict

@@ -1,0 +1,126 @@
+"""Per-session/per-request telemetry and introspective debugging (paper §5).
+
+NALAR has complete visibility into inter-agent calls, so it keeps detailed
+per-session logs: time in each stage, agents/tools touched per node, failures
+with workflow path + traceback.  The benchmark harness reads request records
+to compute the latency distributions of Fig. 9.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class FutureRecord:
+    fid: str
+    agent_type: str
+    method: str
+    session_id: str
+    request_id: str
+    created_at: float
+    scheduled_at: float
+    started_at: float
+    ready_at: float
+    executor: str
+    failed: bool
+
+    @property
+    def queue_time(self) -> float:
+        return max(0.0, self.started_at - self.created_at)
+
+    @property
+    def service_time(self) -> float:
+        return max(0.0, self.ready_at - self.started_at)
+
+
+@dataclass
+class RequestRecord:
+    request_id: str
+    session_id: str
+    submitted_at: float
+    finished_at: float = -1.0
+    failed: bool = False
+    stages: List[FutureRecord] = field(default_factory=list)
+
+    @property
+    def latency(self) -> float:
+        return self.finished_at - self.submitted_at if self.finished_at >= 0 else -1.0
+
+
+@dataclass
+class MigrationRecord:
+    fid: str
+    src: str
+    dst: str
+    at: float
+
+
+class Telemetry:
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.requests: Dict[str, RequestRecord] = {}
+        self.migrations: List[MigrationRecord] = []
+        self.futures_done = 0
+
+    def start_request(self, request_id: str, session_id: str, now: float) -> None:
+        with self._lock:
+            self.requests[request_id] = RequestRecord(request_id, session_id, now)
+
+    def end_request(self, request_id: str, now: float, failed: bool = False) -> None:
+        with self._lock:
+            r = self.requests.get(request_id)
+            if r is not None:
+                r.finished_at = now
+                r.failed = failed
+
+    def on_future_done(self, fut, inst, now: float) -> None:
+        rec = FutureRecord(
+            fid=fut.fid, agent_type=fut.meta.agent_type, method=fut.meta.method,
+            session_id=fut.meta.session_id, request_id=fut.meta.request_id,
+            created_at=fut.meta.created_at, scheduled_at=fut.meta.scheduled_at,
+            started_at=fut.meta.started_at, ready_at=now,
+            executor=fut.meta.executor, failed=fut.state.value == "failed")
+        with self._lock:
+            self.futures_done += 1
+            r = self.requests.get(fut.meta.request_id)
+            if r is not None:
+                r.stages.append(rec)
+
+    def on_migration(self, fut, src: str, dst: str, now: float) -> None:
+        with self._lock:
+            self.migrations.append(MigrationRecord(fut.fid, src, dst, now))
+
+    # ------------------------------------------------------------- analysis
+    def completed_latencies(self) -> List[float]:
+        with self._lock:
+            return sorted(r.latency for r in self.requests.values()
+                          if r.finished_at >= 0 and not r.failed)
+
+    def percentile(self, p: float) -> float:
+        lat = self.completed_latencies()
+        if not lat:
+            return float("nan")
+        idx = min(len(lat) - 1, int(round(p / 100.0 * (len(lat) - 1))))
+        return lat[idx]
+
+    def summary(self) -> Dict[str, float]:
+        lat = self.completed_latencies()
+        if not lat:
+            return {"n": 0}
+        return {
+            "n": len(lat),
+            "avg": sum(lat) / len(lat),
+            "p50": self.percentile(50),
+            "p95": self.percentile(95),
+            "p99": self.percentile(99),
+            "max": lat[-1],
+            "migrations": len(self.migrations),
+        }
+
+    def trace(self, request_id: str) -> Optional[RequestRecord]:
+        """Workflow path for one request — the §5 debuggability hook."""
+        with self._lock:
+            return self.requests.get(request_id)

@@ -1,0 +1,53 @@
+"""Activation-sharding context: lets launchers install
+``with_sharding_constraint`` hints on named activations without the model
+code importing mesh state.
+
+Model code calls ``constrain(x, "logits")``; outside a mesh context (CPU
+tests) it's a no-op.  The dry-run/launchers install NamedShardings keyed by
+activation kind.  Constraints are rank-checked so one kind can safely cover
+call sites with different ranks (only matching ranks are applied).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Optional
+
+_state = threading.local()
+
+
+def set_activation_shardings(mapping: Optional[Dict[str, Any]]) -> None:
+    _state.mapping = mapping or {}
+
+
+def get_activation_shardings() -> Dict[str, Any]:
+    return getattr(_state, "mapping", {})
+
+
+def constrain(x, kind: str):
+    import jax
+    sh = get_activation_shardings().get(kind)
+    if sh is None:
+        return x
+    spec = sh.spec if hasattr(sh, "spec") else sh
+    if len(spec) != x.ndim:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, sh)
+    except (ValueError, TypeError):   # no mesh context
+        return x
+
+
+class activation_shardings:
+    """Context manager form."""
+
+    def __init__(self, mapping: Dict[str, Any]) -> None:
+        self.mapping = mapping
+
+    def __enter__(self):
+        self._prev = get_activation_shardings()
+        set_activation_shardings(self.mapping)
+        return self
+
+    def __exit__(self, *exc):
+        set_activation_shardings(self._prev)

@@ -1,0 +1,269 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs per family.
+
+Mesh axes (launch/mesh.py):
+    single-pod : ("data", "model") = (16, 16)          256 chips
+    multi-pod  : ("pod", "data", "model") = (2,16,16)  512 chips
+
+Strategy (DESIGN.md §5):
+  * training  — Megatron tensor parallelism over "model" (attention heads,
+    FFN hidden, expert FFN width) + FSDP over "data" on a second large dim
+    (the optimizer state of 15B+ models must not be replicated); batch over
+    ("pod","data").
+  * serving   — tensor parallelism over "model"; weights replicated over
+    "data" (no optimizer state); batch over ("pod","data"); MoE experts
+    over "data" with expert-FFN width over "model".
+  * decode    — KV cache: batch over ("pod","data") when divisible, KV
+    length over "model" (flash-decoding style partial softmax); for
+    global_batch=1 long-context, KV length additionally shards over "data"
+    (context parallelism — a beyond-paper optimization, EXPERIMENTS.md §Perf).
+
+Every rule degrades to replication when a dimension isn't divisible by the
+axis size (e.g. 4-8 KV heads never shard over model=16; granite's vocab
+49155 is odd, so its embedding shards d_model instead).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import InputShape, ModelConfig
+
+
+def axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, (tuple, list)):
+        out = 1
+        for n in name:
+            out *= axis_size(mesh, n)
+        return out
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def _div(dim: int, mesh: Mesh, name) -> bool:
+    n = axis_size(mesh, name)
+    return n > 1 and dim % n == 0 and dim >= n
+
+
+class ShardingRules:
+    """Builds PartitionSpec trees for a (cfg, mesh, mode)."""
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh, mode: str = "train") -> None:
+        assert mode in ("train", "serve")
+        self.cfg = cfg
+        self.mesh = mesh
+        self.mode = mode
+        self.batch = batch_axes(mesh)
+
+    # ------------------------------------------------------------ helpers
+    def _fsdp(self, dim: int):
+        """Secondary (FSDP) axis for training; None when serving."""
+        if self.mode == "train" and _div(dim, self.mesh, "data"):
+            return "data"
+        return None
+
+    def _model(self, dim: int):
+        return "model" if _div(dim, self.mesh, "model") else None
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    # ------------------------------------------------------- param specs
+    def param_spec(self, path: Tuple[str, ...], shape: Tuple[int, ...]) -> P:
+        """Rule table keyed on the leaf name (+ context)."""
+        name = path[-1]
+        stacked = len(path) >= 2 and path[0] in (
+            "layers", "rec_layers", "att_layers", "enc_layers", "dec_layers")
+        L = (None,) if stacked else ()
+        d = shape[len(L):]  # dims after the layer-stack dim
+
+        def spec(*axes) -> P:
+            return P(*L, *axes)
+
+        # ---- embeddings ----
+        # NOTE: never FSDP the d_model dim of embedding tables.  The unembed
+        # contraction x[...,d] @ W[v,d] with d sharded over "data" (which
+        # also shards the batch) forces GSPMD to materialize replicated
+        # [B,S,V] logits — measured as 3 x ~40 GB per-device collectives on
+        # qwen3-0.6b train_4k (EXPERIMENTS.md §Perf iteration 1).
+        if path[0] == "embed":
+            if name == "tok":     # [V, D]
+                if _div(shape[0], self.mesh, "model"):
+                    return P("model", None)
+                return P(None, self._model(shape[1]))
+            if name == "out":     # [D, V]
+                if _div(shape[1], self.mesh, "model"):
+                    return P(None, "model")
+                return P(self._model(shape[0]), None)
+        if name == "enc_pos":
+            return P(None, None)
+
+        # ---- attention ----
+        if len(path) >= 2 and path[-2] in ("attn", "xattn"):
+            if name == "wq":      # [D, H, Dh]
+                return spec(self._fsdp(d[0]), self._model(d[1]), None)
+            if name in ("wk", "wv"):
+                if _div(d[1], self.mesh, "model"):
+                    return spec(self._fsdp(d[0]), "model", None)
+                return spec(self._fsdp(d[0]), None, None)
+            if name == "wo":      # [H, Dh, D]
+                return spec(self._model(d[0]), None, self._fsdp(d[2]))
+            if name in ("q_norm", "k_norm"):
+                return spec(None)
+
+        # ---- dense MLP ----
+        if name in ("w_gate", "w_up") and len(d) == 2:   # [D, F]
+            return spec(self._fsdp(d[0]), self._model(d[1]))
+        if name == "w_down" and len(d) == 2:             # [F, D]
+            return spec(self._model(d[0]), self._fsdp(d[1]))
+
+        # ---- MoE experts ----
+        # Experts shard over "model"; tokens/groups shard over "data", so
+        # dispatch/combine einsums stay shard-local (each data shard routes
+        # its own token groups to its model-shard experts).  Sharding E over
+        # "data" instead collides with the token sharding and GSPMD
+        # all-reduces the full [E,C,D] expert buffer per group x layer —
+        # measured at 7.8e14 B/device on qwen3-moe prefill_32k (§Perf iter
+        # 2).  Training adds FSDP on the expert width for optimizer memory.
+        if name == "router":                              # [D, E]
+            return spec(None, None)
+        if name in ("w_gate", "w_up") and len(d) == 3:    # [E, D, F]
+            e_ax = self._model(d[0])
+            return spec(e_ax, None, self._fsdp(d[2]))
+        if name == "w_down" and len(d) == 3:              # [E, F, D]
+            e_ax = self._model(d[0])
+            return spec(e_ax, self._fsdp(d[1]), None)
+
+        # ---- SSM (mamba2): small model, replicate weights ----
+        if name in ("in_proj", "conv_w", "conv_b", "A_log", "D_skip",
+                    "dt_bias", "gate_norm", "out_proj"):
+            if name == "out_proj":   # [din, D]
+                return spec(self._model(d[0]), None)
+            if name == "in_proj":    # [D, X]
+                return spec(None, None)
+            return spec(*(None,) * len(d))
+
+        # ---- hybrid (RG-LRU): shard recurrence width over model ----
+        if name in ("w_rnn_in", "w_gate_in"):             # [D, W]
+            return spec(self._fsdp(d[0]), self._model(d[1]))
+        if name in ("w_a", "w_x"):                        # [W, W]
+            return spec(None, self._model(d[1]))
+        if name in ("b_a", "b_x", "lam"):                 # [W]
+            return spec(self._model(d[0]))
+        if name == "w_out":                               # [W, D]
+            return spec(self._model(d[0]), self._fsdp(d[1]))
+
+        # hybrid conv over sharded width
+        if name in ("conv_w",):                           # [K, W]
+            return spec(None, self._model(d[1]))
+        if name == "conv_b":
+            return spec(self._model(d[0]))
+
+        # ---- norms / scalars / anything else: replicate ----
+        return spec(*(None,) * len(d))
+
+    def param_specs(self, shapes: Any) -> Any:
+        def visit(path, leaf):
+            names = tuple(p.key if hasattr(p, "key") else str(p) for p in path)
+            return self.param_spec(names, tuple(leaf.shape))
+
+        return jax.tree_util.tree_map_with_path(visit, shapes)
+
+    def param_shardings(self, shapes: Any) -> Any:
+        return jax.tree_util.tree_map(self.named, self.param_specs(shapes),
+                                      is_leaf=lambda x: isinstance(x, P))
+
+    # ------------------------------------------------------- batch specs
+    def batch_spec(self, shape: InputShape) -> Dict[str, P]:
+        b = self.batch if shape.global_batch % axis_size(self.mesh, self.batch) == 0 \
+            else (self.batch[-1] if shape.global_batch % axis_size(self.mesh, "data") == 0
+                  else None)
+        if shape.kind == "train":
+            out = {"tokens": P(b, None), "labels": P(b, None)}
+        elif shape.kind == "prefill":
+            out = {"tokens": P(b, None)}
+        else:
+            out = {"token": P(b)}
+        # stub frontend inputs
+        if self.cfg.family == "vlm" and shape.kind != "decode":
+            out["image_embeds"] = P(b, None, None)
+        if self.cfg.family == "audio" and shape.kind != "decode":
+            out["frames"] = P(b, None, None)
+        return out
+
+    # ------------------------------------------------------- cache specs
+    def cache_specs(self, cache_shapes: Any, shape: InputShape) -> Any:
+        """Specs for the decode KV/state cache."""
+        B = shape.global_batch
+        b_ax = None
+        if B % axis_size(self.mesh, self.batch) == 0:
+            b_ax = self.batch
+        elif B % axis_size(self.mesh, "data") == 0:
+            b_ax = "data"
+        long_ctx = B == 1   # long_500k: context parallelism over "data"
+
+        def visit(path, leaf):
+            names = tuple(p.key if hasattr(p, "key") else str(p) for p in path)
+            name = names[-1]
+            shp = tuple(leaf.shape)
+            if name == "pos":
+                return P(b_ax)
+            if name in ("k", "v", "xk", "xv"):
+                # [L, B, C, Hkv, Dh].  KV-length sharding (flash-decoding
+                # style) only pays when the batch can't shard (B == 1
+                # long-context): for batched decode, scattering the per-seq
+                # ring-buffer update into a model-sharded C dim makes GSPMD
+                # fully rematerialize the cache every step (§Perf iter 3).
+                seq_axes = []
+                if long_ctx:
+                    if _div(shp[2], self.mesh, "data"):
+                        seq_axes.append("data")
+                    rem = shp[2] // (axis_size(self.mesh, "data")
+                                     if "data" in seq_axes else 1)
+                    if _div(rem, self.mesh, "model"):
+                        seq_axes.append("model")
+                else:
+                    # prefer head sharding over model when it divides
+                    if _div(shp[3], self.mesh, "model"):
+                        return P(None, b_ax, None, "model", None)
+                seq = tuple(seq_axes) if seq_axes else None
+                return P(None, b_ax, seq, None, None)
+            if name == "conv":
+                # [n, B, K-1, W] (hybrid) or [L, B, K-1, conv_dim] (ssm)
+                w_ax = self._model(shp[3]) if self.cfg.family == "hybrid" else None
+                return P(None, b_ax, None, w_ax)
+            if name == "h":      # [n, B, W]
+                return P(None, b_ax, self._model(shp[2]))
+            if name == "ssm":    # [L, B, H, P, N]
+                return P(None, b_ax, None, None, None)
+            return P(*(None,) * len(shp))
+
+        return jax.tree_util.tree_map_with_path(visit, cache_shapes)
+
+    # ---------------------------------------------------- optimizer state
+    def opt_specs(self, param_specs: Any) -> Any:
+        """AdamWState(step, mu, nu): moments mirror the param specs."""
+        from ..training.optimizer import AdamWState
+        return AdamWState(step=P(), mu=param_specs, nu=param_specs)
+
+    # ----------------------------------------------------------- outputs
+    def logits_spec(self, shape: InputShape) -> P:
+        b = self.batch if shape.global_batch % axis_size(self.mesh, self.batch) == 0 else None
+        v_ax = "model" if _div(self.cfg.vocab_size, self.mesh, "model") else None
+        if shape.kind == "train":
+            return P(b, None, v_ax)
+        return P(b, v_ax)
+
+
+def to_sds(shapes: Any, shardings: Any) -> Any:
+    """Attach NamedShardings to a ShapeDtypeStruct tree."""
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)

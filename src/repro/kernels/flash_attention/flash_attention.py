@@ -1,0 +1,131 @@
+"""Flash attention (prefill/training) Pallas TPU kernel.
+
+TPU adaptation notes (DESIGN.md §2): the GPU flash-attention formulation
+(warps, shared-memory tiles) is re-thought for the TPU memory hierarchy —
+BlockSpec tiles stage q/k/v HBM->VMEM in MXU-aligned blocks (q: BQ x Dh,
+k/v: BK x Dh with BQ=BK=128 by default); the running-softmax state (m, l,
+acc) lives in VMEM scratch that persists across the sequential innermost
+grid dimension (TPU grids execute in order, which replaces the GPU's
+explicit software pipeline across KV tiles).
+
+Grid: (batch*heads, Sq/BQ, Skv/BK); the KV dim is innermost/sequential.
+Causal and sliding-window masking are applied per-tile; fully-masked tiles
+short-circuit via pl.when (on TPU this skips the DMA+MXU work).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int, kv_len: int,
+                  causal: bool, window: Optional[int]):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # tile-level reachability (static grid; dynamic predicate)
+    reachable = jnp.asarray(True)
+    if causal:
+        reachable = reachable & (k_start <= q_start + block_q - 1)
+    if window is not None:
+        reachable = reachable & (k_start + block_k - 1 >= q_start - window + 1)
+
+    @pl.when(reachable)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)              # [BQ, D]
+        k = k_ref[0].astype(jnp.float32)              # [BK, D]
+        v = v_ref[0].astype(jnp.float32)              # [BK, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < kv_len
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                            # [BQ, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)               # [BQ, 1]
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, ...] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                         causal: bool = True, window: Optional[int] = None,
+                         scale: Optional[float] = None,
+                         block_q: int = DEFAULT_BLOCK_Q,
+                         block_k: int = DEFAULT_BLOCK_K,
+                         interpret: bool = True) -> jnp.ndarray:
+    """q: [BH, Sq, D]; k/v: [BH, Skv, D] (GQA already expanded).  -> [BH,Sq,D]."""
+    BH, Sq, D = q.shape
+    Skv = k.shape[1]
+    scale = D ** -0.5 if scale is None else scale
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    pad_q = (-Sq) % bq
+    pad_k = (-Skv) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    Sq_p, Skv_p = Sq + pad_q, Skv + pad_k
+    grid = (BH, Sq_p // bq, Skv_p // bk)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=bq, block_k=bk, kv_len=Skv,
+        causal=causal, window=window)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq_p, D), q.dtype),
+        scratch_shapes=[
+            # running softmax state, persistent across the sequential kv dim
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq]

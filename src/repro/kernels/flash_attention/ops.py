@@ -1,0 +1,38 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Model code calls ``flash_attention(q, k, v)`` with [B, S, H, D] layouts;
+this wrapper folds (B, H) -> BH (the kernel's batch grid dim), picks
+interpret mode off-TPU, and restores the layout.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_bhsd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "block_q", "block_k"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None, block_q: int = 128,
+                    block_k: int = 128) -> jnp.ndarray:
+    """q/k/v: [B, S, H, D] (k/v already GQA-expanded to H heads)."""
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, Skv, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, Skv, D)
+    out = flash_attention_bhsd(qf, kf, vf, causal=causal, window=window,
+                               scale=scale, block_q=block_q, block_k=block_k,
+                               interpret=not _on_tpu())
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for flash attention."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  scale: Optional[float] = None) -> jnp.ndarray:
+    """q: [BH, Sq, D]; k/v: [BH, Skv, D] -> [BH, Sq, D]. f32 softmax."""
+    D = q.shape[-1]
+    scale = D ** -0.5 if scale is None else scale
+    logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    Sq, Skv = q.shape[1], k.shape[1]
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    logits = jnp.where(mask[None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)

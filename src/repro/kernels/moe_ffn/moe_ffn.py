@@ -1,0 +1,82 @@
+"""Grouped expert-FFN Pallas TPU kernel (the MoE MXU hot-spot).
+
+Computes, for every expert e over its capacity buffer:
+
+    out[e] = (silu(x[e] @ w_gate[e]) * (x[e] @ w_up[e])) @ w_down[e]
+
+as one fused kernel: grid (E, C/BC, F/BF) with the F (expert hidden) dim
+innermost/sequential; the [BC, D] output accumulator lives in VMEM scratch
+across F tiles, so the three matmuls of the SwiGLU never round-trip the
+[C, F] activation through HBM.  Block shapes are MXU-aligned (BC=128,
+BF=128 by default; D rides along whole).
+
+This pairs with the dispatch/combine layer above it: dispatch produces the
+[E, C, D] buffers (shard-local after §Perf iteration 2), this kernel is the
+per-shard compute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _moe_ffn_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_scr):
+    fi = pl.program_id(2)
+    nf = pl.num_programs(2)
+
+    @pl.when(fi == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # [BC, D]
+    wg = wg_ref[0].astype(jnp.float32)        # [D, BF]
+    wu = wu_ref[0].astype(jnp.float32)
+    wd = wd_ref[0].astype(jnp.float32)        # [BF, D]
+    g = jax.lax.dot(x, wg, preferred_element_type=jnp.float32)
+    u = jax.lax.dot(x, wu, preferred_element_type=jnp.float32)
+    h = (g * jax.nn.sigmoid(g)) * u           # silu(g) * u, [BC, BF]
+    acc_scr[...] += jax.lax.dot(h, wd, preferred_element_type=jnp.float32)
+
+    @pl.when(fi == nf - 1)
+    def _fin():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+def moe_ffn(xe: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+            w_down: jnp.ndarray, *, block_c: int = 128, block_f: int = 128,
+            interpret: bool = True) -> jnp.ndarray:
+    """xe: [E, C, D]; w_gate/w_up: [E, D, F]; w_down: [E, F, D] -> [E, C, D]."""
+    E, C, D = xe.shape
+    F = w_gate.shape[-1]
+    bc = min(block_c, C)
+    bf = min(block_f, F)
+    pad_c = (-C) % bc
+    pad_f = (-F) % bf
+    if pad_c:
+        xe = jnp.pad(xe, ((0, 0), (0, pad_c), (0, 0)))
+    if pad_f:
+        w_gate = jnp.pad(w_gate, ((0, 0), (0, 0), (0, pad_f)))
+        w_up = jnp.pad(w_up, ((0, 0), (0, 0), (0, pad_f)))
+        w_down = jnp.pad(w_down, ((0, 0), (0, pad_f), (0, 0)))
+    Cp, Fp = C + pad_c, F + pad_f
+    grid = (E, Cp // bc, Fp // bf)
+    out = pl.pallas_call(
+        _moe_ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, D), lambda e, c, f: (e, c, 0)),
+            pl.BlockSpec((1, D, bf), lambda e, c, f: (e, 0, f)),
+            pl.BlockSpec((1, D, bf), lambda e, c, f: (e, 0, f)),
+            pl.BlockSpec((1, bf, D), lambda e, c, f: (e, f, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, D), lambda e, c, f: (e, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, Cp, D), xe.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, D), jnp.float32)],
+        interpret=interpret,
+    )(xe, w_gate, w_up, w_down)
+    return out[:, :C]

@@ -1,0 +1,22 @@
+"""jit'd wrapper for the grouped expert-FFN kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .moe_ffn import moe_ffn
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f"))
+def moe_ffn_fused(xe: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+                  w_down: jnp.ndarray, *, block_c: int = 128,
+                  block_f: int = 128) -> jnp.ndarray:
+    return moe_ffn(xe, w_gate, w_up, w_down, block_c=block_c,
+                   block_f=block_f, interpret=not _on_tpu())

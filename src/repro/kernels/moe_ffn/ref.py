@@ -1,0 +1,16 @@
+"""Pure-jnp oracle: the model's expert FFN."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_ffn_ref(xe: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+                w_down: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe.astype(jnp.float32),
+                               w_gate.astype(jnp.float32)))
+    h = h * jnp.einsum("ecd,edf->ecf", xe.astype(jnp.float32),
+                       w_up.astype(jnp.float32))
+    return jnp.einsum("ecf,efd->ecd", h,
+                      w_down.astype(jnp.float32)).astype(xe.dtype)

@@ -1,0 +1,210 @@
+"""Decode attention Pallas TPU kernels (the serving hot-spot).
+
+Two kernels:
+
+1. ``decode_ring_kernel`` — single-token attention over the model's dense
+   per-slot ring-buffer cache [B, C, Hkv, Dh] with per-sequence positions
+   and optional sliding window.  This is the kernel behind
+   ``layers.decode_attention(impl="pallas")``.
+
+2. ``paged_decode_kernel`` — attention over the engine's paged pool
+   ([n_pages, page, Hkv, Dh]) indexed through per-sequence page tables,
+   using PrefetchScalarGridSpec so the page table is available to the
+   BlockSpec index_map (the TPU-native equivalent of vLLM's block tables:
+   pages stage HBM->VMEM by table lookup, no gather materialization).
+
+TPU adaptation (DESIGN.md §2): vLLM's GPU kernel assigns a warp per head
+and 16-token blocks; here the unit of work is a (batch, kv-head) grid cell
+with KV staged in MXU-aligned [page, Dh] tiles and the GQA group (n_rep
+query heads) processed as one [n_rep, Dh] matmul per tile — the MXU eats
+the whole query group at once, which is the systolic-array-friendly
+reformulation of the warp-per-head design.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- ring cache
+def _ring_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                 *, scale: float, block_k: int, cache_len: int,
+                 window: Optional[int]):
+    """Grid: (B, Hkv, C/BK).  q_ref: [1, 1, n_rep, D]; k/v: [1, BK, 1, D]."""
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    pos = pos_ref[b]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # [n_rep, D]
+    k = k_ref[0, :, 0].astype(jnp.float32)              # [BK, D]
+    v = v_ref[0, :, 0].astype(jnp.float32)              # [BK, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    slots = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    if window is not None:
+        age = (pos % cache_len - slots) % cache_len
+        valid = age < jnp.minimum(window, pos + 1)
+    else:
+        valid = slots <= pos
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def decode_ring(q: jnp.ndarray, cache_k: jnp.ndarray, cache_v: jnp.ndarray,
+                pos: jnp.ndarray, *, scale: float, n_rep: int,
+                window: Optional[int] = None, block_k: int = 128,
+                interpret: bool = True) -> jnp.ndarray:
+    """q: [B, 1, H, D]; cache: [B, C, Hkv, D]; pos: [B] -> [B, 1, H, D]."""
+    B, C, Hkv, D = cache_k.shape
+    H = Hkv * n_rep
+    qg = q[:, 0].reshape(B, Hkv, n_rep, D)
+    bk = min(block_k, C)
+    pad = (-C) % bk
+    if pad:
+        cache_k = jnp.pad(cache_k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cache_v = jnp.pad(cache_v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Cp = C + pad
+    # padded slots never hold valid entries: slot >= C > pos (no window) and
+    # age >= window (window case) because the ring arithmetic uses cache_len=C
+    kernel = functools.partial(_ring_kernel, scale=scale, block_k=bk,
+                               cache_len=C, window=window)
+    grid = (B, Hkv, Cp // bk)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, n_rep, D), lambda b, h, j, pos: (b, h, 0, 0)),
+                pl.BlockSpec((1, bk, 1, D), lambda b, h, j, pos: (b, j, h, 0)),
+                pl.BlockSpec((1, bk, 1, D), lambda b, h, j, pos: (b, j, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, n_rep, D),
+                                   lambda b, h, j, pos: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((n_rep, 1), jnp.float32),
+                pltpu.VMEM((n_rep, 1), jnp.float32),
+                pltpu.VMEM((n_rep, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, n_rep, D), q.dtype),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), qg, cache_k, cache_v)
+    return out.reshape(B, 1, H, D)
+
+
+# --------------------------------------------------------------- paged cache
+def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale: float, page: int):
+    """Grid: (B, Hkv, max_pages).  Page j of sequence b is pool page
+    pt_ref[b, j] (the index_map already staged it into k_ref/v_ref)."""
+    b = pl.program_id(0)
+    ji = pl.program_id(2)
+    nj = pl.num_programs(2)
+    length = len_ref[b]
+
+    @pl.when(ji == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    valid_page = pt_ref[b, ji] >= 0
+
+    @pl.when(valid_page)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)             # [n_rep, D]
+        k = k_ref[0, :, 0].astype(jnp.float32)          # [page, D]
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        tok = ji * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(tok < length, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ji == nj - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def paged_decode(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+                 page_table: jnp.ndarray, lengths: jnp.ndarray, *,
+                 scale: float, n_rep: int,
+                 interpret: bool = True) -> jnp.ndarray:
+    """q: [B, H, D]; pages: [n_pages, page, Hkv, D];
+    page_table: [B, max_pages] (pool indices, -1 = unused);
+    lengths: [B] valid tokens.  -> [B, H, D].
+    """
+    B, H, D = q.shape
+    n_pages, page, Hkv, _ = k_pages.shape
+    max_pages = page_table.shape[1]
+    qg = q.reshape(B, Hkv, n_rep, D)
+
+    def kv_index(b, h, j, pt, lens):
+        # table lookup inside the index_map: the DMA fetches exactly the
+        # page this grid cell needs (clamped for padded slots)
+        p = jnp.maximum(pt[b, j], 0)
+        return (p, 0, h, 0)
+
+    kernel = functools.partial(_paged_kernel, scale=scale, page=page)
+    grid = (B, Hkv, max_pages)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, n_rep, D),
+                             lambda b, h, j, pt, lens: (b, h, 0, 0)),
+                pl.BlockSpec((1, page, 1, D), kv_index),
+                pl.BlockSpec((1, page, 1, D), kv_index),
+            ],
+            out_specs=pl.BlockSpec((1, 1, n_rep, D),
+                                   lambda b, h, j, pt, lens: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((n_rep, 1), jnp.float32),
+                pltpu.VMEM((n_rep, 1), jnp.float32),
+                pltpu.VMEM((n_rep, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, n_rep, D), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      qg, k_pages, v_pages)
+    return out.reshape(B, H, D)

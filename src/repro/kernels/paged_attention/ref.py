@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the decode kernels."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_ring_ref(q: jnp.ndarray, cache_k: jnp.ndarray, cache_v: jnp.ndarray,
+                    pos: jnp.ndarray, *, scale: float, n_rep: int,
+                    window: Optional[int] = None) -> jnp.ndarray:
+    """Identical math to models.layers.decode_attention (xla path)."""
+    B, C, Hkv, D = cache_k.shape
+
+    def rep(x):
+        return jnp.broadcast_to(x[:, :, :, None, :], (B, C, Hkv, n_rep, D)
+                                ).reshape(B, C, Hkv * n_rep, D)
+
+    k, v = rep(cache_k), rep(cache_v)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    slots = jnp.arange(C)
+    if window is not None:
+        age = (pos[:, None] % C - slots[None, :]) % C
+        valid = age < jnp.minimum(window, pos[:, None] + 1)
+    else:
+        valid = slots[None, :] <= pos[:, None]
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def paged_decode_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                     v_pages: jnp.ndarray, page_table: jnp.ndarray,
+                     lengths: jnp.ndarray, *, scale: float,
+                     n_rep: int) -> jnp.ndarray:
+    """Gather pages densely, then plain attention."""
+    B, H, D = q.shape
+    n_pages, page, Hkv, _ = k_pages.shape
+    max_pages = page_table.shape[1]
+    pt = jnp.maximum(page_table, 0)
+    k = k_pages[pt].reshape(B, max_pages * page, Hkv, D)
+    v = v_pages[pt].reshape(B, max_pages * page, Hkv, D)
+    out = decode_ring_ref(q[:, None], k, v, lengths - 1, scale=scale,
+                          n_rep=n_rep, window=None)
+    # mask by real length: decode_ring_ref valid = slots <= pos = length-1 ✓
+    return out[:, 0]

@@ -1,0 +1,19 @@
+"""jit'd wrapper used by models.rglru (rglru_impl='pallas')."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .rglru_scan import rglru_scan_blocked
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@jax.jit
+def rglru_scan_fused(a: jnp.ndarray, gated: jnp.ndarray,
+                     h0: jnp.ndarray = None) -> jnp.ndarray:
+    """a: per-step decay exp(log_a); gated: input term.  [B,S,W] -> [B,S,W]."""
+    return rglru_scan_blocked(a, gated, h0, interpret=not _on_tpu())

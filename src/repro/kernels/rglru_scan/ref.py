@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: first-order linear recurrence via associative scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a: jnp.ndarray, b: jnp.ndarray,
+                   h0: jnp.ndarray = None) -> jnp.ndarray:
+    """h_t = a_t h_{t-1} + b_t.  a, b: [B, S, W] -> h: [B, S, W] (f32)."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h

@@ -1,0 +1,21 @@
+"""jit'd wrapper for the SSD kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ssd import ssd_chunk_scan
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_fused(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+              Bm: jnp.ndarray, Cm: jnp.ndarray, *, chunk: int = 128) -> jnp.ndarray:
+    return ssd_chunk_scan(x, dt, A, Bm, Cm, chunk=chunk,
+                          interpret=not _on_tpu())

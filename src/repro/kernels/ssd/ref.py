@@ -1,0 +1,38 @@
+"""Pure-jnp oracle: delegates to the model's chunked SSD reference."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...models.ssm import ssd_chunked
+
+
+def ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+            Bm: jnp.ndarray, Cm: jnp.ndarray, *, chunk: int = 128) -> jnp.ndarray:
+    y, _final = ssd_chunked(x, dt, A, Bm, Cm, chunk)
+    return y
+
+
+def ssd_sequential_ref(x, dt, A, Bm, Cm):
+    """Token-by-token recurrence — the ground truth both chunked forms
+    must match: h_t = exp(-dt_t A) h_{t-1} + dt_t x_t B_t^T; y_t = C_t h_t."""
+    import jax
+    import jax.numpy as jnp
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                  # [B,H,P], [B,H], [B,N], [B,N]
+        decay = jnp.exp(-dtt * A[None, :])     # [B,H]
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dtt, xt, bt)
+        h = h * decay[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          Bm.transpose(1, 0, 2).astype(jnp.float32),
+          Cm.transpose(1, 0, 2).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)      # [B,S,H,P]

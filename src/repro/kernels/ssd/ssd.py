@@ -1,0 +1,112 @@
+"""Mamba2 SSD (state-space dual) chunk-scan Pallas TPU kernel.
+
+The SSD dual form is TPU-friendly by construction: each chunk contributes
+an attention-like [Q, Q] block (MXU matmuls) plus a rank-N state update,
+and chunks chain through a tiny [P, N] recurrent state.  The kernel maps
+one (batch, head) pair per grid row and walks chunks sequentially with the
+inter-chunk state in VMEM scratch — the same persistent-scratch pattern the
+flash kernel uses for its running softmax.
+
+Inputs are pre-projected per head:
+    x  [B, H, S, P]   inputs       dt [B, H, S]   step sizes (>0)
+    Bm [B, S, N]      input proj   Cm [B, S, N]   output proj
+    A  [H]            positive decay rates
+
+Block sizes: Q (chunk) x P (head dim) and Q x N tiles; Q=128..256 keeps
+everything MXU-aligned (P=64, N=128 in mamba2-130m).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, state_scr, *,
+                chunk: int):
+    h = pl.program_id(1)
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    A = a_ref[h]                                         # scalar rate > 0
+    x = x_ref[0, 0, 0].astype(jnp.float32)               # [Q, P]
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)             # [1, Q] (lane-major)
+    Bm = b_ref[0, 0].astype(jnp.float32)                 # [Q, N]
+    Cm = c_ref[0, 0].astype(jnp.float32)                 # [Q, N]
+
+    log_a = -dt[0] * A                                   # [Q]
+    cum = jnp.cumsum(log_a)                              # [Q]
+
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for j <= i
+    diff = cum[:, None] - cum[None, :]
+    Q = x.shape[0]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(jj <= ii, jnp.exp(diff), 0.0)
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    M = scores * L                                       # [Q, Q]
+    xdt = x * dt[0][:, None]                             # [Q, P]
+    y = jax.lax.dot(M, xdt, preferred_element_type=jnp.float32)
+
+    # inter-chunk: y_i += (C_i . S_in) * exp(cum_i)
+    state = state_scr[...]                               # [N, P]
+    y = y + jax.lax.dot(Cm, state,
+                        preferred_element_type=jnp.float32) * jnp.exp(cum)[:, None]
+
+    # state update: S_out = exp(cum_Q) S_in + sum_j exp(cum_Q - cum_j) B_j (dt_j x_j)^T
+    total = cum[-1]
+    decay_to_end = jnp.exp(total - cum)                  # [Q]
+    state_scr[...] = (state * jnp.exp(total)
+                      + jax.lax.dot_general(
+                          Bm * decay_to_end[:, None], xdt,
+                          (((0,), (0,)), ((), ())),
+                          preferred_element_type=jnp.float32))
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_chunk_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                   Bm: jnp.ndarray, Cm: jnp.ndarray, *, chunk: int = 128,
+                   interpret: bool = True):
+    """x: [B,S,H,P]; dt: [B,S,H]; A: [H]; Bm/Cm: [B,S,N] -> y [B,S,H,P]."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, f"seq {S} % chunk {Q} != 0"
+    nc = S // Q
+
+    xt = x.transpose(0, 2, 1, 3).reshape(Bsz, H, nc, Q, P)
+    dtt = dt.transpose(0, 2, 1).reshape(Bsz, H, nc, 1, Q)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    kernel = functools.partial(_ssd_kernel, chunk=Q)
+    grid = (Bsz, H, nc)
+    y = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, 1, Q, P),
+                             lambda b, h, c, a: (b, h, c, 0, 0)),
+                pl.BlockSpec((1, 1, 1, 1, Q),
+                             lambda b, h, c, a: (b, h, c, 0, 0)),
+                pl.BlockSpec((1, 1, Q, N), lambda b, h, c, a: (b, c, 0, 0)),
+                pl.BlockSpec((1, 1, Q, N), lambda b, h, c, a: (b, c, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, 1, Q, P),
+                                   lambda b, h, c, a: (b, h, c, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((Bsz, H, nc, Q, P), x.dtype),
+        interpret=interpret,
+    )(A.astype(jnp.float32), xt, dtt, Bc, Cc)
+    return y.reshape(Bsz, H, S, P).transpose(0, 2, 1, 3)

@@ -1,0 +1,337 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+This proves the distribution config is coherent without hardware: 512
+placeholder host devices stand in for 2 TPU v5e pods.  The compiled
+artifact supplies memory_analysis (fits?), cost_analysis (FLOPs/bytes), and
+the post-SPMD HLO from which collective bytes are extracted — the three
+inputs of EXPERIMENTS.md §Roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+
+# The VERY FIRST lines, before ANY other import: jax locks the device count
+# on first init.  (Do NOT set this in conftest.py — tests must see 1 device.)
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+from typing import Any, Dict, Optional, Tuple  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from ..configs import ARCH_IDS, canonical, get_config, get_shape, INPUT_SHAPES  # noqa: E402
+from ..configs.base import InputShape, ModelConfig  # noqa: E402
+from ..distributed.context import activation_shardings  # noqa: E402
+from ..distributed.sharding import ShardingRules, to_sds  # noqa: E402
+from ..models import build_model  # noqa: E402
+from ..training.optimizer import AdamW, constant_schedule  # noqa: E402
+from ..training.train import make_train_step  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+
+# long-context carve-outs (DESIGN.md §4)
+LONG_CTX_WINDOW = 8192
+LONG_CTX_SKIP = {"whisper-medium": "enc-dec: 30s audio ~ 1500 frames; "
+                                   "524K decode out of family scope"}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    """Devices per replica group of a collective instruction."""
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)   # iota form
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", line)  # explicit form
+    if m:
+        return len(m.group(1).split(","))
+    return total_devices
+
+
+def _wire_bytes(op: str, out_bytes: int, g: int) -> float:
+    """Per-device bytes over the interconnect (ring algorithms).
+
+    all-gather: receives (g-1)/g of the gathered output;
+    all-reduce: reduce-scatter + all-gather = 2 (g-1)/g of the tensor;
+    reduce-scatter: input is g x output; sends/receives (g-1) output shards;
+    all-to-all: exchanges (g-1)/g of the buffer;
+    collective-permute: whole buffer.
+    """
+    if g <= 1:
+        return 0.0
+    f = (g - 1) / g
+    if op == "all-gather":
+        return out_bytes * f
+    if op == "all-reduce":
+        return 2 * out_bytes * f
+    if op == "reduce-scatter":
+        return out_bytes * (g - 1)
+    if op == "all-to-all":
+        return out_bytes * f
+    return float(out_bytes)      # collective-permute
+
+
+def collective_bytes(hlo_text: str, loop_trip_counts=(),
+                     total_devices: int = 256) -> Dict[str, float]:
+    """Per-device interconnect bytes from the post-SPMD HLO.
+
+    XLA:CPU prints while-loop bodies once and its cost analysis does not
+    scale by trip count, so ops whose metadata places them inside loop
+    bodies (op_name contains "while/body") are multiplied by the known trip
+    counts supplied by the caller: ``loop_trip_counts[d-1]`` for nesting
+    depth d (our programs have static loop structure: layer scan, then the
+    MoE group map / grad-accum scan).
+    """
+    out: Dict[str, float] = {op: 0.0 for op in COLLECTIVE_OPS}
+    counts: Dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%\S+\s+=\s+(\S+)\s+([a-z0-9\-]+)\(",
+                     stripped)
+        if not m:
+            continue
+        out_shape, op = m.group(1), m.group(2)
+        base = next((c for c in COLLECTIVE_OPS
+                     if op == c or op.startswith(c + "-")), None)
+        if base is None or op.endswith("-done"):
+            continue
+        # output may be a tuple (dt[..], dt[..]); sum all components
+        ob = sum(_shape_bytes(dt, dims)
+                 for dt, dims in _SHAPE_RE.findall(out_shape)
+                 if dt in _DTYPE_BYTES)
+        g = _group_size(stripped, total_devices)
+        mult = 1.0
+        depth = stripped.count("while/body")
+        for d in range(min(depth, len(loop_trip_counts))):
+            mult *= max(1, loop_trip_counts[d])
+        out[base] += _wire_bytes(base, ob, g) * mult
+        counts[base] += 1
+    out["total"] = sum(out[op] for op in COLLECTIVE_OPS)
+    out["op_counts"] = counts
+    return out
+
+
+def effective_config(arch: str, shape: InputShape) -> Tuple[Optional[ModelConfig], str]:
+    cfg = get_config(arch)
+    note = ""
+    if shape.name == "long_500k":
+        if cfg.arch_id in LONG_CTX_SKIP:
+            return None, LONG_CTX_SKIP[cfg.arch_id]
+        if not cfg.supports_long_context:
+            cfg = cfg.replace(sliding_window=LONG_CTX_WINDOW)
+            note = f"sliding_window={LONG_CTX_WINDOW} carve-out"
+    return cfg, note
+
+
+def _max_cache_seq(cfg: ModelConfig, shape: InputShape) -> int:
+    # decode: KV cache of seq_len; +8 slack so position seq_len is writable
+    return shape.seq_len
+
+
+def loop_trips(cfg: ModelConfig, shape: InputShape, q_chunk: int = 512):
+    """Static trip counts of the while loops in each program, outermost
+    first.  Current loop structure: layer scan (hybrid: group scan) at
+    depth 1; inside it, the SSD chunk scan (ssm) or the chunked-attention
+    query scan (train/prefill) at depth 2.  MoE groups run under vmap (no
+    loop) since §Perf iteration 2b."""
+    full_seq = shape.kind != "decode"
+    nq = max(1, -(-shape.seq_len // q_chunk)) if full_seq else 1
+    if cfg.family == "hybrid":
+        ng = cfg.n_layers // cfg.hybrid_period
+        return [max(ng, 1)] + ([nq] if full_seq else [])
+    trips = [cfg.n_layers]
+    if cfg.family == "ssm":
+        if full_seq:
+            trips.append(max(1, shape.seq_len // cfg.ssm_chunk))
+    elif full_seq:
+        trips.append(nq)
+    return trips
+
+
+def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
+                mesh=None, moe_impl: str = "einsum",
+                remat: bool = False) -> Dict[str, Any]:
+    """Lower+compile one combination; returns the §Dry-run record."""
+    shape = get_shape(shape_name)
+    cfg, note = effective_config(arch, shape)
+    if cfg is None:
+        return {"arch": arch, "shape": shape_name, "skipped": note}
+    # production memory config: chunked attention at long sequences and
+    # per-layer remat for training (EXPERIMENTS.md §Perf iteration 5)
+    attn_impl = "xla_chunked" if shape.kind in ("train", "prefill") else "xla"
+    model = build_model(cfg, attention_impl=attn_impl, moe_impl=moe_impl,
+                        remat=(shape.kind == "train"))
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    mode = "train" if shape.kind == "train" else "serve"
+    rules = ShardingRules(cfg, mesh, mode=mode)
+
+    t0 = time.time()
+    param_shapes = model.param_shapes()
+    pspecs = rules.param_specs(param_shapes)
+    pshard = jax.tree_util.tree_map(rules.named, pspecs,
+                                    is_leaf=lambda x: isinstance(
+                                        x, jax.sharding.PartitionSpec))
+    params_sds = to_sds(param_shapes, pshard)
+
+    bspecs = rules.batch_spec(shape)
+    batch_sds = {k: jax.ShapeDtypeStruct(
+        v.shape, v.dtype, sharding=rules.named(bspecs[k]))
+        for k, v in model.input_specs(shape).items()}
+
+    # constrain logits to stay vocab-sharded through the loss (see
+    # EXPERIMENTS.md §Perf iteration 1; distributed/context.py)
+    b_ax = bspecs.get("tokens", jax.sharding.PartitionSpec()).sharding \
+        if hasattr(bspecs.get("tokens"), "sharding") else None
+    batch_axes_name = rules.batch
+    logits_sh = rules.named(jax.sharding.PartitionSpec(
+        batch_axes_name, None,
+        "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None))
+    act_ctx = activation_shardings({"logits": logits_sh})
+
+    with mesh, act_ctx:
+        if shape.kind == "train":
+            opt = AdamW(learning_rate=constant_schedule(1e-4))
+            step = make_train_step(model, opt)
+            opt_shapes = jax.eval_shape(opt.init, param_shapes)
+            ospecs = rules.opt_specs(pspecs)
+            oshard = jax.tree_util.tree_map(
+                rules.named, ospecs,
+                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+            opt_sds = to_sds(opt_shapes, oshard)
+            lowered = jax.jit(step).lower(params_sds, opt_sds, batch_sds)
+        elif shape.kind == "prefill":
+            def prefill_fn(params, batch):
+                return model.prefill(params, batch)
+            lowered = jax.jit(prefill_fn).lower(params_sds, batch_sds)
+        else:  # decode
+            cache_shapes = model.cache_shapes(shape.global_batch,
+                                              _max_cache_seq(cfg, shape))
+            cspecs = rules.cache_specs(cache_shapes, shape)
+            cshard = jax.tree_util.tree_map(
+                rules.named, cspecs,
+                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+            cache_sds = to_sds(cache_shapes, cshard)
+
+            def decode_fn(params, token, cache):
+                return model.decode_step(params, token, cache)
+
+            lowered = jax.jit(decode_fn).lower(
+                params_sds, batch_sds["token"], cache_sds)
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    trips = loop_trips(cfg, shape)
+    n_dev = int(mesh.devices.size)
+    coll = collective_bytes(compiled.as_text(), loop_trip_counts=trips,
+                            total_devices=n_dev)
+
+    def _get(obj, *names, default=0.0):
+        for n in names:
+            if hasattr(obj, n):
+                return float(getattr(obj, n))
+            if isinstance(obj, dict) and n in obj:
+                return float(obj[n])
+        return default
+
+    record: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": list(mesh.devices.shape),
+        "axes": list(mesh.axis_names),
+        "note": note,
+        "moe_impl": moe_impl if cfg.n_experts else "",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "n_devices": n_dev,
+        "loop_trip_counts": trips,
+        # raw XLA numbers: loop bodies are counted ONCE (XLA:CPU cost
+        # analysis is trip-count-unaware); §Roofline uses the analytic
+        # estimator cross-checked against these.
+        "flops_per_device_raw": _get(cost, "flops"),
+        "bytes_accessed_per_device_raw": _get(cost, "bytes accessed",
+                                              "bytes_accessed"),
+        "collective_bytes_per_device": coll,
+        "memory": {
+            "argument_bytes": _get(mem, "argument_size_in_bytes"),
+            "output_bytes": _get(mem, "output_size_in_bytes"),
+            "temp_bytes": _get(mem, "temp_size_in_bytes"),
+            "generated_code_bytes": _get(mem, "generated_code_size_in_bytes"),
+        },
+        "param_count": cfg.param_count(),
+        "param_count_active": cfg.param_count(active_only=True),
+    }
+    return record
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--moe-impl", default="einsum", choices=["einsum", "gather"])
+    p.add_argument("--out", default="benchmarks/results")
+    args = p.parse_args()
+
+    combos = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for s in INPUT_SHAPES:
+                combos.append((arch, s.name))
+    else:
+        combos.append((canonical(args.arch), args.shape))
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    os.makedirs(args.out, exist_ok=True)
+    for arch, shape_name in combos:
+        for mp in meshes:
+            tag = "multipod" if mp else "singlepod"
+            try:
+                rec = lower_combo(arch, shape_name, multi_pod=mp,
+                                  moe_impl=args.moe_impl)
+                status = "SKIP " + rec["skipped"] if "skipped" in rec else (
+                    f"ok lower={rec['lower_s']}s compile={rec['compile_s']}s "
+                    f"flops/dev(raw)={rec['flops_per_device_raw']:.3e} "
+                    f"coll={rec['collective_bytes_per_device']['total']:.3e}B")
+            except Exception as e:  # noqa: BLE001 — report, continue sweep
+                rec = {"arch": arch, "shape": shape_name, "mesh_tag": tag,
+                       "error": f"{type(e).__name__}: {e}"}
+                status = "FAIL " + rec["error"][:120]
+            suffix = "" if args.moe_impl == "einsum" else f"_{args.moe_impl}"
+            fname = os.path.join(
+                args.out, f"dryrun_{canonical(arch)}_{shape_name}_{tag}{suffix}.json")
+            with open(fname, "w") as f:
+                json.dump(rec, f, indent=2)
+            print(f"[{arch} x {shape_name} x {tag}] {status}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""JAX model zoo: the architectures NALAR serves.
+
+Families: dense (GQA transformer), moe (expert-parallel FFN), ssm (Mamba2
+SSD), hybrid (RG-LRU + local attention), vlm (stub vision frontend + dense
+backbone), audio (Whisper-style enc-dec with stub conv frontend).
+"""
+
+from .model import Model, build_model, cross_entropy
+
+__all__ = ["Model", "build_model", "cross_entropy"]

@@ -1,0 +1,210 @@
+"""Whisper-style encoder-decoder backbone — arXiv:2212.04356.
+
+Per the assignment carve-out, the modality frontend (mel-spectrogram +
+2-conv feature extractor) is a STUB: ``input_specs`` supplies precomputed
+frame embeddings [B, T_enc, D].  This module implements everything after it:
+bidirectional encoder, causal decoder with cross-attention, learned absolute
+positions (Whisper uses sinusoidal enc / learned dec; both are stand-ins
+here), LayerNorm + GELU.
+
+Decode caches: decoder self-attention KV (grows with generated length) plus
+the cross-attention K/V computed once from the encoder output.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+
+
+def _init_xattn(rng, cfg: ModelConfig) -> dict:
+    # cross-attention has full heads on both sides (Whisper is MHA)
+    return L.init_attention(rng, cfg)
+
+
+def _init_enc_layer(rng, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(rng)
+    return {
+        "attn_norm": L.init_norm(cfg),
+        "attn": L.init_attention(k1, cfg),
+        "mlp_norm": L.init_norm(cfg),
+        "mlp": L.init_mlp(k2, cfg),
+    }
+
+
+def _init_dec_layer(rng, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "attn_norm": L.init_norm(cfg),
+        "attn": L.init_attention(k1, cfg),
+        "xattn_norm": L.init_norm(cfg),
+        "xattn": _init_xattn(k2, cfg),
+        "mlp_norm": L.init_norm(cfg),
+        "mlp": L.init_mlp(k3, cfg),
+    }
+
+
+def init_params(rng, cfg: ModelConfig) -> dict:
+    ke, kenc, kdec, kp = jax.random.split(rng, 4)
+    enc_rngs = jax.random.split(kenc, cfg.n_encoder_layers)
+    dec_rngs = jax.random.split(kdec, cfg.n_layers)
+    return {
+        "embed": L.init_embedding(ke, cfg),
+        "enc_pos": (jax.random.normal(kp, (cfg.encoder_seq, cfg.d_model))
+                    * 0.02).astype(cfg.jnp_dtype),
+        "enc_layers": jax.vmap(lambda r: _init_enc_layer(r, cfg))(enc_rngs),
+        "enc_norm": L.init_norm(cfg),
+        "dec_layers": jax.vmap(lambda r: _init_dec_layer(r, cfg))(dec_rngs),
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def encode(params: dict, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: precomputed conv-frontend embeddings [B, T_enc, D]."""
+    x = frames.astype(cfg.jnp_dtype) + params["enc_pos"][None, :frames.shape[1]]
+    T = x.shape[1]
+    positions = jnp.arange(T)[None, :]
+
+    def step(carry, p):
+        h = L.apply_norm(carry, p["attn_norm"], cfg)
+        q, k, v = L.attention_qkv(h, p["attn"], cfg, positions)
+        n_rep = cfg.n_heads // cfg.n_kv_heads
+        o = L.sdpa(q, L.repeat_kv(k, n_rep), L.repeat_kv(v, n_rep), None,
+                   cfg.head_dim_ ** -0.5)   # bidirectional: no mask
+        x = carry + jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"])
+        h = L.apply_norm(x, p["mlp_norm"], cfg)
+        return x + L.mlp_block(h, p["mlp"], cfg), None
+
+    x, _ = jax.lax.scan(step, x, params["enc_layers"])
+    return L.apply_norm(x, params["enc_norm"], cfg)
+
+
+def _cross_kv(memory: jnp.ndarray, p: dict, cfg: ModelConfig):
+    k = jnp.einsum("bsd,dhk->bshk", memory, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", memory, p["wv"])
+    return k, v
+
+
+def _cross_attend(x: jnp.ndarray, xk: jnp.ndarray, xv: jnp.ndarray,
+                  p: dict, cfg: ModelConfig) -> jnp.ndarray:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    o = L.sdpa(q, L.repeat_kv(xk, n_rep), L.repeat_kv(xv, n_rep), None,
+               cfg.head_dim_ ** -0.5)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def _dec_block(x, p, cfg, positions, memory_kv, self_mask, impl="xla"):
+    xk, xv = memory_kv
+    h = L.apply_norm(x, p["attn_norm"], cfg)
+    q, k, v = L.attention_qkv(h, p["attn"], cfg, positions)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    o = L.full_attention(q, L.repeat_kv(k, n_rep), L.repeat_kv(v, n_rep),
+                         causal=True, window=None,
+                         scale=cfg.head_dim_ ** -0.5, impl=impl)
+    x = x + jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"])
+    h = L.apply_norm(x, p["xattn_norm"], cfg)
+    x = x + _cross_attend(h, xk, xv, p["xattn"], cfg)
+    h = L.apply_norm(x, p["mlp_norm"], cfg)
+    return x + L.mlp_block(h, p["mlp"], cfg), (k, v)
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+            frames: jnp.ndarray, attention_impl: str = "xla",
+            remat: bool = False, unembed: bool = True) -> jnp.ndarray:
+    """Teacher-forced training forward.  Returns decoder logits [B,S,V]."""
+    memory = encode(params, cfg, frames)
+    x = L.embed(tokens, params["embed"]).astype(cfg.jnp_dtype)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    mask = L.causal_mask(S, S, 0)
+
+    def blk(carry, p):
+        kv = _cross_kv(memory, p["xattn"], cfg)
+        out, _ = _dec_block(carry, p, cfg, positions, kv, mask,
+                            impl=attention_impl)
+        return out
+
+    if remat:
+        blk = jax.checkpoint(blk)
+
+    def step(carry, p):
+        return blk(carry, p), None
+
+    x, _ = jax.lax.scan(step, x, params["dec_layers"])
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    return L.unembed(x, params["embed"], cfg) if unembed else x
+
+
+# ------------------------------------------------------------------ serving
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    Hkv, Dh = cfg.n_kv_heads, cfg.head_dim_
+    H = cfg.n_heads
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, max_seq, Hkv, Dh), cfg.jnp_dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, max_seq, Hkv, Dh), cfg.jnp_dtype),
+        # cross-attn memory K/V, computed at prefill
+        "xk": jnp.zeros((cfg.n_layers, batch, cfg.encoder_seq, Hkv, Dh),
+                        cfg.jnp_dtype),
+        "xv": jnp.zeros((cfg.n_layers, batch, cfg.encoder_seq, Hkv, Dh),
+                        cfg.jnp_dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+            frames: jnp.ndarray, attention_impl: str = "xla",
+            pad_cache_to=None) -> Tuple[jnp.ndarray, dict]:
+    memory = encode(params, cfg, frames)
+    x = L.embed(tokens, params["embed"]).astype(cfg.jnp_dtype)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    mask = L.causal_mask(S, S, 0)
+
+    def step(carry, p):
+        kv = _cross_kv(memory, p["xattn"], cfg)
+        out, (k, v) = _dec_block(carry, p, cfg, positions, kv, mask,
+                                 impl=attention_impl)
+        return out, (k, v, kv[0], kv[1])
+
+    x, (ks, vs, xks, xvs) = jax.lax.scan(step, x, params["dec_layers"])
+    x = L.apply_norm(x[:, -1:], params["final_norm"], cfg)
+    logits = L.unembed(x[:, 0], params["embed"], cfg)
+    ks, vs = L.pad_cache_seq(ks, vs, S, None, pad_cache_to)
+    return logits, {"k": ks, "v": vs, "xk": xks, "xv": xvs,
+                    "pos": jnp.full((B,), S, jnp.int32)}
+
+
+def decode_step(params: dict, cfg: ModelConfig, token: jnp.ndarray,
+                cache: dict) -> Tuple[jnp.ndarray, dict]:
+    B = token.shape[0]
+    pos = jnp.broadcast_to(cache["pos"], (B,))
+    x = L.embed(token[:, None], params["embed"]).astype(cfg.jnp_dtype)
+    positions = pos[:, None]
+
+    def step(carry, xs):
+        p, ck, cv, xk, xv = xs
+        x = carry
+        h = L.apply_norm(x, p["attn_norm"], cfg)
+        q, k, v = L.attention_qkv(h, p["attn"], cfg, positions)
+        ck, cv = L.kv_cache_update(ck, cv, k, v, pos, None)
+        o = L.decode_attention(q, ck, cv, pos, cfg)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"])
+        h = L.apply_norm(x, p["xattn_norm"], cfg)
+        x = x + _cross_attend(h, xk, xv, p["xattn"], cfg)
+        h = L.apply_norm(x, p["mlp_norm"], cfg)
+        x = x + L.mlp_block(h, p["mlp"], cfg)
+        return x, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(
+        step, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    logits = L.unembed(x[:, 0], params["embed"], cfg)
+    return logits, {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"],
+                    "pos": pos + 1}

@@ -1,0 +1,326 @@
+"""Unified model API: build_model(cfg) -> Model.
+
+One façade over the five families so the serving engine, trainer, launcher,
+and dry-run treat every assigned architecture identically:
+
+    model.init(rng)                      -> params
+    model.forward(params, batch)         -> (logits, aux)
+    model.loss_fn(params, batch)         -> scalar loss
+    model.prefill(params, batch)         -> (last_logits, cache)
+    model.decode_step(params, tok, cache)-> (logits, cache)
+    model.init_cache(batch, max_seq)     -> cache pytree
+    model.input_specs(shape)             -> {name: ShapeDtypeStruct}
+
+``input_specs`` returns allocation-free stand-ins for every model input,
+including the stubbed modality frontends (audio frames / image patches).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import InputShape, ModelConfig
+from . import encdec, rglru, ssm, transformer, vlm
+
+AUX_COEF = 0.01   # MoE load-balance loss weight
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None,
+                  impl: str = "onehot") -> jnp.ndarray:
+    """Cross entropy over (possibly vocab-sharded) logits.
+
+    ``impl="onehot"`` extracts the gold logit with a one-hot contraction
+    instead of ``take_along_axis``: the contraction stays *local* on each
+    vocab shard (only a tiny [B,S] partial-sum all-reduce crosses the
+    interconnect), whereas the gather's transpose makes GSPMD materialize
+    the full [B,S,V] logits on every model shard — measured at 3 x ~40 GB
+    of per-device collective traffic on qwen3-0.6b train_4k
+    (EXPERIMENTS.md §Perf iteration 1).  "gather" keeps the naive path for
+    comparison.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    if impl == "gather":
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    else:
+        V = logits.shape[-1]
+        onehot = (labels[..., None] == jnp.arange(V)[None, None, :]
+                  if labels.ndim == 2 else
+                  labels[..., None] == jnp.arange(V))
+        gold = jnp.sum(logits * onehot.astype(logits.dtype), axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return jnp.mean(nll)
+
+
+def chunked_cross_entropy(hidden: jnp.ndarray, labels: jnp.ndarray,
+                          params: dict, cfg: ModelConfig,
+                          mask: Optional[jnp.ndarray] = None,
+                          chunk: int = 512) -> jnp.ndarray:
+    """Cross entropy without materializing full [B, S, V] logits.
+
+    Scans over sequence chunks; each chunk unembeds + reduces under
+    jax.checkpoint, so only one [B, chunk, V/shards] logits block is live at
+    a time (fwd and bwd).  This is what lets the production train shapes
+    fit HBM (EXPERIMENTS.md §Perf iteration 5): the f32 logits+dlogits pair
+    alone is ~74 GiB/device on qwen3-0.6b train_4k otherwise.
+    """
+    from . import layers as L
+    B, S, D = hidden.shape
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask_full = jnp.pad(
+            mask if mask is not None else jnp.ones((B, S), bool),
+            ((0, 0), (0, pad)))
+    else:
+        mask_full = mask if mask is not None else jnp.ones((B, S), bool)
+    ns = (S + pad) // c
+    h_c = hidden.reshape(B, ns, c, D).transpose(1, 0, 2, 3)
+    y_c = labels.reshape(B, ns, c).transpose(1, 0, 2)
+    m_c = mask_full.reshape(B, ns, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_nll(h, y, m):
+        logits = L.unembed(h, params["embed"], cfg).astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        onehot = y[..., None] == jnp.arange(cfg.vocab_size)[None, None, :]
+        gold = jnp.sum(logits * onehot.astype(logits.dtype), axis=-1)
+        return jnp.sum((logz - gold) * m), jnp.sum(m)
+
+    def step(carry, inp):
+        tot, cnt = carry
+        h, y, m = inp
+        s, n = chunk_nll(h, y, m)
+        return (tot + s, cnt + n), None
+
+    (total, count), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (h_c, y_c, m_c))
+    return total / jnp.maximum(count, 1.0)
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable[[Any], dict]
+    forward: Callable[..., Any]
+    loss_fn: Callable[[dict, Dict[str, jnp.ndarray]], jnp.ndarray]
+    prefill: Callable[..., Tuple[jnp.ndarray, dict]]
+    decode_step: Callable[[dict, jnp.ndarray, dict], Tuple[jnp.ndarray, dict]]
+    init_cache: Callable[[int, int], dict]
+    input_specs: Callable[[InputShape], Dict[str, Any]]
+
+    def param_shapes(self) -> dict:
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    def cache_shapes(self, batch: int, max_seq: int) -> dict:
+        # batch/max_seq are shape parameters, not traced values
+        return jax.eval_shape(lambda: self.init_cache(batch, max_seq))
+
+
+def _token_specs(shape: InputShape, cfg: ModelConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    if shape.kind == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    return {"token": jax.ShapeDtypeStruct((B,), i32)}
+
+
+def build_model(cfg: ModelConfig, attention_impl: str = "xla",
+                moe_impl: str = "einsum", remat: bool = False) -> Model:
+    fam = cfg.family
+
+    # ----------------------------------------------------------- dense/moe
+    if fam in ("dense", "moe"):
+        def fwd(params, batch):
+            return transformer.forward(params, cfg, batch["tokens"],
+                                       attention_impl=attention_impl,
+                                       moe_impl=moe_impl, return_aux=True,
+                                       remat=remat)
+
+        def loss_fn(params, batch):
+            if remat:   # production memory path: never materialize logits
+                hidden, aux = transformer.forward(
+                    params, cfg, batch["tokens"],
+                    attention_impl=attention_impl, moe_impl=moe_impl,
+                    return_aux=True, remat=True, unembed=False)
+                return chunked_cross_entropy(hidden, batch["labels"], params,
+                                             cfg) + AUX_COEF * aux
+            logits, aux = fwd(params, batch)
+            return cross_entropy(logits, batch["labels"]) + AUX_COEF * aux
+
+        return Model(
+            cfg=cfg,
+            init=functools.partial(transformer.init_params, cfg=cfg),
+            forward=fwd,
+            loss_fn=loss_fn,
+            prefill=lambda params, batch, **kw: transformer.prefill(
+                params, cfg, batch["tokens"], attention_impl=attention_impl,
+                moe_impl=moe_impl, **kw),
+            decode_step=lambda params, tok, cache: transformer.decode_step(
+                params, cfg, tok, cache, attention_impl=attention_impl,
+                moe_impl=moe_impl),
+            init_cache=functools.partial(transformer.init_cache, cfg),
+            input_specs=lambda shape: _token_specs(shape, cfg),
+        )
+
+    # ----------------------------------------------------------------- ssm
+    if fam == "ssm":
+        def fwd(params, batch):
+            return (ssm.forward(params, cfg, batch["tokens"], remat=remat),
+                    jnp.zeros((), jnp.float32))
+
+        def loss_fn(params, batch):
+            if remat:
+                hidden = ssm.forward(params, cfg, batch["tokens"],
+                                     remat=True, unembed=False)
+                return chunked_cross_entropy(hidden, batch["labels"], params,
+                                             cfg)
+            logits, _ = fwd(params, batch)
+            return cross_entropy(logits, batch["labels"])
+
+        return Model(
+            cfg=cfg,
+            init=functools.partial(ssm.init_params, cfg=cfg),
+            forward=fwd,
+            loss_fn=loss_fn,
+            prefill=lambda params, batch, **kw: ssm.prefill(params, cfg,
+                                                            batch["tokens"]),
+            decode_step=lambda params, tok, cache: ssm.decode_step(
+                params, cfg, tok, cache),
+            init_cache=functools.partial(ssm.init_cache, cfg),
+            input_specs=lambda shape: _token_specs(shape, cfg),
+        )
+
+    # -------------------------------------------------------------- hybrid
+    if fam == "hybrid":
+        def fwd(params, batch):
+            return (rglru.forward(params, cfg, batch["tokens"],
+                                  attention_impl=attention_impl,
+                                  remat=remat),
+                    jnp.zeros((), jnp.float32))
+
+        def loss_fn(params, batch):
+            if remat:
+                hidden = rglru.forward(params, cfg, batch["tokens"],
+                                       attention_impl=attention_impl,
+                                       remat=True, unembed=False)
+                return chunked_cross_entropy(hidden, batch["labels"], params,
+                                             cfg)
+            logits, _ = fwd(params, batch)
+            return cross_entropy(logits, batch["labels"])
+
+        return Model(
+            cfg=cfg,
+            init=functools.partial(rglru.init_params, cfg=cfg),
+            forward=fwd,
+            loss_fn=loss_fn,
+            prefill=lambda params, batch, **kw: rglru.prefill(params, cfg,
+                                                              batch["tokens"], **kw),
+            decode_step=lambda params, tok, cache: rglru.decode_step(
+                params, cfg, tok, cache),
+            init_cache=functools.partial(rglru.init_cache, cfg),
+            input_specs=lambda shape: _token_specs(shape, cfg),
+        )
+
+    # ----------------------------------------------------------------- vlm
+    if fam == "vlm":
+        def specs(shape: InputShape) -> Dict[str, Any]:
+            out = _token_specs(shape, cfg)
+            if shape.kind != "decode":
+                # stubbed vision tower output (ViT patches after projector)
+                out["image_embeds"] = jax.ShapeDtypeStruct(
+                    (shape.global_batch, cfg.n_image_tokens, cfg.d_model),
+                    cfg.jnp_dtype)
+            return out
+
+        def fwd(params, batch):
+            return vlm.forward(params, cfg, batch["tokens"],
+                               batch.get("image_embeds"),
+                               attention_impl=attention_impl,
+                               return_aux=True, remat=remat)
+
+        def loss_fn(params, batch):
+            B, S_txt = batch["tokens"].shape
+            mask = vlm.text_loss_mask(cfg, B, S_txt)
+            pad = jnp.zeros((B, cfg.n_image_tokens), batch["labels"].dtype)
+            labels = jnp.concatenate([pad, batch["labels"]], axis=1)
+            if remat:
+                hidden, aux = vlm.forward(params, cfg, batch["tokens"],
+                                          batch.get("image_embeds"),
+                                          attention_impl=attention_impl,
+                                          return_aux=True, remat=True,
+                                          unembed=False)
+                return chunked_cross_entropy(hidden, labels, params, cfg,
+                                             mask=mask) + AUX_COEF * aux
+            logits, aux = fwd(params, batch)
+            return cross_entropy(logits, labels, mask) + AUX_COEF * aux
+
+        return Model(
+            cfg=cfg,
+            init=functools.partial(vlm.init_params, cfg=cfg),
+            forward=fwd,
+            loss_fn=loss_fn,
+            prefill=lambda params, batch, **kw: vlm.prefill(
+                params, cfg, batch["tokens"], batch.get("image_embeds"),
+                attention_impl=attention_impl, **kw),
+            decode_step=lambda params, tok, cache: vlm.decode_step(
+                params, cfg, tok, cache),
+            init_cache=functools.partial(vlm.init_cache, cfg),
+            input_specs=specs,
+        )
+
+    # --------------------------------------------------------------- audio
+    if fam == "audio":
+        def specs(shape: InputShape) -> Dict[str, Any]:
+            out = _token_specs(shape, cfg)
+            if shape.kind != "decode":
+                # stubbed conv-frontend output (mel frames -> embeddings)
+                out["frames"] = jax.ShapeDtypeStruct(
+                    (shape.global_batch, cfg.encoder_seq, cfg.d_model),
+                    cfg.jnp_dtype)
+            return out
+
+        def fwd(params, batch):
+            return (encdec.forward(params, cfg, batch["tokens"],
+                                   batch["frames"], remat=remat),
+                    jnp.zeros((), jnp.float32))
+
+        def loss_fn(params, batch):
+            if remat:
+                hidden = encdec.forward(params, cfg, batch["tokens"],
+                                        batch["frames"],
+                                        attention_impl=attention_impl,
+                                        remat=True, unembed=False)
+                return chunked_cross_entropy(hidden, batch["labels"], params,
+                                             cfg)
+            logits, _ = fwd(params, batch)
+            return cross_entropy(logits, batch["labels"])
+
+        return Model(
+            cfg=cfg,
+            init=functools.partial(encdec.init_params, cfg=cfg),
+            forward=fwd,
+            loss_fn=loss_fn,
+            prefill=lambda params, batch, **kw: encdec.prefill(
+                params, cfg, batch["tokens"], batch["frames"], **kw),
+            decode_step=lambda params, tok, cache: encdec.decode_step(
+                params, cfg, tok, cache),
+            init_cache=functools.partial(encdec.init_cache, cfg),
+            input_specs=specs,
+        )
+
+    raise ValueError(f"unknown family {fam!r}")

@@ -1,0 +1,172 @@
+"""Mixture-of-Experts FFN (qwen3-moe / granite-moe families).
+
+Top-k routing with capacity-bucketed one-hot dispatch (Mesh/Flaxformer
+lineage): tokens are processed in groups of ``group_size`` so the dispatch
+tensor [G, E, C] stays VMEM-scale; expert weights shard over the `model`
+mesh axis (expert parallelism) and the dispatch/combine einsums lower to the
+all-to-all the roofline analysis tracks.
+
+Two dispatch implementations:
+  * "einsum"  — baseline one-hot matmul dispatch (this file's default);
+  * "gather"  — beyond-paper optimization used by the perf hillclimb
+    (EXPERIMENTS.md §Perf): index-gather dispatch that removes the one-hot
+    matmul FLOPs.
+
+The router's per-expert load statistics are exported via an auxiliary output
+so the serving layer can feed them to NALAR's global controller as telemetry
+(DESIGN.md §4: router load-balance feeds the control plane).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+
+def init_moe_layer(rng, cfg: ModelConfig) -> dict:
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.d_expert
+    k = jax.random.split(rng, 4)
+    s = (2.0 / (D + F)) ** 0.5
+    return {
+        "router": (jax.random.normal(k[0], (D, E)) * D ** -0.5).astype(jnp.float32),
+        "w_gate": (jax.random.normal(k[1], (E, D, F)) * s).astype(cfg.jnp_dtype),
+        "w_up": (jax.random.normal(k[2], (E, D, F)) * s).astype(cfg.jnp_dtype),
+        "w_down": (jax.random.normal(k[3], (E, F, D)) * s).astype(cfg.jnp_dtype),
+    }
+
+
+def _capacity(group: int, cfg: ModelConfig) -> int:
+    c = int(group * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(4, -(-c // 4) * 4)   # round up to a multiple of 4
+
+
+def _route(xg: jnp.ndarray, router: jnp.ndarray, cfg: ModelConfig):
+    """xg: [G, D] -> (gates [G,k], idx [G,k] int32, probs [G,E])."""
+    logits = xg.astype(jnp.float32) @ router
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)  # qwen3 renorm
+    return gates, idx, probs
+
+
+def _dispatch_masks(idx: jnp.ndarray, gates: jnp.ndarray, G: int, C: int,
+                    cfg: ModelConfig):
+    """Positions in per-expert buffers, k choices in priority order.
+
+    Returns dispatch [G,E,C] (0/1) and combine [G,E,C] (gated), plus the
+    per-expert assignment counts [E] (router telemetry).
+    """
+    E = cfg.n_experts
+    dt = cfg.jnp_dtype
+    counts = jnp.zeros((E,), jnp.int32)
+    dispatch = jnp.zeros((G, E, C), dt)
+    combine = jnp.zeros((G, E, C), jnp.float32)
+    for j in range(cfg.top_k):                     # static small loop
+        mask_j = jax.nn.one_hot(idx[:, j], E, dtype=jnp.int32)       # [G,E]
+        pos_j = jnp.cumsum(mask_j, axis=0) - 1 + counts[None, :]     # [G,E]
+        within = (pos_j < C) & (mask_j > 0)
+        oh = jax.nn.one_hot(jnp.where(within, pos_j, 0), C, dtype=dt)
+        oh = oh * within[:, :, None].astype(dt)                      # [G,E,C]
+        dispatch = dispatch + oh
+        combine = combine + oh.astype(jnp.float32) * gates[:, j, None, None]
+        counts = counts + jnp.sum(mask_j * within.astype(jnp.int32), axis=0)
+    return dispatch, combine, counts
+
+
+def _expert_ffn(xe: jnp.ndarray, p: dict, cfg: ModelConfig) -> jnp.ndarray:
+    """xe: [E, C, D] -> [E, C, D]."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+
+def _group_einsum(xg: jnp.ndarray, p: dict, cfg: ModelConfig):
+    G = xg.shape[0]
+    C = _capacity(G, cfg)
+    gates, idx, probs = _route(xg, p["router"], cfg)
+    dispatch, combine, counts = _dispatch_masks(idx, gates, G, C, cfg)
+    xe = jnp.einsum("gec,gd->ecd", dispatch, xg.astype(cfg.jnp_dtype))
+    ye = _expert_ffn(xe.astype(cfg.jnp_dtype), p, cfg)
+    y = jnp.einsum("gec,ecd->gd", combine.astype(ye.dtype), ye)
+    return y.astype(xg.dtype), probs, counts
+
+
+def _group_gather(xg: jnp.ndarray, p: dict, cfg: ModelConfig):
+    """Gather-based dispatch: same routing, no one-hot matmuls.
+
+    Builds per-expert row indices by sorting token-copies by expert id, then
+    uses take/segment-add instead of [G,E,C] einsums.
+    """
+    G, D = xg.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = _capacity(G, cfg)
+    gates, idx, probs = _route(xg, p["router"], cfg)
+    # flatten (token, choice) pairs; sort stably by expert id
+    flat_e = idx.reshape(-1)                                   # [G*k]
+    flat_t = jnp.repeat(jnp.arange(G), k)
+    flat_g = gates.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    # position within expert = rank - first_rank_of_expert
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.cumsum(counts) - counts                       # [E]
+    ranks = jnp.arange(G * k)
+    pos = ranks - starts[se]
+    within = pos < C
+    # destination slot in the [E*C] buffer
+    slot = jnp.where(within, se * C + pos, E * C)              # E*C = dropped
+    buf = jnp.zeros((E * C + 1, D), cfg.jnp_dtype)
+    buf = buf.at[slot].set(xg[st].astype(cfg.jnp_dtype))
+    xe = buf[:-1].reshape(E, C, D)
+    ye = _expert_ffn(xe, p, cfg)
+    # combine: token t accumulates gate * ye[slot]
+    ye_flat = jnp.concatenate([ye.reshape(E * C, D),
+                               jnp.zeros((1, D), ye.dtype)])
+    contrib = ye_flat[slot] * (sg * within).astype(ye.dtype)[:, None]
+    y = jnp.zeros((G, D), ye.dtype).at[st].add(contrib)
+    return y.astype(xg.dtype), probs, counts.astype(jnp.int32)
+
+
+def load_balance_loss(probs: jnp.ndarray, counts: jnp.ndarray,
+                      cfg: ModelConfig) -> jnp.ndarray:
+    """Switch-style aux loss: E * <f_e> . <p_e>."""
+    E = cfg.n_experts
+    frac = counts.astype(jnp.float32) / jnp.maximum(jnp.sum(counts), 1)
+    mean_p = jnp.mean(probs, axis=0)
+    return E * jnp.sum(frac * mean_p)
+
+
+def moe_block(x: jnp.ndarray, p: dict, cfg: ModelConfig,
+              group_size: int = 2048, impl: str = "einsum"):
+    """x: [B,S,D] -> (y, aux_loss, expert_counts [E])."""
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+    G = min(group_size, T)
+    if T % G != 0:   # pad to a whole number of groups
+        pad = G - T % G
+        xt = jnp.concatenate([xt, jnp.zeros((pad, D), xt.dtype)])
+    n_groups = xt.shape[0] // G
+    xg = xt.reshape(n_groups, G, D)
+    fn = _group_gather if impl == "gather" else _group_einsum
+
+    if n_groups == 1:
+        y, probs, counts = fn(xg[0], p, cfg)
+        y = y[None]
+        aux = load_balance_loss(probs, counts, cfg)
+    else:
+        # vmap (NOT lax.map): a loop's dynamic_slice over the data-sharded
+        # group dim makes GSPMD all-gather the whole token tensor per group
+        # iteration (§Perf iter 2b); vmap keeps groups shard-local.
+        y, probs, counts = jax.vmap(
+            functools.partial(fn, p=p, cfg=cfg))(xg)
+        aux = load_balance_loss(probs.reshape(-1, cfg.n_experts),
+                                jnp.sum(counts, axis=0), cfg)
+        counts = jnp.sum(counts, axis=0)
+    y = y.reshape(-1, D)[:T].reshape(B, S, D)
+    return y, aux, counts

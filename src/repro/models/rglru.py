@@ -1,0 +1,397 @@
+"""RecurrentGemma / Griffin hybrid — arXiv:2402.19427.
+
+Layer pattern (period 3): two *recurrent blocks* then one *local sliding-
+window attention* block.  A recurrent block is:
+
+    norm -> [branch A: linear -> causal conv(4) -> RG-LRU]
+            [branch B: linear -> GeLU]
+            A * B -> linear out
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          input gate
+    a_t = exp(c * r_t * log sigmoid(Lam)) = sigmoid(Lam)^(c*r_t),  c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill evaluates the recurrence with ``jax.lax.associative_scan``
+(first-order linear recurrences compose associatively), which is the
+TPU-native adaptation of the paper's custom GPU scan kernel; decode is a
+single fused update with O(1) state.  The sequence dim stays unsharded for
+the scan — state/width shards over `model` (see distributed/sharding.py).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+
+_C_RGLRU = 8.0
+
+
+# ----------------------------------------------------------------- RG-LRU
+def init_rglru(rng, cfg: ModelConfig) -> dict:
+    W = cfg.rglru_width or cfg.d_model
+    k = jax.random.split(rng, 2)
+    s = (1.0 / W) ** 0.5
+    # Lambda init so that a = sigmoid(Lam) in (0.9, 0.999) (paper init)
+    u = jax.random.uniform(k[0], (W,), minval=0.9, maxval=0.999)
+    lam = jnp.log(u / (1 - u))
+    return {
+        "w_a": (jax.random.normal(k[0], (W, W)) * s).astype(cfg.jnp_dtype),
+        "b_a": jnp.zeros((W,), cfg.jnp_dtype),
+        "w_x": (jax.random.normal(k[1], (W, W)) * s).astype(cfg.jnp_dtype),
+        "b_x": jnp.zeros((W,), cfg.jnp_dtype),
+        "lam": lam.astype(jnp.float32),
+    }
+
+
+def _rglru_gates(x: jnp.ndarray, p: dict) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (log_a [B,S,W] <=0, gated input [B,S,W]) in f32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ p["w_x"].astype(jnp.float32) + p["b_x"].astype(jnp.float32))
+    log_a = _C_RGLRU * r * jax.nn.log_sigmoid(p["lam"])[None, None, :]
+    a2 = jnp.exp(2.0 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i * xf)
+    return log_a, gated
+
+
+def rglru_scan(x: jnp.ndarray, p: dict, h0: Optional[jnp.ndarray] = None,
+               impl: str = "associative") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence RG-LRU.  x: [B,S,W].  Returns (y [B,S,W], h_S [B,W])."""
+    log_a, gated = _rglru_gates(x, p)
+    if impl == "pallas":
+        from ..kernels.rglru_scan.ops import rglru_scan_fused
+        y = rglru_scan_fused(jnp.exp(log_a), gated, h0)
+        return y.astype(x.dtype), y[:, -1].astype(jnp.float32)
+    a = jnp.exp(log_a)
+    if h0 is not None:
+        # fold the carried state into the first step's input
+        gated = gated.at[:, 0].add(a[:, 0] * h0)
+    # h_t = a_t h_{t-1} + b_t  ==  associative combine (a, b)
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(x: jnp.ndarray, p: dict, h: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token update.  x: [B,1,W], h: [B,W] f32."""
+    log_a, gated = _rglru_gates(x, p)
+    a = jnp.exp(log_a[:, 0])
+    h_new = a * h + gated[:, 0]
+    return h_new.astype(x.dtype)[:, None, :], h_new
+
+
+# -------------------------------------------------------- recurrent block
+def init_recurrent_block(rng, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    W = cfg.rglru_width or D
+    K = cfg.ssm_conv
+    k = jax.random.split(rng, 4)
+    s = lambda i, o: (2.0 / (i + o)) ** 0.5
+    return {
+        "norm": L.init_norm(cfg),
+        "w_rnn_in": (jax.random.normal(k[0], (D, W)) * s(D, W)).astype(cfg.jnp_dtype),
+        "w_gate_in": (jax.random.normal(k[1], (D, W)) * s(D, W)).astype(cfg.jnp_dtype),
+        "conv_w": (jax.random.normal(k[2], (K, W)) * 0.2).astype(cfg.jnp_dtype),
+        "conv_b": jnp.zeros((W,), cfg.jnp_dtype),
+        "rglru": init_rglru(k[3], cfg),
+        "w_out": (jax.random.normal(k[3], (W, D)) * s(W, D)).astype(cfg.jnp_dtype),
+        "mlp_norm": L.init_norm(cfg),
+        "mlp": L.init_mlp(jax.random.fold_in(rng, 7), cfg),
+    }
+
+
+def _conv_step(x: jnp.ndarray, conv_state: jnp.ndarray, w: jnp.ndarray,
+               b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token causal conv via ring state [B, K-1, W]."""
+    window = jnp.concatenate([conv_state, x], axis=1)
+    out = jnp.einsum("bkc,kc->bc", window, w) + b
+    return out[:, None, :], window[:, 1:]
+
+
+def recurrent_block(x: jnp.ndarray, p: dict, cfg: ModelConfig,
+                    conv_state=None, h_state=None, single_step: bool = False,
+                    rglru_impl: str = "associative"):
+    """Returns (x_out, new_conv_state, new_h_state)."""
+    h = L.apply_norm(x, p["norm"], cfg)
+    rnn_in = h @ p["w_rnn_in"]
+    gate = jax.nn.gelu(h @ p["w_gate_in"])
+    if single_step:
+        conv_out, new_conv = _conv_step(rnn_in, conv_state, p["conv_w"], p["conv_b"])
+        y, new_h = rglru_step(conv_out, p["rglru"], h_state)
+    else:
+        K = p["conv_w"].shape[0]
+        S = rnn_in.shape[1]
+        conv_out = sum(jnp.pad(rnn_in, ((0, 0), (K - 1, 0), (0, 0)))
+                       [:, i:i + S, :] * p["conv_w"][i] for i in range(K))
+        conv_out = conv_out + p["conv_b"]
+        y, new_h = rglru_scan(conv_out, p["rglru"], h0=h_state, impl=rglru_impl)
+        new_conv = jnp.pad(rnn_in, ((0, 0), (max(0, K - 1 - S), 0), (0, 0)))[:, -(K - 1):]
+    out = (y * gate) @ p["w_out"]
+    x = x + out
+    h2 = L.apply_norm(x, p["mlp_norm"], cfg)
+    x = x + L.mlp_block(h2, p["mlp"], cfg)
+    return x, new_conv, new_h
+
+
+# ------------------------------------------------------------ full model
+def _layer_kinds(cfg: ModelConfig) -> list:
+    """'r' or 'a' per layer: every `period`-th layer (1-based) is attention."""
+    period = cfg.hybrid_period
+    return ["a" if (i + 1) % period == 0 else "r" for i in range(cfg.n_layers)]
+
+
+def init_params(rng, cfg: ModelConfig) -> dict:
+    kinds = _layer_kinds(cfg)
+    ke, kr, ka = jax.random.split(rng, 3)
+    rec_idx = [i for i, k in enumerate(kinds) if k == "r"]
+    att_idx = [i for i, k in enumerate(kinds) if k == "a"]
+    rec_rngs = jax.random.split(kr, max(len(rec_idx), 1))
+    att_rngs = jax.random.split(ka, max(len(att_idx), 1))
+
+    def init_attn_layer(r):
+        k1, k2 = jax.random.split(r)
+        return {
+            "attn_norm": L.init_norm(cfg),
+            "attn": L.init_attention(k1, cfg),
+            "mlp_norm": L.init_norm(cfg),
+            "mlp": L.init_mlp(k2, cfg),
+        }
+
+    return {
+        "embed": L.init_embedding(ke, cfg),
+        "rec_layers": jax.vmap(lambda r: init_recurrent_block(r, cfg))(rec_rngs),
+        "att_layers": jax.vmap(init_attn_layer)(att_rngs),
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def _take(tree, i):
+    return jax.tree_util.tree_map(lambda a: a[i], tree)
+
+
+def _group_layout(cfg: ModelConfig):
+    """(rec_per_group, n_groups, n_tail): layers = n_groups x ((p-1) rec +
+    1 attn) followed by n_tail trailing rec layers."""
+    p = cfg.hybrid_period
+    rpg = p - 1
+    ng = cfg.n_layers // p
+    n_tail = cfg.n_layers - ng * p
+    return rpg, ng, n_tail
+
+
+def _group_params(params: dict, cfg: ModelConfig):
+    """Slice the stacked per-kind params into scan-able group stacks.
+
+    rec slot j of group g is rec_layers[g*rpg + j]; scanning over groups
+    (instead of Python-unrolling 38 layers) keeps the HLO depth-independent
+    — recurrentgemma-9b train compile drops ~4x (EXPERIMENTS.md §Scale).
+    """
+    rpg, ng, n_tail = _group_layout(cfg)
+    recs = tuple(jax.tree_util.tree_map(lambda a: a[j:ng * rpg:rpg],
+                                        params["rec_layers"])
+                 for j in range(rpg))
+    attn = jax.tree_util.tree_map(lambda a: a[:ng], params["att_layers"])
+    tail = jax.tree_util.tree_map(lambda a: a[ng * rpg:],
+                                  params["rec_layers"])
+    return recs, attn, tail
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+            attention_impl: str = "xla", remat: bool = False,
+            unembed: bool = True) -> jnp.ndarray:
+    x = L.embed(tokens, params["embed"]).astype(cfg.jnp_dtype)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    rpg, ng, n_tail = _group_layout(cfg)
+    recs, attn, tail = _group_params(params, cfg)
+
+    def attn_sub(x, p):
+        h = L.apply_norm(x, p["attn_norm"], cfg)
+        x = x + L.attention_block(h, p["attn"], cfg, positions,
+                                  window=cfg.sliding_window,
+                                  attention_impl=attention_impl)
+        h = L.apply_norm(x, p["mlp_norm"], cfg)
+        return x + L.mlp_block(h, p["mlp"], cfg)
+
+    def group_body(x, xs):
+        rec_ps, attn_p = xs[:-1], xs[-1]
+        for rp in rec_ps:
+            x, _, _ = recurrent_block(x, rp, cfg)
+        return attn_sub(x, attn_p)
+
+    if remat:
+        group_body = jax.checkpoint(group_body)
+
+    def group(x, xs):
+        return group_body(x, xs), None
+
+    if ng:
+        x, _ = jax.lax.scan(group, x, (*recs, attn))
+    if n_tail:
+        x, _ = jax.lax.scan(lambda x, rp: (recurrent_block(x, rp, cfg)[0],
+                                           None), x, tail)
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    return L.unembed(x, params["embed"], cfg) if unembed else x
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    kinds = _layer_kinds(cfg)
+    n_rec = kinds.count("r")
+    n_att = kinds.count("a")
+    W = cfg.rglru_width or cfg.d_model
+    K = cfg.ssm_conv
+    window = min(cfg.sliding_window or max_seq, max_seq)
+    return {
+        "conv": jnp.zeros((n_rec, batch, K - 1, W), cfg.jnp_dtype),
+        "h": jnp.zeros((n_rec, batch, W), jnp.float32),
+        "k": jnp.zeros((n_att, batch, window, cfg.n_kv_heads, cfg.head_dim_),
+                       cfg.jnp_dtype),
+        "v": jnp.zeros((n_att, batch, window, cfg.n_kv_heads, cfg.head_dim_),
+                       cfg.jnp_dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+            attention_impl: str = "xla",
+            pad_cache_to: Optional[int] = None) -> Tuple[jnp.ndarray, dict]:
+    x = L.embed(tokens, params["embed"]).astype(cfg.jnp_dtype)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    Wn = cfg.sliding_window
+    C = min(S, Wn) if Wn else S
+    rpg, ng, n_tail = _group_layout(cfg)
+    recs, attn, tail = _group_params(params, cfg)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    mask = L.causal_mask(S, S, 0, Wn)
+
+    def attn_sub(x, p):
+        h = L.apply_norm(x, p["attn_norm"], cfg)
+        q, k, v = L.attention_qkv(h, p["attn"], cfg, positions)
+        o = L.full_attention(q, L.repeat_kv(k, n_rep), L.repeat_kv(v, n_rep),
+                             causal=True, window=Wn,
+                             scale=cfg.head_dim_ ** -0.5,
+                             impl=attention_impl)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"])
+        h = L.apply_norm(x, p["mlp_norm"], cfg)
+        x = x + L.mlp_block(h, p["mlp"], cfg)
+        kc, vc = k[:, -C:], v[:, -C:]
+        if Wn:
+            shift = S % C
+            kc = jnp.roll(kc, shift, axis=1)
+            vc = jnp.roll(vc, shift, axis=1)
+        return x, kc, vc
+
+    def group(x, xs):
+        rec_ps, attn_p = xs[:-1], xs[-1]
+        convs, hs = [], []
+        for rp in rec_ps:
+            x, conv_st, h_st = recurrent_block(x, rp, cfg)
+            convs.append(conv_st)
+            hs.append(h_st)
+        x, kc, vc = attn_sub(x, attn_p)
+        return x, (jnp.stack(convs, 0), jnp.stack(hs, 0), kc, vc)
+
+    if ng:
+        x, (conv_g, h_g, ks, vs) = jax.lax.scan(group, x, (*recs, attn))
+        # [ng, rpg, ...] -> layer order [ng*rpg, ...]
+        conv_flat = conv_g.reshape(-1, *conv_g.shape[2:])
+        h_flat = h_g.reshape(-1, *h_g.shape[2:])
+    else:
+        B = x.shape[0]
+        W = cfg.rglru_width or cfg.d_model
+        conv_flat = jnp.zeros((0, B, cfg.ssm_conv - 1, W), cfg.jnp_dtype)
+        h_flat = jnp.zeros((0, B, W), jnp.float32)
+        ks = vs = jnp.zeros((0, x.shape[0], C, cfg.n_kv_heads,
+                             cfg.head_dim_), cfg.jnp_dtype)
+    if n_tail:
+        def tail_step(x, rp):
+            x, conv_st, h_st = recurrent_block(x, rp, cfg)
+            return x, (conv_st, h_st)
+
+        x, (conv_t, h_t) = jax.lax.scan(tail_step, x, tail)
+        conv_flat = jnp.concatenate([conv_flat, conv_t])
+        h_flat = jnp.concatenate([h_flat, h_t])
+    x = L.apply_norm(x[:, -1:], params["final_norm"], cfg)
+    logits = L.unembed(x[:, 0], params["embed"], cfg)
+    ks_s, vs_s = L.pad_cache_seq(ks, vs, C, Wn, pad_cache_to)
+    cache = {
+        "conv": conv_flat, "h": h_flat,
+        "k": ks_s, "v": vs_s,
+        "pos": jnp.full((tokens.shape[0],), S, jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, token: jnp.ndarray,
+                cache: dict) -> Tuple[jnp.ndarray, dict]:
+    B = token.shape[0]
+    pos = jnp.broadcast_to(cache["pos"], (B,))
+    x = L.embed(token[:, None], params["embed"]).astype(cfg.jnp_dtype)
+    positions = pos[:, None]
+    Wn = cfg.sliding_window
+    rpg, ng, n_tail = _group_layout(cfg)
+    recs, attn, tail = _group_params(params, cfg)
+    # cache layout: conv/h rows [g*rpg + j] for group g slot j, tail at end
+    conv_g = cache["conv"][:ng * rpg].reshape(ng, rpg, *cache["conv"].shape[1:])
+    h_g = cache["h"][:ng * rpg].reshape(ng, rpg, *cache["h"].shape[1:])
+    conv_tail = cache["conv"][ng * rpg:]
+    h_tail = cache["h"][ng * rpg:]
+
+    def group(x, xs):
+        rec_ps = xs[:rpg]
+        attn_p, conv_in, h_in, ck, cv = xs[rpg:]
+        convs, hs = [], []
+        for j, rp in enumerate(rec_ps):
+            x, conv_st, h_st = recurrent_block(
+                x, rp, cfg, conv_state=conv_in[j], h_state=h_in[j],
+                single_step=True)
+            convs.append(conv_st)
+            hs.append(h_st)
+        h = L.apply_norm(x, attn_p["attn_norm"], cfg)
+        q, k, v = L.attention_qkv(h, attn_p["attn"], cfg, positions)
+        ck, cv = L.kv_cache_update(ck, cv, k, v, pos, Wn)
+        o = L.decode_attention(q, ck, cv, pos, cfg, window=Wn)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, attn_p["attn"]["wo"])
+        h = L.apply_norm(x, attn_p["mlp_norm"], cfg)
+        x = x + L.mlp_block(h, attn_p["mlp"], cfg)
+        return x, (jnp.stack(convs, 0), jnp.stack(hs, 0), ck, cv)
+
+    if ng:
+        x, (conv_og, h_og, ks, vs) = jax.lax.scan(
+            group, x, (*recs, attn, conv_g, h_g, cache["k"], cache["v"]))
+        conv_flat = conv_og.reshape(-1, *conv_og.shape[2:])
+        h_flat = h_og.reshape(-1, *h_og.shape[2:])
+    else:
+        conv_flat = cache["conv"][:0]
+        h_flat = cache["h"][:0]
+        ks, vs = cache["k"], cache["v"]
+    if n_tail:
+        def tail_step(x, xs):
+            rp, conv_in, h_in = xs
+            x, conv_st, h_st = recurrent_block(
+                x, rp, cfg, conv_state=conv_in, h_state=h_in,
+                single_step=True)
+            return x, (conv_st, h_st)
+
+        x, (conv_t, h_t) = jax.lax.scan(tail_step, x,
+                                        (tail, conv_tail, h_tail))
+        conv_flat = jnp.concatenate([conv_flat, conv_t])
+        h_flat = jnp.concatenate([h_flat, h_t])
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    logits = L.unembed(x[:, 0], params["embed"], cfg)
+    return logits, {
+        "conv": conv_flat, "h": h_flat,
+        "k": ks, "v": vs, "pos": pos + 1,
+    }

@@ -1,0 +1,265 @@
+"""Mamba2 (state-space duality / SSD) — arXiv:2405.21060.
+
+Block: in_proj -> (z | x | B | C | dt), causal depthwise conv over (x,B,C),
+SSD mixing, gated RMSNorm, out_proj.  The SSD computation uses the chunked
+dual form: quadratic attention-like mixing within chunks + a linear state
+recurrence across chunks, which is both the paper's algorithm and the
+TPU-friendly layout (chunk = MXU tile work, recurrence = small scan).
+
+Decode keeps O(1) state per layer: conv ring buffer + SSM state [H, P, N]
+— the reason long_500k runs natively on this family.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+
+
+def init_block(rng, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    din = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.n_ssm_heads
+    K = cfg.ssm_conv
+    conv_dim = din + 2 * N
+    k = jax.random.split(rng, 4)
+    s = lambda i, o: (2.0 / (i + o)) ** 0.5
+    return {
+        "norm": L.init_norm(cfg),
+        # order: [z (din) | x (din) | B (N) | C (N) | dt (H)]
+        "in_proj": (jax.random.normal(k[0], (D, 2 * din + 2 * N + H))
+                    * s(D, din)).astype(cfg.jnp_dtype),
+        "conv_w": (jax.random.normal(k[1], (K, conv_dim)) * 0.2).astype(cfg.jnp_dtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.jnp_dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gate_norm": jnp.ones((din,), cfg.jnp_dtype),
+        "out_proj": (jax.random.normal(k[2], (din, D))
+                     * s(din, D)).astype(cfg.jnp_dtype),
+    }
+
+
+def init_params(rng, cfg: ModelConfig) -> dict:
+    ke, kl = jax.random.split(rng)
+    layer_rngs = jax.random.split(kl, cfg.n_layers)
+    return {
+        "embed": L.init_embedding(ke, cfg),
+        "layers": jax.vmap(lambda r: init_block(r, cfg))(layer_rngs),
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv.  x: [B,S,C], w: [K,C]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _segsum(log_a: jnp.ndarray) -> jnp.ndarray:
+    """log_a: [..., Q] per-step log decays -> [..., Q, Q] lower-tri cumulative
+    log products: out[i,j] = sum_{j < m <= i} log_a[m] (=-inf for j > i)."""
+    Q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # sum_(j,i]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int,
+                init_state: jnp.ndarray = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD dual form.
+
+    x:  [B,S,H,P]   inputs per head
+    dt: [B,S,H]     softplus'd step sizes (>0)
+    A:  [H]         negative decay rates
+    Bm: [B,S,N]     input projections (single group, broadcast over H)
+    Cm: [B,S,N]     output projections
+    Returns y: [B,S,H,P], final_state: [B,H,P,N].
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    S_orig = S
+    if S % Q:
+        # ragged tail: pad with identity steps (dt=0 -> decay=1, no input)
+        pad = Q - S % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+    # A is a *positive* rate; per-step decay = exp(-dt*A), log decay <= 0.
+    log_a = -dtc * A[None, None, None, :]
+
+    # within-chunk (attention-like) term
+    Lmat = jnp.exp(_segsum(jnp.transpose(log_a, (0, 1, 3, 2))))  # [B,nc,H,Q,Q]
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)               # [B,nc,Q,Q]
+    M = scores[:, :, None] * Lmat                                # [B,nc,H,Q,Q]
+    y_intra = jnp.einsum("bchij,bcjh,bcjhp->bcihp", M.astype(x.dtype),
+                         dtc.astype(x.dtype), xc)
+
+    # per-chunk summary state: S_c = sum_j decay(j->end) * dt_j x_j B_j^T
+    a_cum = jnp.cumsum(log_a, axis=2)                            # [B,nc,Q,H]
+    a_total = a_cum[:, :, -1:, :]                                # [B,nc,1,H]
+    decay_to_end = jnp.exp(a_total - a_cum)                      # [B,nc,Q,H]
+    state_c = jnp.einsum("bcjh,bcjh,bcjhp,bcjn->bchpn",
+                         decay_to_end.astype(jnp.float32),
+                         dtc, xc.astype(jnp.float32), Bc.astype(jnp.float32))
+
+    # recurrence across chunks
+    a_tot = jnp.exp(a_total[:, :, 0, :])                          # [B,nc,H]
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def step(carry, inp):
+        a_c, s_c = inp                                            # [B,H], [B,H,P,N]
+        new = carry * a_c[:, :, None, None] + s_c
+        return new, carry                                         # emit state *entering* the chunk
+
+    final, states_in = jax.lax.scan(
+        step, init_state,
+        (jnp.moveaxis(a_tot, 1, 0), jnp.moveaxis(state_c, 1, 0)))
+    states_in = jnp.moveaxis(states_in, 0, 1)                     # [B,nc,H,P,N]
+
+    # inter-chunk contribution: y_i += C_i . (decay(start->i) * S_in)
+    decay_from_start = jnp.exp(a_cum)                             # [B,nc,Q,H]
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp",
+                         Cc.astype(jnp.float32), states_in,
+                         decay_from_start)
+    y = (y_intra.astype(jnp.float32) + y_inter).reshape(Bsz, S, H, P)
+    return y[:, :S_orig].astype(x.dtype), final
+
+
+def _block_inner(x: jnp.ndarray, p: dict, cfg: ModelConfig,
+                 conv_state=None, ssm_state=None, single_step: bool = False):
+    """Shared by train/prefill (full-seq) and decode (single token).
+
+    Returns (y, new_conv_state, new_ssm_state).
+    """
+    Bsz, S, D = x.shape
+    din, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    P = cfg.ssm_head_dim
+    proj = x @ p["in_proj"]
+    z, xbc_dt = jnp.split(proj, [din], axis=-1)
+    xbcd, dt_raw = jnp.split(xbc_dt, [din + 2 * N], axis=-1)
+
+    K = cfg.ssm_conv
+    if single_step:
+        # conv ring: conv_state [B, K-1, din+2N] holds previous inputs
+        window = jnp.concatenate([conv_state, xbcd], axis=1)       # [B,K,conv]
+        conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+        conv_out = jax.nn.silu(conv_out)[:, None, :]
+        new_conv_state = window[:, 1:]
+    else:
+        conv_out = _causal_conv(xbcd, p["conv_w"], p["conv_b"])
+        new_conv_state = jnp.pad(
+            xbcd, ((0, 0), (max(0, K - 1 - S), 0), (0, 0)))[:, -(K - 1):]
+
+    xs, Bm, Cm = jnp.split(conv_out, [din, din + N], axis=-1)
+    xs = xs.reshape(Bsz, -1, H, P)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = jnp.exp(p["A_log"])                                        # positive rates
+
+    if single_step:
+        # recurrent update: state' = exp(-dt A) state + dt * x B^T
+        st = ssm_state                                             # [B,H,P,N]
+        decay = jnp.exp(-dt[:, 0, :] * A[None, :])                 # [B,H]
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0, :],
+                         xs[:, 0].astype(jnp.float32),
+                         Bm[:, 0].astype(jnp.float32))
+        new_state = st * decay[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32),
+                       new_state)[:, None]                          # [B,1,H,P]
+        y = y.astype(x.dtype)
+    else:
+        y, new_state = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk,
+                                   init_state=ssm_state)
+    y = y + xs * p["D_skip"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(Bsz, -1, din)
+    y = L.rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], new_conv_state, new_state
+
+
+# ----------------------------------------------------------------- training
+def forward(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+            attention_impl: str = "xla", remat: bool = False,
+            unembed: bool = True) -> jnp.ndarray:
+    x = L.embed(tokens, params["embed"]).astype(cfg.jnp_dtype)
+
+    def blk(carry, layer_p):
+        h = L.apply_norm(carry, layer_p["norm"], cfg)
+        y, _, _ = _block_inner(h, layer_p, cfg)
+        return carry + y
+
+    if remat:
+        blk = jax.checkpoint(blk)
+
+    def step(carry, layer_p):
+        return blk(carry, layer_p), None
+
+    x, _ = jax.lax.scan(step, x, params["layers"])
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    return L.unembed(x, params["embed"], cfg) if unembed else x
+
+
+# ------------------------------------------------------------------ serving
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    din, N = cfg.d_inner, cfg.ssm_state
+    H, P, K = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_conv
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, K - 1, din + 2 * N),
+                          cfg.jnp_dtype),
+        "ssm": jnp.zeros((cfg.n_layers, batch, H, P, N), jnp.float32),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+            attention_impl: str = "xla") -> Tuple[jnp.ndarray, dict]:
+    x = L.embed(tokens, params["embed"]).astype(cfg.jnp_dtype)
+    S = x.shape[1]
+
+    def step(carry, layer_p):
+        h = L.apply_norm(carry, layer_p["norm"], cfg)
+        y, conv_st, ssm_st = _block_inner(h, layer_p, cfg)
+        return carry + y, (conv_st, ssm_st)
+
+    x, (conv_sts, ssm_sts) = jax.lax.scan(step, x, params["layers"])
+    xl = L.apply_norm(x[:, -1:], params["final_norm"], cfg)
+    logits = L.unembed(xl[:, 0], params["embed"], cfg)
+    return logits, {"conv": conv_sts, "ssm": ssm_sts,
+                    "pos": jnp.full((tokens.shape[0],), S, jnp.int32)}
+
+
+def decode_step(params: dict, cfg: ModelConfig, token: jnp.ndarray,
+                cache: dict) -> Tuple[jnp.ndarray, dict]:
+    x = L.embed(token[:, None], params["embed"]).astype(cfg.jnp_dtype)
+
+    def step(carry, xs):
+        layer_p, conv_st, ssm_st = xs
+        h = L.apply_norm(carry, layer_p["norm"], cfg)
+        y, conv_st, ssm_st = _block_inner(h, layer_p, cfg, conv_st, ssm_st,
+                                          single_step=True)
+        return carry + y, (conv_st, ssm_st)
+
+    x, (conv_sts, ssm_sts) = jax.lax.scan(
+        step, x, (params["layers"], cache["conv"], cache["ssm"]))
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    logits = L.unembed(x[:, 0], params["embed"], cfg)
+    return logits, {"conv": conv_sts, "ssm": ssm_sts, "pos": cache["pos"] + 1}

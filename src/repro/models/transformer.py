@@ -1,0 +1,184 @@
+"""Dense decoder-only transformer (qwen3 / stablelm-2 / starcoder2 families).
+
+Layer-stacked parameters + ``jax.lax.scan`` keep the HLO size independent of
+depth (94-layer configs compile in seconds).  Also the backbone for the VLM
+config (phi-3-vision consumes precomputed patch embeddings).
+"""
+
+from __future__ import annotations
+
+import functools
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from . import moe as M
+
+
+def init_layer(rng, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(rng)
+    return {
+        "attn_norm": L.init_norm(cfg),
+        "attn": L.init_attention(k1, cfg),
+        "mlp_norm": L.init_norm(cfg),
+        "mlp": (M.init_moe_layer(k2, cfg) if cfg.n_experts > 0
+                else L.init_mlp(k2, cfg)),
+    }
+
+
+def _ffn(x: jnp.ndarray, layer_p: dict, cfg: ModelConfig,
+         moe_impl: str = "einsum"):
+    """FFN sub-block: dense MLP or MoE.  Returns (y, aux_loss)."""
+    if cfg.n_experts > 0:
+        y, aux, _counts = M.moe_block(x, layer_p["mlp"], cfg, impl=moe_impl)
+        return y, aux
+    return L.mlp_block(x, layer_p["mlp"], cfg), jnp.zeros((), jnp.float32)
+
+
+def init_params(rng, cfg: ModelConfig) -> dict:
+    ke, kl = jax.random.split(rng)
+    layer_rngs = jax.random.split(kl, cfg.n_layers)
+    return {
+        "embed": L.init_embedding(ke, cfg),
+        "layers": jax.vmap(lambda r: init_layer(r, cfg))(layer_rngs),
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def _block(x: jnp.ndarray, p: dict, *, cfg: ModelConfig,
+           positions: jnp.ndarray, attention_impl: str,
+           moe_impl: str = "einsum"):
+    h = L.apply_norm(x, p["attn_norm"], cfg)
+    x = x + L.attention_block(h, p["attn"], cfg, positions,
+                              window=cfg.sliding_window,
+                              attention_impl=attention_impl)
+    h = L.apply_norm(x, p["mlp_norm"], cfg)
+    y, aux = _ffn(h, p, cfg, moe_impl)
+    return x + y, aux
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: Optional[jnp.ndarray],
+            inputs_embeds: Optional[jnp.ndarray] = None,
+            attention_impl: str = "xla", moe_impl: str = "einsum",
+            return_aux: bool = False, remat: bool = False,
+            unembed: bool = True):
+    """Training/prefill forward.  Returns logits [B, S, V] (+ MoE aux loss);
+    ``unembed=False`` returns the final hidden states instead (the chunked
+    cross-entropy path never materializes full logits).
+
+    ``remat=True`` checkpoints each layer (recompute-in-backward): live
+    activations drop from O(L x per-layer internals) to O(L x boundaries) +
+    one layer's internals — required for the production train shapes to fit
+    HBM (EXPERIMENTS.md §Perf iteration 5)."""
+    x = inputs_embeds if inputs_embeds is not None else L.embed(tokens, params["embed"])
+    x = x.astype(cfg.jnp_dtype)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    blk = functools.partial(_block, cfg=cfg, positions=positions,
+                            attention_impl=attention_impl, moe_impl=moe_impl)
+    if remat:
+        blk = jax.checkpoint(blk)
+
+    def step(carry, layer_p):
+        x, aux = carry
+        x, a = blk(x, layer_p)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    out = x if not unembed else L.unembed(x, params["embed"], cfg)
+    if return_aux:
+        return out, aux / max(cfg.n_layers, 1)
+    return out
+
+
+# --------------------------------------------------------------- serving
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    C = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+    shape = (cfg.n_layers, batch, C, cfg.n_kv_heads, cfg.head_dim_)
+    return {
+        "k": jnp.zeros(shape, cfg.jnp_dtype),
+        "v": jnp.zeros(shape, cfg.jnp_dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),   # per-seq next position
+    }
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+            inputs_embeds: Optional[jnp.ndarray] = None,
+            attention_impl: str = "xla", moe_impl: str = "einsum",
+            pad_cache_to: Optional[int] = None) -> Tuple[jnp.ndarray, dict]:
+    """Process the full prompt; returns (last-token logits [B,V], cache).
+
+    ``pad_cache_to`` adds decode headroom to the returned KV cache (the
+    prefill cache is otherwise exactly prompt-sized and the first decoded
+    token would overwrite the last prompt slot)."""
+    x = inputs_embeds if inputs_embeds is not None else L.embed(tokens, params["embed"])
+    x = x.astype(cfg.jnp_dtype)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    W = cfg.sliding_window
+    C = min(S, W) if W else S
+
+    def step(carry, layer_p):
+        x = carry
+        h = L.apply_norm(x, layer_p["attn_norm"], cfg)
+        q, k, v = L.attention_qkv(h, layer_p["attn"], cfg, positions)
+        n_rep = cfg.n_heads // cfg.n_kv_heads
+        scale = cfg.head_dim_ ** -0.5
+        o = L.full_attention(q, L.repeat_kv(k, n_rep), L.repeat_kv(v, n_rep),
+                             causal=True, window=W, scale=scale,
+                             impl=attention_impl)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, layer_p["attn"]["wo"])
+        h = L.apply_norm(x, layer_p["mlp_norm"], cfg)
+        y, _aux = _ffn(h, layer_p, cfg, moe_impl)
+        x = x + y
+        # keep the last C positions, ring-aligned so that slot = pos % C
+        kc, vc = k[:, -C:], v[:, -C:]
+        if W:
+            shift = S % C
+            kc = jnp.roll(kc, shift, axis=1)
+            vc = jnp.roll(vc, shift, axis=1)
+        return x, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(step, x, params["layers"])
+    x = L.apply_norm(x[:, -1:], params["final_norm"], cfg)
+    logits = L.unembed(x[:, 0], params["embed"], cfg)
+    ks, vs = L.pad_cache_seq(ks, vs, C, W, pad_cache_to)
+    cache = {"k": ks, "v": vs, "pos": jnp.full((B,), S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, token: jnp.ndarray,
+                cache: dict, attention_impl: str = "xla",
+                moe_impl: str = "einsum") -> Tuple[jnp.ndarray, dict]:
+    """One token ([B] int32) against the KV cache.  Returns (logits, cache)."""
+    B = token.shape[0]
+    pos = jnp.broadcast_to(cache["pos"], (B,))
+    x = L.embed(token[:, None], params["embed"]).astype(cfg.jnp_dtype)
+    positions = pos[:, None]
+    W = cfg.sliding_window
+
+    def step(carry, xs):
+        x = carry
+        layer_p, ck, cv = xs
+        h = L.apply_norm(x, layer_p["attn_norm"], cfg)
+        q, k, v = L.attention_qkv(h, layer_p["attn"], cfg, positions)
+        ck, cv = L.kv_cache_update(ck, cv, k, v, pos, W)
+        o = L.decode_attention(q, ck, cv, pos, cfg, window=W,
+                               impl=attention_impl)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, layer_p["attn"]["wo"])
+        h = L.apply_norm(x, layer_p["mlp_norm"], cfg)
+        y, _aux = _ffn(h, layer_p, cfg, moe_impl)
+        x = x + y
+        return x, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(step, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    logits = L.unembed(x[:, 0], params["embed"], cfg)
+    return logits, {"k": ks, "v": vs, "pos": pos + 1}

@@ -1,0 +1,61 @@
+"""VLM backbone (phi-3-vision) — the language decoder that consumes stubbed
+vision embeddings.
+
+Per the assignment carve-out, the CLIP/SigLIP vision tower + projector are a
+STUB: ``input_specs`` provides precomputed patch embeddings [B, T_img, D].
+This module fuses them with text-token embeddings (image prefix + text, the
+phi-3-vision interleave simplified to a single leading image) and defers to
+the dense transformer backbone for everything else — including the KV cache,
+whose image-prefix pages are exactly the session state NALAR's K,V registry
+manages (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from . import transformer as T
+
+init_params = T.init_params
+init_cache = T.init_cache
+
+
+def fuse(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+         image_embeds: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """[B,S_txt] tokens + [B,T_img,D] patch embeddings -> [B,T_img+S_txt,D]."""
+    tok = L.embed(tokens, params["embed"]).astype(cfg.jnp_dtype)
+    if image_embeds is None:
+        return tok
+    return jnp.concatenate([image_embeds.astype(cfg.jnp_dtype), tok], axis=1)
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+            image_embeds: Optional[jnp.ndarray] = None,
+            attention_impl: str = "xla", return_aux: bool = False,
+            remat: bool = False, unembed: bool = True):
+    x = fuse(params, cfg, tokens, image_embeds)
+    return T.forward(params, cfg, None, inputs_embeds=x,
+                     attention_impl=attention_impl, return_aux=return_aux,
+                     remat=remat, unembed=unembed)
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+            image_embeds: Optional[jnp.ndarray] = None,
+            attention_impl: str = "xla", **kw) -> Tuple[jnp.ndarray, dict]:
+    x = fuse(params, cfg, tokens, image_embeds)
+    return T.prefill(params, cfg, None, inputs_embeds=x,
+                     attention_impl=attention_impl, **kw)
+
+
+decode_step = T.decode_step   # decode is text-only once the prefix is cached
+
+
+def text_loss_mask(cfg: ModelConfig, batch: int, text_len: int) -> jnp.ndarray:
+    """Loss positions: only text tokens train (image prefix is masked)."""
+    img = jnp.zeros((batch, cfg.n_image_tokens), bool)
+    txt = jnp.ones((batch, text_len), bool)
+    return jnp.concatenate([img, txt], axis=1)

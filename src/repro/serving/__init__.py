@@ -1,0 +1,8 @@
+from .batching import Request, WaitQueue, bucket_len
+from .engine import EngineMetrics, InferenceEngine, get_slot, set_slot
+from .kv_cache import PagedKVPool, SessionPages, StateCachePool
+from .sampler import SamplingParams, sample
+
+__all__ = ["EngineMetrics", "InferenceEngine", "PagedKVPool", "Request",
+           "SamplingParams", "SessionPages", "StateCachePool", "WaitQueue",
+           "bucket_len", "get_slot", "sample", "set_slot"]

@@ -1,0 +1,81 @@
+"""Continuous-batching scheduler for the inference engine.
+
+Admission: priority first, then FCFS (NALAR's local controllers can reorder
+by installing a different comparator — the same LocalSchedule idea applied
+to the engine's waiting queue).  Prompt lengths are padded to power-of-two
+buckets so prefill compiles a bounded set of shapes.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from .sampler import SamplingParams
+
+_req_ids = itertools.count()
+
+
+@dataclass
+class Request:
+    request_id: str
+    session_id: str
+    prompt: np.ndarray                       # [S] int32
+    sampling: SamplingParams
+    extras: Dict[str, np.ndarray] = field(default_factory=dict)
+    priority: float = 0.0
+    submitted_at: float = 0.0
+    # filled during execution
+    generated: List[int] = field(default_factory=list)
+    finished: bool = False
+    first_token_at: float = -1.0
+    finished_at: float = -1.0
+    prefix_reused_tokens: int = 0
+
+    @staticmethod
+    def make(prompt, session_id: str = "", sampling: Optional[SamplingParams] = None,
+             priority: float = 0.0, now: float = 0.0, **extras) -> "Request":
+        return Request(
+            request_id=f"req{next(_req_ids)}",
+            session_id=session_id or f"sess-req{next(_req_ids)}",
+            prompt=np.asarray(prompt, np.int32),
+            sampling=sampling or SamplingParams(),
+            extras={k: np.asarray(v) for k, v in extras.items()},
+            priority=priority,
+            submitted_at=now,
+        )
+
+
+def bucket_len(n: int, minimum: int = 16) -> int:
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+class WaitQueue:
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._items: List[Request] = []
+        self.order_key: Callable[[Request], Any] = (
+            lambda r: (-r.priority, r.submitted_at))
+
+    def push(self, req: Request) -> None:
+        with self._lock:
+            self._items.append(req)
+
+    def pop_next(self) -> Optional[Request]:
+        with self._lock:
+            if not self._items:
+                return None
+            best = min(self._items, key=self.order_key)
+            self._items.remove(best)
+            return best
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._items)

@@ -1,0 +1,309 @@
+"""JAX inference engine: slot-based continuous batching over any zoo model.
+
+The engine is the "LLM serving backend" of the reproduction (the vLLM role
+in the paper's stack).  One engine instance = one NALAR agent instance; the
+engine exports queue/latency telemetry and consumes KVRegistry hints via its
+cache pool, which is precisely the LMCache-hook integration of §4.3.2.
+
+Execution model:
+  * ``max_batch`` slots share a stacked per-slot cache (model.init_cache);
+  * admission pulls from a priority wait-queue; a new request either
+    resumes its session's cache from the pool (prefix reuse — the paper's
+    motivating win for session stickiness/migration) or runs prefill;
+  * each ``step()`` runs one batched decode for every active slot;
+  * finished sessions write their cache back to the pool so follow-up
+    requests in the same session skip recomputation.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models.model import Model
+from .batching import Request, WaitQueue, bucket_len
+from .kv_cache import PagedKVPool, StateCachePool
+from .sampler import SamplingParams, sample
+
+
+@dataclass
+class EngineMetrics:
+    queued: int = 0
+    active: int = 0
+    completed: int = 0
+    decode_steps: int = 0
+    prefills: int = 0
+    prefix_hits: int = 0
+    tokens_generated: int = 0
+    prefill_tokens: int = 0
+
+
+def _cache_slot_axis(key: str) -> int:
+    return 0 if key == "pos" else 1
+
+
+def set_slot(cache: dict, slot: int, row: dict) -> dict:
+    """Insert a single sequence's cache (batch dim 1) into batch slot.
+
+    Row caches produced by bucketed prefill can be shorter in the seq dim
+    than the slot cache; they are zero-padded at the end (consistent with
+    the ring layout: prefill caches are unrolled when S <= window).
+    """
+    out = {}
+    for k, v in cache.items():
+        ax = _cache_slot_axis(k)
+        r = row[k]
+        r = jnp.squeeze(r, axis=ax) if r.ndim == v.ndim else r
+        target = tuple(s for i, s in enumerate(v.shape) if i != ax)
+        if tuple(r.shape) != target:
+            pads = [(0, t - s) for s, t in zip(r.shape, target)]
+            if any(p[1] < 0 for p in pads):
+                raise ValueError(f"row cache leaf {k}: {r.shape} exceeds "
+                                 f"slot shape {target}")
+            r = jnp.pad(r, pads)
+        idx = [slice(None)] * v.ndim
+        idx[ax] = slot
+        out[k] = v.at[tuple(idx)].set(r)
+    return out
+
+
+def get_slot(cache: dict, slot: int) -> dict:
+    out = {}
+    for k, v in cache.items():
+        ax = _cache_slot_axis(k)
+        out[k] = jnp.expand_dims(jnp.take(v, slot, axis=ax), axis=ax)
+    return out
+
+
+class InferenceEngine:
+    def __init__(self, model: Model, params: dict, *, max_batch: int = 8,
+                 max_seq: int = 512, instance_id: str = "engine:0",
+                 kv_registry=None, pool_pages: int = 0,
+                 page_size: int = 64, rng_seed: int = 0) -> None:
+        self.model = model
+        self.cfg: ModelConfig = model.cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.instance_id = instance_id
+        self.kv_registry = kv_registry
+        self.metrics = EngineMetrics()
+        self.queue = WaitQueue()
+        self._rng = jax.random.PRNGKey(rng_seed)
+        self._lock = threading.RLock()
+
+        # per-slot state
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.cache = model.init_cache(max_batch, max_seq)
+        self._active_mask = np.zeros(max_batch, bool)
+
+        # session cache pool (paged KV for attention families, O(1) state
+        # for ssm/hybrid) + NALAR hint hook
+        if self.cfg.family == "ssm":
+            self.pool: Any = StateCachePool(self.cfg)
+        elif self.cfg.family == "hybrid":
+            self.pool = StateCachePool(self.cfg)
+        else:
+            n_pages = pool_pages or (max_batch * (max_seq // page_size + 1) * 2)
+            self.pool = PagedKVPool(self.cfg, n_pages=n_pages,
+                                    page_size=page_size)
+        if kv_registry is not None:
+            kv_registry.register_hook(instance_id, self.pool.on_hint)
+
+        self._decode_fn = jax.jit(model.decode_step)
+        self._prefill_cache: Dict[int, Callable] = {}
+
+    # ----------------------------------------------------------- submission
+    def submit(self, req: Request) -> str:
+        self.queue.push(req)
+        return req.request_id
+
+    def generate(self, prompt, session_id: str = "",
+                 sampling: Optional[SamplingParams] = None,
+                 **extras) -> Request:
+        """Synchronous helper: submit + run until this request finishes."""
+        req = Request.make(prompt, session_id=session_id, sampling=sampling,
+                           now=time.monotonic(), **extras)
+        self.submit(req)
+        while not req.finished:
+            self.step()
+        return req
+
+    # ------------------------------------------------------------ admission
+    def _prefill(self, req: Request):
+        S = len(req.prompt)
+        bucket = min(bucket_len(S), self.max_seq)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, -S:] = req.prompt      # left-pad so last position is real
+        batch = {"tokens": jnp.asarray(toks)}
+        for k, v in req.extras.items():
+            batch[k] = jnp.asarray(v[None] if v.ndim == 2 else v)
+        if bucket not in self._prefill_cache:
+            self._prefill_cache[bucket] = jax.jit(self.model.prefill)
+        logits, row_cache = self._prefill_cache[bucket](self.params, batch)
+        self.metrics.prefills += 1
+        self.metrics.prefill_tokens += S
+        return logits, row_cache
+
+    def _try_resume(self, req: Request):
+        """Prefix reuse: restore this session's cache from the pool."""
+        if isinstance(self.pool, StateCachePool):
+            payload = self.pool.load(req.session_id)
+            if payload is None:
+                return None
+            state, tokens = payload
+            return state, tokens
+        got = self.pool.gather_contiguous(req.session_id, self.max_seq)
+        if got is None:
+            return None
+        k, v, tokens = got
+        C = self.cache["k"].shape[2]
+        pad = C - k.shape[1]
+        if pad < 0:
+            return None
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))[:, None]
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))[:, None]
+        row = dict(self.cache.__class__() if False else {})
+        row = {key: None for key in self.cache}
+        row["k"], row["v"] = k, v
+        row["pos"] = jnp.asarray([tokens], jnp.int32)
+        for key in self.cache:
+            if row.get(key) is None:   # xk/xv etc.: zeros
+                ax = _cache_slot_axis(key)
+                shp = list(self.cache[key].shape)
+                shp[ax] = 1
+                row[key] = jnp.zeros(shp, self.cache[key].dtype)
+        return row, tokens
+
+    def _admit(self) -> None:
+        now = time.monotonic()
+        for slot in range(self.max_batch):
+            if self._active_mask[slot]:
+                continue
+            req = self.queue.pop_next()
+            if req is None:
+                return
+            resumed = None
+            if req.session_id:
+                resumed = self._try_resume(req)
+            if resumed is not None and not isinstance(self.pool, PagedKVPool):
+                # SSM/hybrid: resumed state + run prompt incrementally is
+                # equivalent to prefill; simplest correct path: prefill anyway
+                resumed = None
+            if resumed is not None:
+                row_cache, tokens = resumed
+                req.prefix_reused_tokens = tokens
+                self.metrics.prefix_hits += 1
+                # feed the prompt as additional decode steps (short suffix)
+                self.cache = set_slot(self.cache, slot, row_cache)
+                self.slots[slot] = req
+                self._active_mask[slot] = True
+                self._pending_prompt = getattr(self, "_pending_prompt", {})
+                self._pending_prompt[slot] = list(req.prompt)
+            else:
+                logits, row_cache = self._prefill(req)
+                tok = int(np.asarray(sample(logits, req.sampling, self._next_rng()))[0])
+                req.generated.append(tok)
+                req.first_token_at = now
+                self.cache = set_slot(self.cache, slot, row_cache)
+                self.slots[slot] = req
+                self._active_mask[slot] = True
+            if self.kv_registry is not None:
+                self.kv_registry.touch(req.session_id, self.instance_id,
+                                       len(req.prompt), now)
+
+    # ----------------------------------------------------------------- step
+    def _next_rng(self) -> jax.Array:
+        self._rng, sub = jax.random.split(self._rng)
+        return sub
+
+    def step(self) -> int:
+        """Admit + one batched decode step.  Returns #active sequences."""
+        with self._lock:
+            self._admit()
+            active = [i for i in range(self.max_batch) if self._active_mask[i]]
+            if not active:
+                self.metrics.queued = len(self.queue)
+                return 0
+            tokens = np.zeros((self.max_batch,), np.int32)
+            pending = getattr(self, "_pending_prompt", {})
+            for i in active:
+                req = self.slots[i]
+                if i in pending and pending[i]:
+                    tokens[i] = pending[i].pop(0)
+                    if not pending[i]:
+                        del pending[i]
+                else:
+                    tokens[i] = req.generated[-1] if req.generated else 0
+            logits, self.cache = self._decode_fn(self.params,
+                                                 jnp.asarray(tokens),
+                                                 self.cache)
+            self.metrics.decode_steps += 1
+            sampled = sample(logits, SamplingParams(), self._next_rng())
+            now = time.monotonic()
+            for i in active:
+                req = self.slots[i]
+                if i in pending:     # still consuming a resumed prompt
+                    continue
+                tok = int(np.asarray(sampled)[i])
+                if req.sampling.temperature > 0:
+                    tok = int(np.asarray(sample(
+                        logits[i:i + 1], req.sampling, self._next_rng()))[0])
+                if req.generated and req.first_token_at < 0:
+                    req.first_token_at = now
+                req.generated.append(tok)
+                self.metrics.tokens_generated += 1
+                done = (len(req.generated) >= req.sampling.max_new_tokens
+                        or tok == req.sampling.eos_token)
+                pos_i = int(np.asarray(self.cache["pos"])[i])
+                if pos_i >= self.max_seq - 1:
+                    done = True
+                if done:
+                    self._finish_slot(i, now)
+            self.metrics.queued = len(self.queue)
+            self.metrics.active = int(self._active_mask.sum())
+            return len(active)
+
+    def _finish_slot(self, slot: int, now: float) -> None:
+        req = self.slots[slot]
+        req.finished = True
+        req.finished_at = now
+        self.metrics.completed += 1
+        # persist session cache for prefix reuse on follow-ups
+        if req.session_id:
+            row = get_slot(self.cache, slot)
+            tokens = int(np.asarray(row["pos"])[0])
+            if isinstance(self.pool, PagedKVPool):
+                k = row["k"][:, 0, :tokens]
+                v = row["v"][:, 0, :tokens]
+                if tokens <= self.max_seq:
+                    self.pool.write_session(req.session_id, k, v, tokens, now)
+            else:
+                self.pool.store(req.session_id,
+                                jax.tree_util.tree_map(lambda x: x, row),
+                                tokens)
+            if self.kv_registry is not None:
+                self.kv_registry.touch(req.session_id, self.instance_id,
+                                       tokens, now)
+        self.slots[slot] = None
+        self._active_mask[slot] = False
+
+    # ------------------------------------------------------------ telemetry
+    def run_until_idle(self, max_steps: int = 100_000) -> None:
+        for _ in range(max_steps):
+            if self.step() == 0 and len(self.queue) == 0:
+                return
+
+    def telemetry(self) -> Dict[str, float]:
+        m = self.metrics
+        return {"queued": m.queued, "active": m.active,
+                "completed": m.completed, "decode_steps": m.decode_steps,
+                "prefills": m.prefills, "prefix_hits": m.prefix_hits,
+                "tokens_generated": m.tokens_generated}

@@ -1,0 +1,247 @@
+"""Paged K,V cache pool with per-session page tables (TPU adaptation of
+vLLM's PagedAttention + the paper's LMCache control hooks, §4.3.2).
+
+Design (DESIGN.md §2): pages are sized to TPU-friendly multiples in the
+KV-length dimension; the pool is one HBM-resident array per layer stack
+[L, n_pages, page, Hkv, Dh].  Sessions own page lists; NALAR's KVRegistry
+drives retention (`retain`), eviction (`drop`), offload (`far`) and
+migration — the engine consults those hints instead of blind LRU, which is
+exactly the paper's remedy for "generic eviction heuristics that discard
+caches about to be reused".
+
+The pool also exposes ``gather_contiguous`` to materialize a sequence's
+cache into the dense per-slot layout the XLA decode path uses, and the page
+table format the Pallas paged-attention kernel consumes.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+
+
+@dataclass
+class SessionPages:
+    session_id: str
+    pages: List[int] = field(default_factory=list)
+    tokens: int = 0                  # valid tokens across pages
+    pinned: bool = False             # retain hint from the global controller
+    offloaded: bool = False          # "far memory" (host) residency
+    last_used: float = 0.0
+
+
+class PagedKVPool:
+    """One pool per engine instance.
+
+    The pool stores K and V as [L, n_pages, page_size, Hkv, Dh].  On real
+    TPU hardware this lives in HBM; pages are the granularity of both
+    eviction and session migration (the paper's K,V migration maps to
+    copying a session's page list between instances' pools).
+    """
+
+    def __init__(self, cfg: ModelConfig, n_pages: int, page_size: int = 128,
+                 dtype=None) -> None:
+        if cfg.family == "ssm":
+            raise ValueError("SSM caches are O(1); use StateCachePool")
+        self.cfg = cfg
+        self.page_size = page_size
+        self.n_pages = n_pages
+        shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads,
+                 cfg.head_dim_)
+        dt = dtype or cfg.jnp_dtype
+        self.k = jnp.zeros(shape, dt)
+        self.v = jnp.zeros(shape, dt)
+        self._free: List[int] = list(range(n_pages))
+        self._sessions: Dict[str, SessionPages] = {}
+        self._lock = threading.RLock()
+
+    # ---------------------------------------------------------- allocation
+    def pages_needed(self, tokens: int) -> int:
+        return -(-tokens // self.page_size)
+
+    def free_pages(self) -> int:
+        with self._lock:
+            return len(self._free)
+
+    def allocate(self, session_id: str, tokens: int, now: float = 0.0,
+                 evict: bool = True) -> Optional[SessionPages]:
+        """Reserve pages for ``tokens`` new tokens of a session."""
+        with self._lock:
+            sp = self._sessions.setdefault(session_id,
+                                           SessionPages(session_id))
+            have = len(sp.pages) * self.page_size
+            need_pages = self.pages_needed(max(0, sp.tokens + tokens - have))
+            while len(self._free) < need_pages:
+                if not evict or not self._evict_one(now):
+                    return None
+            for _ in range(need_pages):
+                sp.pages.append(self._free.pop())
+            sp.tokens += tokens
+            sp.last_used = now
+            return sp
+
+    def _evict_one(self, now: float) -> bool:
+        """Evict the LRU unpinned session (hint-aware, unlike vanilla LRU)."""
+        cands = [s for s in self._sessions.values() if s.pages and not s.pinned]
+        if not cands:
+            return False
+        victim = min(cands, key=lambda s: s.last_used)
+        self._release(victim)
+        return True
+
+    def _release(self, sp: SessionPages) -> None:
+        self._free.extend(sp.pages)
+        sp.pages = []
+        sp.tokens = 0
+        sp.offloaded = False
+
+    def release(self, session_id: str) -> None:
+        with self._lock:
+            sp = self._sessions.pop(session_id, None)
+            if sp is not None:
+                self._release(sp)
+
+    # ----------------------------------------------------------- hint hooks
+    def on_hint(self, session_id: str, hint: str) -> None:
+        """KVRegistry hook target (retain/drop/offload/migrate_*)."""
+        with self._lock:
+            sp = self._sessions.get(session_id)
+            if sp is None:
+                return
+            if hint == "retain":
+                sp.pinned = True
+            elif hint == "drop":
+                sp.pinned = False
+                self._release(sp)
+                self._sessions.pop(session_id, None)
+            elif hint == "offload":
+                sp.offloaded = True
+                sp.pinned = False
+            elif hint == "migrate_out":
+                # ownership moved away; free local pages
+                self._release(sp)
+                self._sessions.pop(session_id, None)
+            elif hint == "migrate_in":
+                pass  # pages arrive via export/import below
+
+    # ----------------------------------------------------------- migration
+    def export_session(self, session_id: str) -> Optional[Tuple[np.ndarray, np.ndarray, int]]:
+        """Serialize a session's K/V pages (the migration payload)."""
+        with self._lock:
+            sp = self._sessions.get(session_id)
+            if sp is None or not sp.pages:
+                return None
+            idx = jnp.asarray(sp.pages)
+            return (np.asarray(self.k[:, idx]), np.asarray(self.v[:, idx]),
+                    sp.tokens)
+
+    def import_session(self, session_id: str, payload, now: float = 0.0) -> bool:
+        kpages, vpages, tokens = payload
+        n = kpages.shape[1]
+        with self._lock:
+            while len(self._free) < n:
+                if not self._evict_one(now):
+                    return False
+            pages = [self._free.pop() for _ in range(n)]
+            idx = jnp.asarray(pages)
+            self.k = self.k.at[:, idx].set(jnp.asarray(kpages))
+            self.v = self.v.at[:, idx].set(jnp.asarray(vpages))
+            self._sessions[session_id] = SessionPages(
+                session_id, pages=pages, tokens=tokens, last_used=now)
+            return True
+
+    # ------------------------------------------------------------- reading
+    def session(self, session_id: str) -> Optional[SessionPages]:
+        with self._lock:
+            return self._sessions.get(session_id)
+
+    def page_table(self, session_id: str, max_pages: int) -> np.ndarray:
+        """Padded page table row for the Pallas paged-attention kernel."""
+        with self._lock:
+            sp = self._sessions.get(session_id)
+            pages = sp.pages if sp else []
+        row = np.full((max_pages,), -1, np.int32)
+        row[:len(pages)] = pages[:max_pages]
+        return row
+
+    def gather_contiguous(self, session_id: str, max_seq: int):
+        """Materialize [L, max_seq, Hkv, Dh] dense K/V for the XLA path."""
+        with self._lock:
+            sp = self._sessions.get(session_id)
+            if sp is None or not sp.pages:
+                return None
+            idx = jnp.asarray(sp.pages)
+            tokens = sp.tokens
+        L = self.cfg.n_layers
+        k = self.k[:, idx].reshape(L, -1, *self.k.shape[3:])[:, :max_seq]
+        v = self.v[:, idx].reshape(L, -1, *self.v.shape[3:])[:, :max_seq]
+        return k, v, tokens
+
+    def write_session(self, session_id: str, k_seq, v_seq, tokens: int,
+                      now: float = 0.0) -> bool:
+        """Store a sequence's dense K/V ([L, S, Hkv, Dh]) into pages."""
+        self.release(session_id)
+        sp = self.allocate(session_id, tokens, now)
+        if sp is None:
+            return False
+        P = self.page_size
+        pad = len(sp.pages) * P - k_seq.shape[1]
+        if pad:
+            padding = [(0, 0), (0, pad), (0, 0), (0, 0)]
+            k_seq = jnp.pad(k_seq, padding)
+            v_seq = jnp.pad(v_seq, padding)
+        idx = jnp.asarray(sp.pages)
+        kp = k_seq.reshape(self.cfg.n_layers, len(sp.pages), P,
+                           *k_seq.shape[2:])
+        vp = v_seq.reshape(self.cfg.n_layers, len(sp.pages), P,
+                           *v_seq.shape[2:])
+        with self._lock:
+            self.k = self.k.at[:, idx].set(kp)
+            self.v = self.v.at[:, idx].set(vp)
+        return True
+
+
+class StateCachePool:
+    """O(1)-state cache pool for SSM/hybrid sessions (conv + recurrent
+    state, plus the bounded sliding-window KV for hybrid attention layers).
+
+    Migration cost is tokens-independent — the property DESIGN.md calls out
+    as making NALAR-style session migration *cheaper* for these families.
+    """
+
+    def __init__(self, cfg: ModelConfig) -> None:
+        self.cfg = cfg
+        self._states: Dict[str, Tuple[dict, int]] = {}
+        self._lock = threading.RLock()
+
+    def store(self, session_id: str, state: dict, tokens: int) -> None:
+        with self._lock:
+            self._states[session_id] = (state, tokens)
+
+    def load(self, session_id: str) -> Optional[Tuple[dict, int]]:
+        with self._lock:
+            return self._states.get(session_id)
+
+    def release(self, session_id: str) -> None:
+        with self._lock:
+            self._states.pop(session_id, None)
+
+    def on_hint(self, session_id: str, hint: str) -> None:
+        if hint in ("drop", "migrate_out"):
+            self.release(session_id)
+
+    def export_session(self, session_id: str):
+        with self._lock:
+            return self._states.get(session_id)
+
+    def import_session(self, session_id: str, payload, now: float = 0.0) -> bool:
+        with self._lock:
+            self._states[session_id] = payload
+            return True

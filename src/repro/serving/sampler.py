@@ -1,0 +1,28 @@
+"""Token sampling."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0      # 0 = greedy
+    top_k: int = 0                # 0 = disabled
+    max_new_tokens: int = 32
+    eos_token: int = -1           # -1 = never stop early
+
+
+def sample(logits: jnp.ndarray, params: SamplingParams,
+           rng: jax.Array) -> jnp.ndarray:
+    """logits: [B, V] -> tokens [B]."""
+    if params.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / params.temperature
+    if params.top_k > 0:
+        kth = jax.lax.top_k(logits, params.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(rng, logits).astype(jnp.int32)

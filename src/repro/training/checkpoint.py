@@ -1,0 +1,81 @@
+"""Pytree checkpointing (msgpack + zstd).
+
+Layout: a single ``.ckpt`` file holding {treedef-repr, flat arrays}.  Arrays
+are serialized with dtype/shape headers; bf16 round-trips through uint16
+views (msgpack has no bf16).  Restoration validates structure against a
+template pytree, which is what makes NALAR-style retry-with-state safe: a
+resumed worker either gets exactly the structure it expects or fails loudly.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+
+def _encode_array(x: Any) -> Dict[str, Any]:
+    arr = np.asarray(x)
+    if arr.dtype == jnp.bfloat16:
+        return {"dtype": "bfloat16", "shape": list(arr.shape),
+                "data": arr.view(np.uint16).tobytes()}
+    return {"dtype": arr.dtype.str, "shape": list(arr.shape),
+            "data": arr.tobytes()}
+
+
+def _decode_array(d: Dict[str, Any]) -> np.ndarray:
+    shape = tuple(d["shape"])
+    if d["dtype"] == "bfloat16":
+        raw = np.frombuffer(d["data"], np.uint16).reshape(shape)
+        return raw.view(jnp.bfloat16)
+    return np.frombuffer(d["data"], np.dtype(d["dtype"])).reshape(shape)
+
+
+def save(path: str, tree: Any) -> int:
+    """Returns bytes written."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payload = {
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "leaves": [_encode_array(x) for x in leaves],
+    }
+    packed = msgpack.packb(payload, use_bin_type=True)
+    comp = zstandard.ZstdCompressor(level=3).compress(packed)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(comp)
+    os.replace(tmp, path)   # atomic
+    return len(comp)
+
+
+def restore(path: str, template: Any) -> Any:
+    with open(path, "rb") as f:
+        comp = f.read()
+    packed = zstandard.ZstdDecompressor().decompress(comp)
+    payload = msgpack.unpackb(packed, raw=False)
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    if payload["n_leaves"] != len(leaves):
+        raise ValueError(
+            f"checkpoint has {payload['n_leaves']} leaves; template expects "
+            f"{len(leaves)} — structure mismatch")
+    if payload["treedef"] != str(treedef):
+        raise ValueError("checkpoint treedef differs from template treedef")
+    out: List[np.ndarray] = []
+    for tpl, enc in zip(leaves, payload["leaves"]):
+        arr = _decode_array(enc)
+        tpl_arr = np.asarray(tpl) if not hasattr(tpl, "shape") else tpl
+        if tuple(arr.shape) != tuple(tpl_arr.shape):
+            raise ValueError(f"leaf shape {arr.shape} != template "
+                             f"{tuple(tpl_arr.shape)}")
+        out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def exists(path: str) -> bool:
+    return os.path.exists(path)

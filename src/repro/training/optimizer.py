@@ -1,0 +1,89 @@
+"""AdamW + schedules in pure JAX (no optax in this environment).
+
+The optimizer is a (init, update) pair over arbitrary pytrees, matching the
+optax calling convention so it can be swapped later.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable[[jnp.ndarray], jnp.ndarray]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+
+    def init(self, params: Any) -> AdamWState:
+        zeros = lambda p: jax.tree_util.tree_map(
+            lambda x: jnp.zeros_like(x, dtype=jnp.float32), p)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=zeros(params), nu=zeros(params))
+
+    def update(self, grads: Any, state: AdamWState,
+               params: Any) -> Tuple[Any, AdamWState]:
+        step = state.step + 1
+        if self.grad_clip is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        lr = self.learning_rate(step)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            mhat = m / c1
+            vhat = v / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:   # decay matrices only (norms/biases exempt)
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int,
+                    total_steps: int, min_ratio: float = 0.1):
+    def lr(step: jnp.ndarray) -> jnp.ndarray:
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = peak_lr * (min_ratio + (1 - min_ratio)
+                         * 0.5 * (1 + jnp.cos(math.pi * prog)))
+        return jnp.where(s < warmup_steps, warm, cos)
+
+    return lr
+
+
+def constant_schedule(lr_value: float):
+    return lambda step: jnp.asarray(lr_value, jnp.float32)

@@ -1,0 +1,110 @@
+"""Training loop: train_step factory, grad accumulation, metrics.
+
+``make_train_step(model, opt)`` returns the jit-able pure function the
+launcher and the multi-pod dry-run lower; ``train`` is the single-process
+driver used by tests and the end-to-end example (train a ~100M model for a
+few hundred steps on CPU).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+from .data import DataConfig, Syntheticcorpus, extra_inputs
+from .optimizer import AdamW, AdamWState, cosine_schedule, global_norm
+
+
+def make_train_step(model: Model, opt: AdamW,
+                    donate: bool = True) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state: AdamWState, batch):
+        loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        metrics = {
+            "loss": loss,
+            "grad_norm": global_norm(grads),
+            "lr": opt.learning_rate(new_state.step),
+        }
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_grad_accum_step(model: Model, opt: AdamW, n_micro: int) -> Callable:
+    """Micro-batched step: batch leading dim = n_micro * micro_batch."""
+
+    def step(params, opt_state, batch):
+        def micro(i):
+            return jax.tree_util.tree_map(
+                lambda x: jax.lax.dynamic_slice_in_dim(
+                    x, i * (x.shape[0] // n_micro), x.shape[0] // n_micro), batch)
+
+        def body(carry, i):
+            acc, loss_acc = carry
+            loss, grads = jax.value_and_grad(model.loss_fn)(params, micro(i))
+            acc = jax.tree_util.tree_map(jnp.add, acc, grads)
+            return (acc, loss_acc + loss), None
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss), _ = jax.lax.scan(
+            body, (zeros, jnp.zeros((), jnp.float32)), jnp.arange(n_micro))
+        grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        return new_params, new_state, {"loss": loss / n_micro,
+                                       "grad_norm": global_norm(grads),
+                                       "lr": opt.learning_rate(new_state.step)}
+
+    return step
+
+
+@dataclass
+class TrainResult:
+    losses: List[float] = field(default_factory=list)
+    steps: int = 0
+    wall_seconds: float = 0.0
+
+    @property
+    def first_loss(self) -> float:
+        return self.losses[0] if self.losses else float("nan")
+
+    @property
+    def last_loss(self) -> float:
+        return self.losses[-1] if self.losses else float("nan")
+
+
+def train(model: Model, *, steps: int, batch_size: int, seq_len: int,
+          peak_lr: float = 3e-4, warmup: int = 20, seed: int = 0,
+          log_every: int = 10,
+          log_fn: Optional[Callable[[int, Dict], None]] = None) -> Tuple[dict, TrainResult]:
+    """Single-process training driver (CPU-scale)."""
+    cfg = model.cfg
+    opt = AdamW(learning_rate=cosine_schedule(peak_lr, warmup, steps))
+    rng = jax.random.PRNGKey(seed)
+    params = model.init(rng)
+    opt_state = opt.init(params)
+    corpus = Syntheticcorpus(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq_len, global_batch=batch_size,
+        seed=seed))
+    step_fn = jax.jit(make_train_step(model, opt))
+    extras = extra_inputs(cfg, batch_size, seed)
+    result = TrainResult()
+    t0 = time.perf_counter()
+    for step in range(steps):
+        batch = dict(corpus.batch(step))
+        batch.update(extras)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        result.losses.append(loss)
+        if log_fn is not None and step % log_every == 0:
+            log_fn(step, {k: float(v) for k, v in metrics.items()})
+    result.steps = steps
+    result.wall_seconds = time.perf_counter() - t0
+    return params, result

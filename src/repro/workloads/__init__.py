@@ -1,0 +1,7 @@
+from .baselines import BASELINES, SystemConfig, system_config
+from .financial import run_financial
+from .router import run_router
+from .swe import run_swe
+
+__all__ = ["BASELINES", "SystemConfig", "run_financial", "run_router",
+           "run_swe", "system_config"]

@@ -1,0 +1,155 @@
+"""Financial Analyst workflow (paper §6, Fig. 9a).
+
+An analyst agent fans out to stock-analysis / bond-market / market-research
+/ news-search agents, then summarizes on a *shared, session-stateful* LLM
+engine.  Users issue follow-up queries in the same session (human-in-the-
+loop), so every framework must route follow-ups to the instance holding the
+session's K,V cache — except NALAR, whose K,V control lets it migrate the
+session away from head-of-line blocking (the Fig. 9a mechanism).
+
+Latency model: FinQA-style numeric-reasoning queries — prefill-heavy with
+heavy-tailed generation lengths (a few requests carry very large contexts),
+which is what creates the blocking the HoL policy mitigates.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Dict
+
+import math
+
+from ..core import (AgentSpec, Directives, FixedLatency, LLMLatency,
+                    LognormalLatency, NalarRuntime, emulated)
+from ..core.executor import LatencyModel
+from ..core.runtime import current_runtime
+from .baselines import SystemConfig
+
+
+class KVCacheLLMLatency(LatencyModel):
+    """LLM cost model with session K,V-cache reuse (§4.3.2).
+
+    Prefill pays only for tokens beyond the session's cached prefix *on the
+    executing instance*; the cache registry (NALAR's LMCache-hook layer)
+    tracks residency, so a migrated session keeps its discount while a
+    session bounced to a cold instance rebuilds from scratch — exactly the
+    stickiness/migration tension the paper's Fig. 9a exercises.
+    """
+
+    def __init__(self, registry, prefill_tps: float, decode_tps: float,
+                 base: float, jitter_sigma: float = 0.1) -> None:
+        self.registry = registry
+        self.prefill_tps = prefill_tps
+        self.decode_tps = decode_tps
+        self.base = base
+        self.jitter_sigma = jitter_sigma
+
+    def service_time(self, hints, rng) -> float:
+        total = 0.0
+        for h in hints:
+            sid, inst = h.get("session_id", ""), h.get("instance", "")
+            cached = self.registry.cached_tokens(sid, inst) if sid else 0
+            tin = max(0, h.get("in_tokens", 512) - cached)
+            tout = h.get("out_tokens", 128)
+            t = self.base + tin / self.prefill_tps + tout / self.decode_tps
+            if self.jitter_sigma:
+                t *= math.exp(rng.gauss(0.0, self.jitter_sigma))
+            total += t
+            if sid:
+                self.registry.touch(sid, inst,
+                                    h.get("in_tokens", 512) + tout,
+                                    h.get("now", 0.0))
+        return total
+
+
+def build_runtime(sys_cfg: SystemConfig, *, n_llm: int = 8,
+                  seed: int = 0) -> NalarRuntime:
+    rt = NalarRuntime(
+        simulate=True,
+        nodes={f"n{i}": {"GPU": 4, "CPU": 32} for i in range(2)},
+        policy=sys_cfg.policy,
+        control_interval=sys_cfg.control_interval,
+        seed=seed)
+    rt.router.mode = sys_cfg.router_mode
+
+    # shared LLM engine: session-sticky for baselines, migratable for NALAR;
+    # both get the K,V-cache prefill discount at the instance holding the
+    # session's cache
+    rt.register_agent(AgentSpec(
+        name="llm",
+        methods={"generate": emulated(
+            KVCacheLLMLatency(rt.kv_registry, prefill_tps=12000,
+                              decode_tps=120, base=0.08, jitter_sigma=0.15),
+            lambda prompt, **kw: f"summary({str(prompt)[:24]})")},
+        directives=Directives(
+            stateful=sys_cfg.sticky_sessions,
+            uses_managed_state=not sys_cfg.sticky_sessions,
+            max_instances=n_llm, resources={"GPU": 1}),
+    ), instances=n_llm)
+
+    for tool, med in (("stock", 0.35), ("bond", 0.3), ("research", 0.5),
+                      ("news", 0.6)):
+        rt.register_agent(AgentSpec(
+            name=tool,
+            methods={"query": emulated(LognormalLatency(med, 0.4),
+                                       lambda q, _t=tool: f"{_t}-data")},
+            directives=Directives(max_instances=4, resources={"CPU": 2}),
+        ), instances=2)
+    return rt
+
+
+def analyst_driver(query: str, in_tokens: int, out_tokens: int) -> str:
+    rt = current_runtime()
+    sub = [rt.stub(t).query(query, _hint={"graph_depth": 1,
+                                          "est_service": 0.4})
+           for t in ("stock", "bond", "research", "news")]
+    data = [f.value() for f in sub]
+    # est_service: the token counts make LLM service time predictable —
+    # exactly the signal SRTF-style policies consume (§6.2)
+    f = rt.stub("llm").generate(
+        (query, data), _hint={"in_tokens": in_tokens,
+                              "out_tokens": out_tokens,
+                              "graph_depth": 2,
+                              "est_service": 0.08 + in_tokens / 12000
+                              + out_tokens / 120})
+    return f.value()
+
+
+def run_financial(sys_cfg: SystemConfig, *, rps: float = 1.0,
+                  n_sessions: int = 25, followups: int = 5,
+                  seed: int = 0) -> Dict[str, float]:
+    """Poisson sessions, each issuing `followups+1` requests with think
+    time.  ~10% of requests are heavy (huge context) — the HoL source."""
+    rt = build_runtime(sys_cfg, seed=seed)
+    rng = random.Random(seed)
+    rt.start()
+
+    def request_driver(sid: str, k: int) -> None:
+        rng_local = random.Random(f"{sid}:{k}")
+        heavy = rng_local.random() < 0.08
+        in_tok = 24000 if heavy else rng_local.randint(600, 2400)
+        out_tok = 1600 if heavy else rng_local.randint(80, 300)
+        analyst_driver(f"q-{sid}-{k}", in_tok, out_tok)
+
+    def submit_chain(session: str, k: int, delay: float) -> None:
+        """Each follow-up is its own request (per-request latency metrics),
+        issued after user think time once the previous one returns."""
+        def done(_out, _err, s=session, kk=k):
+            if kk < followups:
+                think = random.Random(f"{s}:{kk}:t").uniform(0.5, 3.0)
+                rt.kernel.schedule(think, lambda: rt.submit_request(
+                    request_driver, s, kk + 1, session=s))
+
+        rt.submit_request(request_driver, session, k, session=session,
+                          delay=delay, on_done=done)
+
+    t = 0.0
+    for _ in range(n_sessions):
+        t += rng.expovariate(rps)
+        session = rt.sessions.new_session(priority=0.0).session_id
+        submit_chain(session, 0, t)
+    rt.run()
+    out = rt.telemetry.summary()
+    out["system"] = sys_cfg.name
+    out["rps"] = rps
+    return out

@@ -1,0 +1,131 @@
+"""Unit tests: futures, metadata, dependency extraction (paper §3.2, §4.3.1)."""
+
+import threading
+
+import pytest
+
+from repro.core import (AgentSpec, Directives, FixedLatency, FutureState,
+                        NalarRuntime, deployment, emulated)
+from repro.core.future import extract_dependencies, Future, FutureMetadata
+
+
+def make_rt(**kw):
+    return NalarRuntime(simulate=True, nodes={"n0": {"CPU": 32}}, **kw)
+
+
+def echo_agent(rt, name="echo", latency=0.1, instances=1):
+    return rt.register_agent(AgentSpec(
+        name=name,
+        methods={"run": emulated(FixedLatency(latency), lambda x: f"done:{x}")},
+        directives=Directives(max_instances=8, resources={"CPU": 1}),
+    ), instances=instances)
+
+
+def test_future_lifecycle_and_value():
+    rt = make_rt()
+    echo_agent(rt)
+
+    def driver():
+        f = rt.stub("echo").run("a")
+        assert not f.available          # Op 1 created, non-blocking
+        v = f.value()                   # Op 3 blocks
+        assert f.available
+        return v
+
+    out = deployment.main(driver, runtime=rt)
+    assert out == "done:a"
+
+
+def test_value_immutable_once_materialized():
+    rt = make_rt()
+    f = Future(rt, FutureMetadata())
+    f.materialize("x", now=0.0)
+    with pytest.raises(RuntimeError):
+        f.materialize("y", now=1.0)
+    assert f.value() == "x"
+
+
+def test_metadata_mutable_value_not():
+    rt = make_rt()
+    f = Future(rt, FutureMetadata(executor="a:0"))
+    f.meta.executor = "a:1"             # metadata is mutable (late binding)
+    f.meta.consumers.append("driver:r0")
+    assert f.meta.executor == "a:1"
+    f.materialize(1, now=0.0)
+    assert f.state == FutureState.READY
+
+
+def test_timeout():
+    rt = make_rt()
+    rt.register_agent(AgentSpec(
+        name="slow",
+        methods={"run": emulated(FixedLatency(10.0), lambda: 1)},
+        directives=Directives(resources={"CPU": 1}),
+    ), instances=1)
+
+    def driver():
+        f = rt.stub("slow").run()
+        with pytest.raises(TimeoutError):
+            f.value(timeout=1.0)
+        return f.value(timeout=60.0)    # eventually fine
+
+    assert deployment.main(driver, runtime=rt) == 1
+
+
+def test_dependency_extraction_nested():
+    rt = make_rt()
+    f1 = Future(rt, FutureMetadata())
+    f2 = Future(rt, FutureMetadata())
+    deps = extract_dependencies(
+        (f1, [1, f2], {"k": f1}), {"kw": (f2,), "plain": 3})
+    assert deps.count(f1.fid) == 2
+    assert deps.count(f2.fid) == 2
+
+
+def test_future_chaining_through_agents():
+    """A future passed as an argument defers execution until it's ready."""
+    rt = make_rt()
+    echo_agent(rt)
+
+    def driver():
+        f1 = rt.stub("echo").run("x")
+        f2 = rt.stub("echo").run(f1)    # depends on f1; value flows in
+        return f2.value()
+
+    out = deployment.main(driver, runtime=rt)
+    assert out == "done:done:x"
+    # dependency was recorded in metadata
+    futs = rt.futures.snapshot()
+    f2 = max(futs, key=lambda f: int(f.fid[1:]))
+    assert len(f2.meta.dependencies) == 1
+
+
+def test_failure_propagates_with_traceback():
+    rt = make_rt()
+    rt.register_agent(AgentSpec(
+        name="bad",
+        methods={"run": emulated(FixedLatency(0.01),
+                                 lambda: (_ for _ in ()).throw(ValueError("boom")))},
+        directives=Directives(resources={"CPU": 1}),
+    ), instances=1)
+
+    def driver():
+        return rt.stub("bad").run().value()
+
+    with pytest.raises(ValueError, match="boom"):
+        deployment.main(driver, runtime=rt)
+
+
+def test_parallel_futures_resolve_independently():
+    rt = make_rt()
+    echo_agent(rt, instances=4)
+
+    def driver():
+        fs = [rt.stub("echo").run(i) for i in range(8)]
+        # polling API: available is non-blocking
+        ready_before = sum(f.available for f in fs)
+        vals = [f.value() for f in fs]
+        return ready_before, vals
+
+    ready_before, vals = deployment.main(driver, runtime=rt)
+    assert vals == [f"done:{i}" for i in range(8)]

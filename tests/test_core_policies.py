@@ -1,0 +1,161 @@
+"""Policy-layer tests: Table 2 primitives + the §6.1/§6.2 policy library."""
+
+import pytest
+
+from repro.core import (AgentSpec, Directives, FixedLatency, LocalSchedule,
+                        LognormalLatency, NalarRuntime, PolicyChain,
+                        HoLMitigationPolicy, LoadBalancePolicy, LPTPolicy,
+                        LPTSchedule, ResourceReassignmentPolicy, SRTFPolicy,
+                        SRTFSchedule, default_policies, deployment, emulated)
+from repro.core.policy import ActionSink, ClusterView, InstanceView
+from repro.core.runtime import current_runtime
+
+
+def make_view(**instances):
+    view = ClusterView(now=10.0)
+    for iid, (agent_type, qsize, busy, eta) in instances.items():
+        iv = InstanceView(
+            instance_id=iid, agent_type=agent_type, node="n0", qsize=qsize,
+            busy=busy, busy_until=10.0 + eta if busy else 0.0,
+            ema_service=0.5, completed=0, failed=0, alive=True,
+            waiting_sessions=["s0"] if qsize else [])
+        view.instances[iid] = iv
+        view.by_type.setdefault(agent_type, []).append(iid)
+    return view
+
+
+def test_load_balance_weights_favor_idle():
+    view = make_view(a0=("svc", 5, True, 10.0), a1=("svc", 0, False, 0.0))
+    sink = ActionSink()
+    LoadBalancePolicy().step(view, sink)
+    (act,) = sink.actions
+    assert act.kind == "route_weighted"
+    w = dict(zip(act.payload["instances"], act.payload["weights"]))
+    assert w["a1"] > w["a0"]
+
+
+def test_hol_policy_migrates_waiting_session():
+    view = make_view(a0=("svc", 3, True, 30.0), a1=("svc", 0, False, 0.0))
+    sink = ActionSink()
+    HoLMitigationPolicy(wait_threshold=0.1).step(view, sink)
+    kinds = [a.kind for a in sink.actions]
+    assert "migrate" in kinds
+    mig = next(a for a in sink.actions if a.kind == "migrate")
+    assert mig.payload["src"] == "a0" and mig.payload["dst"] == "a1"
+
+
+def test_resource_reassignment_kills_cold_provisions_hot():
+    view = make_view(hot0=("hot", 10, True, 20.0),
+                     cold0=("cold", 0, False, 0.0),
+                     cold1=("cold", 0, False, 0.0))
+    sink = ActionSink()
+    ResourceReassignmentPolicy(hot=4.0, cold=0.25, cooldown=0).step(view, sink)
+    kinds = {a.kind for a in sink.actions}
+    assert kinds == {"kill", "provision"}
+    assert next(a for a in sink.actions
+                if a.kind == "provision").payload["agent_type"] == "hot"
+
+
+def test_srtf_schedule_orders_deeper_futures_first():
+    class F:
+        def __init__(self, depth, est, t):
+            self.meta = type("M", (), {})()
+            self.meta.work_hint = {"graph_depth": depth, "est_service": est}
+            self.meta.created_at = t
+            self.meta.priority = 0.0
+
+    s = SRTFSchedule()
+    futs = [F(0, 1.0, 0.0), F(2, 1.0, 1.0), F(1, 0.1, 2.0)]
+    ordered = sorted(futs, key=lambda f: s.order_key(f, 0.0))
+    assert [f.meta.work_hint["graph_depth"] for f in ordered] == [2, 1, 0]
+
+
+def test_lpt_schedule_orders_retries_first():
+    class F:
+        def __init__(self, retry, est, t):
+            self.meta = type("M", (), {})()
+            self.meta.work_hint = {"retry": retry, "est_service": est}
+            self.meta.created_at = t
+            self.meta.priority = 0.0
+
+    s = LPTSchedule()
+    futs = [F(0, 5.0, 0.0), F(2, 1.0, 1.0), F(0, 9.0, 2.0)]
+    ordered = sorted(futs, key=lambda f: s.order_key(f, 0.0))
+    assert ordered[0].meta.work_hint["retry"] == 2
+    assert ordered[1].meta.work_hint["est_service"] == 9.0
+
+
+def test_policy_chain_is_composable_and_small():
+    chain = default_policies()
+    assert len(chain.policies) == 3     # the paper's three defaults
+
+
+def test_global_controller_installs_schedule_end_to_end():
+    rt = NalarRuntime(simulate=True, nodes={"n0": {"CPU": 8}},
+                      policy=SRTFPolicy(), control_interval=0.05)
+    rt.register_agent(AgentSpec(
+        name="svc",
+        methods={"run": emulated(FixedLatency(0.2), lambda x: x)},
+        directives=Directives(resources={"CPU": 1})), instances=1)
+
+    def driver():
+        rt_ = current_runtime()
+        fs = [rt_.stub("svc").run(i, _hint={"graph_depth": i}) for i in range(4)]
+        rt_.kernel.sleep(1.0)
+        return [f.value() for f in fs]
+
+    out = deployment.main(driver, runtime=rt)
+    assert sorted(out) == [0, 1, 2, 3]
+    ctrl = rt.controller_of(rt.instances_of_type("svc")[0])
+    assert ctrl.schedule_policy.name == "srtf"   # installed via node store
+
+
+def test_hol_migration_improves_tail_latency():
+    """The paper's central claim in miniature: with a long-running request
+    hogging one instance, HoL mitigation migrates queued sessions to the
+    idle instance, cutting tail latency."""
+
+    def run(policy) -> float:
+        rt = NalarRuntime(simulate=True,
+                          nodes={"n0": {"CPU": 8}, "n1": {"CPU": 8}},
+                          policy=policy, control_interval=0.1, seed=7)
+        rt.register_agent(AgentSpec(
+            name="llm",
+            methods={"gen": emulated(LognormalLatency(0.4, 0.0), lambda x: x)},
+            directives=Directives(max_instances=2, resources={"CPU": 1})),
+            instances=2)
+        inst0 = rt.instances_of_type("llm")[0]
+
+        def long_driver():
+            rt_ = current_runtime()
+            rt_.router.pin(*_ctx_session(rt_), "llm", inst0) if False else None
+            f = rt_.stub("llm").gen("long", _hint={"est_service": 30.0})
+            f.value()
+
+        def short_driver():
+            f = current_runtime().stub("llm").gen("short")
+            f.value()
+
+        rt.start()
+        # a long request occupies instance 0 (fixed-latency model scaled up)
+        rt._specs["llm"].methods["gen"].latency = FixedLatency(10.0)
+        rt.submit_request(long_driver)
+        rt.kernel.schedule(0.05, lambda: setattr(
+            rt._specs["llm"].methods["gen"], "latency", FixedLatency(0.4)))
+        # shorts arrive while instance 0 is blocked; least-queue routing may
+        # still pick it because queue length lags
+        for i in range(6):
+            rt.submit_request(short_driver, delay=0.1 + 0.01 * i)
+        rt.run()
+        return rt.telemetry.percentile(95)
+
+    def _ctx_session(rt_):
+        return ("",)
+
+    class NoOp(LoadBalancePolicy):
+        def step(self, view, act):
+            return
+
+    p95_off = run(NoOp())
+    p95_on = run(PolicyChain(HoLMitigationPolicy(wait_threshold=0.2)))
+    assert p95_on <= p95_off    # mitigation can only help here

@@ -1,0 +1,306 @@
+"""Integration tests: runtime behaviours the paper claims (§3-§5).
+
+Covers: stub generation (incl. the YAML declaration path), directives,
+stateful routing, managed state + migration, session priorities, the Fig. 4
+retry workflow, and the migration protocol.
+"""
+
+import pytest
+
+from repro.core import (AgentSpec, Directives, FixedLatency, LLMLatency,
+                        ManagedDict, ManagedList, NalarRuntime,
+                        HighPrioritySessionPolicy, PolicyChain,
+                        deployment, emulated, parse_spec)
+from repro.core.runtime import current_runtime
+
+
+def two_node_rt(**kw):
+    return NalarRuntime(simulate=True,
+                        nodes={"n0": {"CPU": 16, "GPU": 4},
+                               "n1": {"CPU": 16, "GPU": 4}}, **kw)
+
+
+def test_parse_spec_yaml_declaration():
+    spec = parse_spec(
+        """
+        name: developer
+        functions:
+          - implement
+          - review
+        batchable: true
+        max_batch: 4
+        max_instances: 3
+        resources: GPU=1,CPU=2
+        """,
+        impls={"implement": emulated(FixedLatency(0.1), lambda t: t),
+               "review": emulated(FixedLatency(0.1), lambda t: t)})
+    assert spec.name == "developer"
+    assert set(spec.methods) == {"implement", "review"}
+    assert spec.directives.batchable and spec.directives.max_batch == 4
+    assert spec.directives.resources == {"GPU": 1.0, "CPU": 2.0}
+
+
+def test_parse_spec_missing_impl_fails():
+    with pytest.raises(ValueError, match="no implementation"):
+        parse_spec("name: a\nfunctions:\n  - f\n", impls={})
+
+
+def test_directive_conflict_batchable_managed_state():
+    d = Directives(batchable=True, uses_managed_state=True)
+    with pytest.raises(ValueError, match="batchable"):
+        d.validate()
+
+
+def test_stateful_agent_pins_session():
+    rt = two_node_rt()
+    rt.register_agent(AgentSpec(
+        name="chat",
+        methods={"msg": emulated(FixedLatency(0.05), lambda m: m)},
+        directives=Directives(stateful=True, max_instances=4,
+                              resources={"CPU": 1}),
+    ), instances=4)
+
+    executors = []
+
+    def driver():
+        for i in range(5):
+            f = rt.stub("chat").msg(i)
+            f.value()
+            executors.append(f.meta.executor)
+
+    deployment.main(driver, runtime=rt)
+    assert len(set(executors)) == 1     # same instance for the whole session
+
+
+def test_managed_state_persists_across_requests():
+    rt = two_node_rt()
+    history = ManagedList("history")
+
+    def remember(item):
+        history.append(item)
+        return history.snapshot()
+
+    rt.register_agent(AgentSpec(
+        name="memory",
+        methods={"remember": emulated(FixedLatency(0.01), remember)},
+        directives=Directives(resources={"CPU": 1}),
+    ), instances=1)
+
+    session = rt.sessions.new_session().session_id
+    outs = []
+
+    def driver(item):
+        outs.append(rt.stub("memory").remember(item).value())
+
+    rt.start()
+    rt.submit_request(driver, "a", session=session)
+    rt.run()
+    rt.submit_request(driver, "b", session=session)
+    rt.run()
+    assert outs[0] == ["a"]
+    assert outs[1] == ["a", "b"]        # state survived across requests
+
+
+def test_managed_state_isolated_between_sessions():
+    rt = two_node_rt()
+    d = ManagedDict("kv")
+
+    def put(k, v):
+        d[k] = v
+        return d.snapshot()
+
+    rt.register_agent(AgentSpec(
+        name="kvstore",
+        methods={"put": emulated(FixedLatency(0.01), put)},
+        directives=Directives(resources={"CPU": 1}),
+    ), instances=1)
+
+    outs = {}
+
+    def driver(tag):
+        outs[tag] = rt.stub("kvstore").put(tag, 1).value()
+
+    rt.start()
+    rt.submit_request(driver, "s1")
+    rt.submit_request(driver, "s2")
+    rt.run()
+    assert outs["s1"] == {"s1": 1}
+    assert outs["s2"] == {"s2": 1}
+
+
+def test_fig4_retry_workflow():
+    """The paper's three-agent workflow with driver-side retries."""
+    rt = two_node_rt()
+    fail_once = {"n": 0}
+
+    def test_code(code):
+        # first attempt of task1 fails, retry passes
+        if "task1" in code and fail_once["n"] == 0:
+            fail_once["n"] += 1
+            return "Fail"
+        return "Pass"
+
+    rt.register_agent(AgentSpec(
+        name="planner",
+        methods={"plan": emulated(LLMLatency(base=0.1, jitter_sigma=0.0),
+                                  lambda p: [f"{p}::task{i}" for i in range(3)])},
+        directives=Directives(resources={"GPU": 1})), instances=1)
+    rt.register_agent(AgentSpec(
+        name="developer",
+        methods={"implement_and_test": emulated(
+            LLMLatency(base=0.2, jitter_sigma=0.0),
+            lambda t: (test_code(f"code({t})"), f"code({t})"))},
+        directives=Directives(max_instances=4, resources={"GPU": 1})),
+        instances=2)
+
+    def main(prompt, max_retries=3):
+        rt_ = current_runtime()
+        subtasks = rt_.stub("planner").plan(prompt).value()
+        futures = [rt_.stub("developer").implement_and_test(t) for t in subtasks]
+        done = [False] * len(futures)
+        codes = [None] * len(futures)
+        retries = 0
+        while not all(done):
+            assert retries <= max_retries
+            for i, f in enumerate(futures):
+                if done[i]:
+                    continue
+                res, code = f.value()
+                if res == "Pass":
+                    done[i], codes[i] = True, code
+                else:
+                    futures[i] = rt_.stub("developer").implement_and_test(
+                        subtasks[i], _hint={"retry": retries + 1})
+                    retries += 1
+        return codes
+
+    codes = deployment.main(main, "OAuth", runtime=rt)
+    assert len(codes) == 3 and all("code(" in c for c in codes)
+    assert fail_once["n"] == 1          # exactly one retry happened
+
+
+def test_migration_protocol_moves_queued_future():
+    rt = two_node_rt(control_interval=10.0)   # keep global controller quiet
+    rt.register_agent(AgentSpec(
+        name="work",
+        methods={"run": emulated(FixedLatency(1.0), lambda x: x)},
+        directives=Directives(max_instances=2, resources={"CPU": 1})),
+        instances=2)
+    insts = rt.instances_of_type("work")
+
+    moved = {}
+
+    def driver():
+        from repro.core import get_context
+        rt_ = current_runtime()
+        # fill instance 0 so the next future queues behind it
+        f1 = rt_.stub("work").run(1)
+        rt_.kernel.sleep(0.1)
+        # force-route the second future to the busy instance
+        rt_.router.pin(get_context()[0], "work", insts[0])
+        f2 = rt_.stub("work").run(2)
+        rt_.kernel.sleep(0.1)
+        assert f2.meta.executor == insts[0]
+        ctrl = rt_.controller_of(insts[0])
+        ok = ctrl.migrate_out(f2, insts[1])           # Fig. 8 steps 2-6
+        moved["ok"] = ok
+        moved["exec"] = f2.meta.executor
+        return f1.value(), f2.value()
+
+    out = deployment.main(driver, runtime=rt)
+    assert out == (1, 2)
+    assert moved["ok"] and moved["exec"] == insts[1]
+    assert len(rt.telemetry.migrations) == 1
+
+
+def test_priority_boost_policy_runs():
+    """Fig. 6 policy: high-priority session gets boosted + migrated."""
+    rt = two_node_rt(control_interval=0.05)
+    session = rt.sessions.new_session().session_id
+    rt.global_controller.policy = PolicyChain(
+        HighPrioritySessionPolicy(session))
+    rt.register_agent(AgentSpec(
+        name="svc",
+        methods={"run": emulated(FixedLatency(0.5), lambda x: x)},
+        directives=Directives(max_instances=2, resources={"CPU": 1})),
+        instances=2)
+
+    def driver():
+        return rt.stub("svc").run("hi").value()
+
+    rt.start()
+    done = {}
+    rt.submit_request(driver, session=session,
+                      on_done=lambda o, e: done.update(out=o, err=e))
+    rt.run()
+    assert done["err"] is None
+    assert rt.sessions.get(session).priority == 10.0
+
+
+def test_provision_and_kill_respect_bounds():
+    rt = two_node_rt()
+    rt.register_agent(AgentSpec(
+        name="svc",
+        methods={"run": emulated(FixedLatency(0.1), lambda: 1)},
+        directives=Directives(min_instances=1, max_instances=2,
+                              resources={"CPU": 1})), instances=1)
+    iid2 = rt.provision_instance("svc", "n1")
+    assert iid2 is not None
+    assert rt.provision_instance("svc", "n0") is None   # max reached
+    rt.kill_instance(iid2)
+    assert len(rt.live_instances("svc")) == 1
+    # min floor: cannot kill the last one
+    rt.kill_instance(rt.instances_of_type("svc")[0])
+    assert len(rt.live_instances("svc")) == 1
+
+
+def test_resource_accounting():
+    rt = NalarRuntime(simulate=True, nodes={"n0": {"GPU": 2}})
+    rt.register_agent(AgentSpec(
+        name="big",
+        methods={"run": emulated(FixedLatency(0.1), lambda: 1)},
+        directives=Directives(max_instances=8, resources={"GPU": 1})),
+        instances=2)
+    assert rt.provision_instance("big", "n0") is None   # out of GPUs
+    free = rt.free_resources()["n0"]["GPU"]
+    assert free == 0
+
+
+def test_preemptable_running_future_migrates():
+    """Table-1 `preemptable`: a RUNNING future can be preempted (with
+    restart) and migrated; non-preemptable running futures cannot."""
+    preempted = []
+    rt = two_node_rt(control_interval=10.0)
+    rt.register_agent(AgentSpec(
+        name="pre",
+        methods={"run": emulated(FixedLatency(2.0), lambda x: x)},
+        directives=Directives(max_instances=2, resources={"CPU": 1},
+                              preemptable=lambda f: preempted.append(f.fid))),
+        instances=2)
+    rt.register_agent(AgentSpec(
+        name="nopre",
+        methods={"run": emulated(FixedLatency(2.0), lambda x: x)},
+        directives=Directives(max_instances=2, resources={"CPU": 1})),
+        instances=2)
+    insts_p = rt.instances_of_type("pre")
+    insts_n = rt.instances_of_type("nopre")
+    moved = {}
+
+    def driver():
+        rt_ = current_runtime()
+        f1 = rt_.stub("pre").run(1)
+        f2 = rt_.stub("nopre").run(2)
+        rt_.kernel.sleep(0.5)          # both are mid-execution now
+        c_p = rt_.controller_of(f1.meta.executor)
+        c_n = rt_.controller_of(f2.meta.executor)
+        dst_p = next(i for i in insts_p if i != f1.meta.executor)
+        dst_n = next(i for i in insts_n if i != f2.meta.executor)
+        moved["pre"] = c_p.migrate_out(f1, dst_p)
+        moved["nopre"] = c_n.migrate_out(f2, dst_n)
+        return f1.value(), f2.value()
+
+    out = deployment.main(driver, runtime=rt)
+    assert out == (1, 2)               # both still complete correctly
+    assert moved["pre"] is True        # preempted + migrated
+    assert moved["nopre"] is False     # running, not preemptable
+    assert len(preempted) == 1

@@ -1,0 +1,75 @@
+"""§5 debuggability (workflow-path traces, failure reports) + runtime
+determinism (identical runs produce identical telemetry)."""
+
+import pytest
+
+from repro.core import (AgentSpec, Directives, FixedLatency, NalarRuntime,
+                        deployment, emulated)
+from repro.core.debug import failure_report, format_trace, session_report, slowest_stage
+from repro.core.runtime import current_runtime
+from repro.workloads import run_financial, run_swe, system_config
+
+
+def build_rt():
+    rt = NalarRuntime(simulate=True, nodes={"n0": {"CPU": 8}})
+    rt.register_agent(AgentSpec(
+        name="fast",
+        methods={"run": emulated(FixedLatency(0.1), lambda x: x)},
+        directives=Directives(resources={"CPU": 1})), instances=1)
+    rt.register_agent(AgentSpec(
+        name="slow",
+        methods={"run": emulated(FixedLatency(1.0), lambda x: x)},
+        directives=Directives(resources={"CPU": 1})), instances=1)
+    return rt
+
+
+def test_trace_renders_workflow_path():
+    rt = build_rt()
+
+    def driver():
+        rt_ = current_runtime()
+        a = rt_.stub("fast").run(1).value()
+        return rt_.stub("slow").run(a).value()
+
+    out = deployment.main(driver, runtime=rt)
+    assert out == 1
+    rec = next(iter(rt.telemetry.requests.values()))
+    txt = format_trace(rec)
+    assert "fast.run" in txt and "slow.run" in txt
+    assert "service=" in txt and "ok" in txt
+    worst = slowest_stage(rec)
+    assert worst.agent_type == "slow"
+    rep = session_report(rt.telemetry, rec.session_id)
+    assert "1 requests" in rep and "fast,slow" in rep
+
+
+def test_failure_report_names_the_agent():
+    rt = build_rt()
+    rt.register_agent(AgentSpec(
+        name="bad",
+        methods={"run": emulated(FixedLatency(0.05),
+                                 lambda: (_ for _ in ()).throw(RuntimeError("x")))},
+        directives=Directives(resources={"CPU": 1})), instances=1)
+
+    def driver():
+        rt_ = current_runtime()
+        rt_.stub("fast").run(1).value()
+        return rt_.stub("bad").run().value()
+
+    with pytest.raises(RuntimeError):
+        deployment.main(driver, runtime=rt)
+    (line,) = failure_report(rt.telemetry)
+    assert "failed at bad @" in line
+    assert "fast.run -> bad.run" in line
+
+
+@pytest.mark.parametrize("runner,kwargs", [
+    (run_financial, dict(rps=2.0, n_sessions=12, seed=3)),
+    (run_swe, dict(n_requests=4, seed=3)),
+])
+def test_workloads_are_deterministic(runner, kwargs):
+    a = runner(system_config("nalar"), **kwargs)
+    b = runner(system_config("nalar"), **kwargs)
+    for k, v in a.items():
+        if isinstance(v, float):
+            assert b[k] == v, (k, v, b[k])

@@ -1,0 +1,177 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch, as a
+reduced same-family variant, runs one forward/train step on CPU with shape
+asserts + no-NaN checks.  Also prefill/decode parity against the training
+forward for representative families."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import build_model
+from repro.training import AdamW, constant_schedule, make_train_step
+
+
+def _batch(cfg, B=2, S=16, rng=None):
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    batch = {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+             "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(
+            rng, (B, cfg.n_image_tokens, cfg.d_model), cfg.jnp_dtype)
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            rng, (B, cfg.encoder_seq, cfg.d_model), cfg.jnp_dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    batch = _batch(cfg, B, S)
+    logits, aux = model.forward(params, batch)
+    exp_S = S + (cfg.n_image_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, exp_S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    opt = AdamW(learning_rate=constant_schedule(1e-3))
+    step = jax.jit(make_train_step(model, opt))
+    new_params, _, metrics = step(params, opt.init(params), batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually changed
+    delta = jax.tree_util.tree_reduce(
+        lambda acc, x: acc + float(jnp.sum(jnp.abs(x[0].astype(jnp.float32)
+                                                   - x[1].astype(jnp.float32)))),
+        jax.tree_util.tree_map(lambda a, b: (a, b), params, new_params),
+        0.0, is_leaf=lambda x: isinstance(x, tuple))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    B, S = 2, 16
+    batch = _batch(cfg, B, S, jax.random.PRNGKey(1))
+    logits, cache = model.prefill(params, batch)
+    assert logits.shape == (B, cfg.vocab_size)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(3):
+        logits, cache = model.decode_step(params, tok, cache)
+        assert logits.shape == (B, cfg.vocab_size)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    prefix = cfg.n_image_tokens if cfg.family == "vlm" else 0
+    assert int(np.asarray(cache["pos"])[0]) == S + prefix + 3
+
+
+@pytest.mark.parametrize("arch", ["qwen3_0_6b", "mamba2_130m",
+                                  "recurrentgemma_9b", "whisper_medium"])
+def test_prefill_decode_matches_forward(arch):
+    """Teacher-forced parity: decode at position t must equal the training
+    forward's logits at t (f32, no sliding window wraparound)."""
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    B, S, extra = 2, 16, 4
+    rng = jax.random.PRNGKey(3)
+    toks = jax.random.randint(rng, (B, S + extra), 0, cfg.vocab_size)
+    batch_full = _batch(cfg, B, S + extra, rng)
+    batch_full["tokens"] = toks
+    full_logits, _ = model.forward(params, batch_full)
+
+    batch_pre = dict(batch_full)
+    batch_pre["tokens"] = toks[:, :S]
+    logits, cache = model.prefill(params, batch_pre, pad_cache_to=S + extra)
+    offset = cfg.n_image_tokens if cfg.family == "vlm" else 0
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(full_logits[:, offset + S - 1]),
+                               rtol=2e-3, atol=2e-3)
+    for t in range(extra):
+        logits, cache = model.decode_step(params, toks[:, S + t], cache)
+        np.testing.assert_allclose(
+            np.asarray(logits),
+            np.asarray(full_logits[:, offset + S + t]),
+            rtol=2e-3, atol=2e-3)
+
+
+def test_sliding_window_decode_matches_windowed_forward():
+    cfg = get_smoke_config("starcoder2_15b").replace(dtype="float32",
+                                                     sliding_window=8)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(4))
+    B, S, extra = 1, 16, 6
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, S + extra), 0,
+                              cfg.vocab_size)
+    full_logits, _ = model.forward(params, {"tokens": toks})
+    logits, cache = model.prefill(params, {"tokens": toks[:, :S]},
+                                  pad_cache_to=S + extra)
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(full_logits[:, S - 1]),
+                               rtol=2e-3, atol=2e-3)
+    for t in range(extra):
+        logits, cache = model.decode_step(params, toks[:, S + t], cache)
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(full_logits[:, S + t]),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_exact_configs_match_assignment():
+    """The full (non-smoke) configs carry the exact published shapes."""
+    c = get_config("qwen3-0.6b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (28, 1024, 16, 8, 3072, 151936)
+    assert c.qk_norm
+    c = get_config("starcoder2-15b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (40, 6144, 48, 4, 24576, 49152)
+    c = get_config("qwen3-moe-235b-a22b")
+    assert (c.n_layers, c.d_model, c.n_experts, c.top_k) == (94, 4096, 128, 8)
+    c = get_config("recurrentgemma-9b")
+    assert (c.n_layers, c.d_model, c.hybrid_period) == (38, 4096, 3)
+    c = get_config("mamba2-130m")
+    assert (c.n_layers, c.d_model, c.ssm_state) == (24, 768, 128)
+    c = get_config("granite-moe-1b-a400m")
+    assert (c.n_experts, c.top_k, c.d_expert, c.vocab_size) == (32, 8, 512, 49155)
+    c = get_config("whisper-medium")
+    assert (c.n_layers, c.n_encoder_layers, c.d_model, c.vocab_size) == (24, 24, 1024, 51865)
+    c = get_config("phi-3-vision-4.2b")
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab_size) == (32, 3072, 8192, 32064)
+    c = get_config("stablelm-1.6b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.rope_pct) == (24, 2048, 32, 0.25)
+    c = get_config("qwen3-1.7b")
+    assert (c.n_layers, c.d_model, c.d_ff) == (28, 2048, 6144)
+
+
+def test_smoke_configs_are_reduced():
+    for arch in ARCH_IDS:
+        c = get_smoke_config(arch)
+        assert c.n_layers <= 3 and c.d_model <= 512
+        if c.n_experts:
+            assert c.n_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ["qwen3_0_6b", "granite_moe_1b_a400m",
+                                  "recurrentgemma_9b", "mamba2_130m"])
+def test_remat_chunked_loss_matches_plain(arch):
+    """The production memory path (remat + chunked attention + chunked CE)
+    must compute the same loss and gradients as the plain path."""
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    plain = build_model(cfg, attention_impl="xla")
+    prod = build_model(cfg, attention_impl="xla_chunked", remat=True)
+    params = plain.init(jax.random.PRNGKey(6))
+    batch = _batch(cfg, 2, 24, jax.random.PRNGKey(7))
+    l1 = float(plain.loss_fn(params, batch))
+    l2 = float(prod.loss_fn(params, batch))
+    assert l1 == pytest.approx(l2, rel=1e-4)
+    g1 = jax.grad(plain.loss_fn)(params, batch)
+    g2 = jax.grad(prod.loss_fn)(params, batch)
+    for a, b in zip(jax.tree_util.tree_leaves(g1),
+                    jax.tree_util.tree_leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-4)

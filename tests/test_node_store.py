@@ -1,0 +1,63 @@
+"""Node store: hashes, CAS, pub/sub, versioning (paper §4.1)."""
+
+from repro.core import NodeStore, StoreCluster
+
+
+def test_hash_ops():
+    s = NodeStore("n0")
+    s.hset("k", "f", 1)
+    s.hset_many("k", {"g": 2, "h": 3})
+    assert s.hget("k", "f") == 1
+    assert s.hgetall("k") == {"f": 1, "g": 2, "h": 3}
+    assert s.hdel("k", "f")
+    assert not s.hdel("k", "f")
+    assert s.hget("k", "f", default="d") == "d"
+
+
+def test_versions_bump_on_write():
+    s = NodeStore("n0")
+    v0 = s.version("k")
+    s.hset("k", "f", 1)
+    assert s.version("k") == v0 + 1
+
+
+def test_cas():
+    s = NodeStore("n0")
+    s.hset("k", "owner", "a")
+    assert not s.cas("k", "owner", "b", "c")
+    assert s.cas("k", "owner", "a", "c")
+    assert s.hget("k", "owner") == "c"
+
+
+def test_incr():
+    s = NodeStore("n0")
+    assert s.incr("m", "count") == 1
+    assert s.incr("m", "count", 4) == 5
+
+
+def test_pubsub_fires_on_write():
+    s = NodeStore("n0")
+    got = []
+    s.subscribe("cmd:x", lambda f, v: got.append((f, v)))
+    s.hset("cmd:x", "migrate", {"dst": "y"})
+    assert got == [("migrate", {"dst": "y"})]
+    s.unsubscribe("cmd:x", s._subs["cmd:x"][0])
+    s.hset("cmd:x", "z", 1)
+    assert len(got) == 1
+
+
+def test_keys_prefix_scan():
+    s = NodeStore("n0")
+    s.hset("metrics:a", "q", 1)
+    s.hset("metrics:b", "q", 2)
+    s.hset("future:f1", "state", "ready")
+    assert sorted(s.keys("metrics:")) == ["metrics:a", "metrics:b"]
+
+
+def test_cluster_directory():
+    c = StoreCluster()
+    a = c.get("n0")
+    b = c.get("n0")
+    assert a is b
+    c.get("n1")
+    assert sorted(c.nodes()) == ["n0", "n1"]

@@ -1,0 +1,131 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import NodeStore, Telemetry
+from repro.core.future import extract_dependencies
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+from repro.models.moe import _capacity, _dispatch_masks, _route
+from repro.configs.base import ModelConfig
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ----------------------------------------------------------- rglru algebra
+@given(st.integers(1, 3), st.integers(1, 48), st.integers(1, 16),
+       st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_rglru_scan_matches_loop(B, S, W, seed):
+    """associative-scan recurrence == naive Python loop for any shape."""
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(0.5, 1.0, (B, S, W)).astype(np.float32)
+    b = rng.standard_normal((B, S, W)).astype(np.float32) * 0.2
+    out = np.asarray(rglru_scan_ref(jnp.asarray(a), jnp.asarray(b)))
+    h = np.zeros((B, W), np.float32)
+    for t in range(S):
+        h = a[:, t] * h + b[:, t]
+        np.testing.assert_allclose(out[:, t], h, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------ moe dispatch
+def _moe_cfg(E, k):
+    return ModelConfig(arch_id="prop", family="moe", n_experts=E, top_k=k,
+                       d_expert=8, d_model=16, capacity_factor=1.25)
+
+
+@given(st.integers(4, 64), st.sampled_from([4, 8, 16]),
+       st.integers(1, 4), st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_moe_dispatch_invariants(G, E, k, seed):
+    """Capacity never exceeded; each kept (token,choice) appears exactly once;
+    combine weights match kept gates."""
+    k = min(k, E)
+    cfg = _moe_cfg(E, k)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((G, 16)).astype(np.float32))
+    router = jnp.asarray(rng.standard_normal((16, E)).astype(np.float32))
+    gates, idx, probs = _route(x, router, cfg)
+    C = _capacity(G, cfg)
+    dispatch, combine, counts = _dispatch_masks(idx, gates, G, C, cfg)
+    d = np.asarray(dispatch, np.float32)
+    # each expert buffer slot holds at most one token
+    assert (d.sum(axis=0) <= 1.0 + 1e-6).all()
+    # a token occupies at most k slots total
+    assert (d.sum(axis=(1, 2)) <= k + 1e-6).all()
+    # counts respect capacity
+    assert (np.asarray(counts) <= C).all()
+    # combine weight per token <= 1 (gates renormalized over top-k)
+    assert (np.asarray(combine).sum(axis=(1, 2)) <= 1.0 + 1e-5).all()
+
+
+@given(st.integers(8, 64), st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_moe_gather_equals_einsum_when_no_drop(G, seed):
+    """With generous capacity both dispatch impls compute the same output."""
+    from repro.models.moe import moe_block, init_moe_layer
+    cfg = ModelConfig(arch_id="prop", family="moe", n_experts=4, top_k=2,
+                      d_expert=16, d_model=8, capacity_factor=4.0,
+                      dtype="float32")
+    rng = jax.random.PRNGKey(seed)
+    p = init_moe_layer(rng, cfg)
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (1, G, 8), jnp.float32)
+    y1, _, c1 = moe_block(x, p, cfg, impl="einsum")
+    y2, _, c2 = moe_block(x, p, cfg, impl="gather")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+# -------------------------------------------------------------- node store
+@given(st.lists(st.tuples(st.sampled_from("abc"), st.integers(0, 100)),
+                min_size=1, max_size=30))
+@settings(**SETTINGS)
+def test_store_last_write_wins(writes):
+    s = NodeStore("n0")
+    last = {}
+    for f, v in writes:
+        s.hset("k", f, v)
+        last[f] = v
+    assert s.hgetall("k") == last
+
+
+@given(st.integers(1, 50))
+@settings(**SETTINGS)
+def test_store_version_monotone(n):
+    s = NodeStore("n0")
+    versions = []
+    for i in range(n):
+        s.hset("k", "f", i)
+        versions.append(s.version("k"))
+    assert versions == sorted(versions)
+    assert len(set(versions)) == n
+
+
+# --------------------------------------------------------------- telemetry
+@given(st.lists(st.floats(0.001, 100.0), min_size=1, max_size=200))
+@settings(**SETTINGS)
+def test_percentiles_monotone_and_bounded(latencies):
+    t = Telemetry()
+    for i, lat in enumerate(latencies):
+        rid = f"r{i}"
+        t.start_request(rid, "s", 0.0)
+        t.end_request(rid, lat)
+    p50, p95, p99 = t.percentile(50), t.percentile(95), t.percentile(99)
+    assert p50 <= p95 <= p99
+    assert min(latencies) - 1e-9 <= p50 and p99 <= max(latencies) + 1e-9
+    s = t.summary()
+    assert s["n"] == len(latencies)
+
+
+# --------------------------------------------------------- dep extraction
+@given(st.recursive(
+    st.integers() | st.text(max_size=3),
+    lambda children: st.lists(children, max_size=3)
+    | st.dictionaries(st.text(max_size=2), children, max_size=3),
+    max_leaves=10))
+@settings(**SETTINGS)
+def test_extract_dependencies_ignores_plain_data(obj):
+    assert extract_dependencies((obj,), {}) == []

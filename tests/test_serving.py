@@ -1,0 +1,200 @@
+"""Serving engine integration: continuous batching, paged KV pool, prefix
+reuse, NALAR KV-registry hints, session migration between engines."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import KVRegistry
+from repro.models import build_model
+from repro.serving import (InferenceEngine, PagedKVPool, Request,
+                           SamplingParams, StateCachePool)
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_smoke_config("qwen3_0_6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def make_engine(model, params, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_seq", 128)
+    return InferenceEngine(model, params, **kw)
+
+
+def test_continuous_batching_completes_all(dense_setup):
+    cfg, model, params = dense_setup
+    eng = make_engine(model, params)
+    rng = np.random.default_rng(0)
+    reqs = [Request.make(rng.integers(0, cfg.vocab_size, size=int(rng.integers(4, 24))),
+                         sampling=SamplingParams(max_new_tokens=6))
+            for _ in range(9)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_idle()
+    assert all(r.finished for r in reqs)
+    assert all(len(r.generated) == 6 for r in reqs)
+    assert eng.metrics.completed == 9
+
+
+def test_deterministic_greedy_output(dense_setup):
+    cfg, model, params = dense_setup
+    prompt = list(range(1, 11))
+    outs = []
+    for _ in range(2):
+        eng = make_engine(model, params)
+        r = eng.generate(prompt, sampling=SamplingParams(max_new_tokens=5))
+        outs.append(r.generated)
+    assert outs[0] == outs[1]
+
+
+def test_batched_equals_unbatched_greedy(dense_setup):
+    """Continuous batching must not change greedy outputs."""
+    cfg, model, params = dense_setup
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, size=12).tolist()
+               for _ in range(4)]
+    solo = []
+    for p in prompts:
+        eng = make_engine(model, params, max_batch=1)
+        solo.append(eng.generate(p, sampling=SamplingParams(max_new_tokens=4)).generated)
+    eng = make_engine(model, params, max_batch=4)
+    reqs = [Request.make(p, sampling=SamplingParams(max_new_tokens=4))
+            for p in prompts]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_idle()
+    assert [r.generated for r in reqs] == solo
+
+
+def test_prefix_reuse_same_session(dense_setup):
+    cfg, model, params = dense_setup
+    eng = make_engine(model, params)
+    r1 = eng.generate(list(range(8)), session_id="sess",
+                      sampling=SamplingParams(max_new_tokens=4))
+    assert eng.metrics.prefix_hits == 0
+    r2 = eng.generate(list(range(8, 12)), session_id="sess",
+                      sampling=SamplingParams(max_new_tokens=4))
+    assert r2.finished
+    assert eng.metrics.prefix_hits == 1
+    assert r2.prefix_reused_tokens > 0
+
+
+def test_kv_registry_drop_hint_evicts(dense_setup):
+    cfg, model, params = dense_setup
+    reg = KVRegistry()
+    eng = make_engine(model, params, kv_registry=reg, instance_id="llm:0")
+    eng.generate(list(range(8)), session_id="s0",
+                 sampling=SamplingParams(max_new_tokens=3))
+    assert eng.pool.session("s0") is not None
+    reg.release("s0")                      # session over -> drop hint
+    assert eng.pool.session("s0") is None
+
+
+def test_kv_migration_between_engines(dense_setup):
+    """The paper's K,V migration: session cache moves across instances."""
+    cfg, model, params = dense_setup
+    reg = KVRegistry()
+    e0 = make_engine(model, params, kv_registry=reg, instance_id="llm:0")
+    e1 = make_engine(model, params, kv_registry=reg, instance_id="llm:1")
+    e0.generate(list(range(10)), session_id="s0",
+                sampling=SamplingParams(max_new_tokens=3))
+    payload = e0.pool.export_session("s0")
+    assert payload is not None
+    assert e1.pool.import_session("s0", payload)
+    tokens = reg.migrate("s0", "llm:0", "llm:1")
+    assert e0.pool.session("s0") is None       # migrate_out hook freed pages
+    # follow-up on the new instance reuses the migrated prefix
+    r = e1.generate(list(range(10, 14)), session_id="s0",
+                    sampling=SamplingParams(max_new_tokens=3))
+    assert r.finished and e1.metrics.prefix_hits == 1
+
+
+def test_ssm_engine_state_cache():
+    cfg = get_smoke_config("mamba2_130m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    eng = InferenceEngine(model, params, max_batch=2, max_seq=64)
+    assert isinstance(eng.pool, StateCachePool)
+    r = eng.generate(list(range(12)), session_id="s",
+                     sampling=SamplingParams(max_new_tokens=5))
+    assert r.finished and len(r.generated) == 5
+    assert eng.pool.load("s") is not None      # O(1) state stored
+
+
+def test_paged_pool_allocation_and_eviction():
+    cfg = get_smoke_config("qwen3_0_6b")
+    pool = PagedKVPool(cfg, n_pages=8, page_size=16)
+    sp = pool.allocate("a", 40, now=1.0)       # 3 pages
+    assert len(sp.pages) == 3
+    pool.allocate("b", 60, now=2.0)            # 4 pages
+    assert pool.free_pages() == 1
+    # "a" is LRU and unpinned -> evicted to make room
+    sp_c = pool.allocate("c", 30, now=3.0)
+    assert sp_c is not None
+    assert pool.session("a").pages == []
+
+
+def test_paged_pool_pin_blocks_eviction():
+    cfg = get_smoke_config("qwen3_0_6b")
+    pool = PagedKVPool(cfg, n_pages=4, page_size=16)
+    pool.allocate("a", 64, now=1.0)            # all 4 pages
+    pool.on_hint("a", "retain")
+    assert pool.allocate("b", 32, now=2.0) is None   # pinned: cannot evict
+    pool.on_hint("a", "drop")
+    assert pool.allocate("b", 32, now=3.0) is not None
+
+
+def test_priority_admission_order(dense_setup):
+    cfg, model, params = dense_setup
+    eng = make_engine(model, params, max_batch=1)
+    lo = Request.make(list(range(6)), priority=0.0, now=0.0,
+                      sampling=SamplingParams(max_new_tokens=2))
+    hi = Request.make(list(range(6)), priority=5.0, now=1.0,
+                      sampling=SamplingParams(max_new_tokens=2))
+    eng.submit(lo)
+    eng.submit(hi)
+    eng.run_until_idle()
+    assert hi.finished_at <= lo.finished_at    # high priority admitted first
+
+
+def test_paged_kernel_reads_engine_pool(dense_setup):
+    """The Pallas paged-decode kernel consumes the engine pool's page
+    tables directly (vLLM-style): kernel(pool pages, page table) must match
+    dense attention over the pool's materialized cache."""
+    import jax.numpy as jnp
+    from repro.kernels.paged_attention.ops import paged_decode_attention
+    from repro.kernels.paged_attention.ref import decode_ring_ref
+
+    cfg, model, params = dense_setup
+    eng = make_engine(model, params)
+    eng.generate(list(range(20)), session_id="pk",
+                 sampling=SamplingParams(max_new_tokens=4))
+    pool = eng.pool
+    sp = pool.session("pk")
+    assert sp is not None and sp.tokens > 0
+    max_pages = len(sp.pages)
+    pt = jnp.asarray(pool.page_table("pk", max_pages))[None]   # [1, P]
+    lens = jnp.asarray([sp.tokens], jnp.int32)
+
+    layer = 0
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    rng = jax.random.PRNGKey(0)
+    q = jax.random.normal(rng, (1, cfg.n_heads, cfg.head_dim_), jnp.float32)
+    out = paged_decode_attention(
+        q, pool.k[layer].astype(jnp.float32),
+        pool.v[layer].astype(jnp.float32), pt, lens,
+        scale=cfg.head_dim_ ** -0.5, n_rep=n_rep)
+
+    k, v, tokens = pool.gather_contiguous("pk", eng.max_seq)
+    ref = decode_ring_ref(q[:, None], k[layer][None].astype(jnp.float32),
+                          v[layer][None].astype(jnp.float32),
+                          jnp.asarray([tokens - 1]),
+                          scale=cfg.head_dim_ ** -0.5, n_rep=n_rep)[:, 0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
