@@ -14,8 +14,9 @@ from .clock import Kernel, RealTimeKernel, SimKernel
 from .controller_global import GlobalController
 from .controller_local import ComponentController, LocalSchedule
 from .directives import Directives
-from .executor import (AgentInstance, EmulatedMethod, FixedLatency,
-                       LatencyModel, LLMLatency, LognormalLatency)
+from .executor import (AgentInstance, EmulatedMethod, EngineBackedMethod,
+                       FixedLatency, LatencyModel, LLMLatency,
+                       LognormalLatency)
 from .future import Future, FutureMetadata, FutureState, FutureTable
 from .kv_registry import KVRegistry, Residency
 from .node_store import NodeStore, StoreCluster
@@ -26,13 +27,15 @@ from .policy import (Action, ActionSink, ClusterView, HighPrioritySessionPolicy,
                      default_policies)
 from .runtime import NalarRuntime, Router, current_runtime, deployment
 from .session import SessionRegistry, get_context, set_context
-from .state import ManagedDict, ManagedList, SessionStateStore, managedDict, managedList
+from .state import (ManagedDict, ManagedList, SessionStateStore,
+                    SessionTranscript, managedDict, managedList)
 from .stubs import AgentSpec, Stub, emulated, parse_spec
 from .telemetry import Telemetry
 
 __all__ = [
     "AgentInstance", "AgentSpec", "Action", "ActionSink", "ClusterView",
-    "ComponentController", "Directives", "EmulatedMethod", "FixedLatency",
+    "ComponentController", "Directives", "EmulatedMethod",
+    "EngineBackedMethod", "FixedLatency",
     "Future", "FutureMetadata", "FutureState", "FutureTable",
     "GlobalController", "HighPrioritySessionPolicy", "HoLMitigationPolicy",
     "InstanceView", "Kernel", "KVRegistry", "LatencyModel", "LLMLatency",
@@ -40,7 +43,8 @@ __all__ = [
     "LPTSchedule", "ManagedDict", "ManagedList", "NalarRuntime", "NodeStore",
     "Policy", "PolicyChain", "RealTimeKernel", "Residency",
     "ResourceReassignmentPolicy", "Router", "SRTFPolicy", "SRTFSchedule",
-    "SessionRegistry", "SessionStateStore", "SimKernel", "StoreCluster",
+    "SessionRegistry", "SessionStateStore", "SessionTranscript", "SimKernel",
+    "StoreCluster",
     "Stub", "Telemetry", "current_runtime", "default_policies", "deployment",
     "emulated", "get_context", "managedDict", "managedList", "parse_spec",
     "set_context",

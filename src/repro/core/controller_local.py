@@ -18,7 +18,7 @@ import random
 import threading
 from typing import Any, Dict, List, Optional
 
-from .executor import AgentInstance, EmulatedMethod
+from .executor import AgentInstance, EmulatedMethod, EngineBackedMethod
 from .future import Future, FutureState, resolve_args
 
 
@@ -97,20 +97,35 @@ class ComponentController:
     # -------------------------------------------------------------- dispatch
     def _maybe_dispatch(self) -> None:
         with self._lock:
-            if not self.inst.alive or self.inst.busy or self.inst.qsize() == 0:
+            if not self.inst.alive or self.inst.qsize() == 0:
                 return
             now = self.kernel.now()
             order = sorted(self.inst.queue, key=lambda f: self.schedule_policy.order_key(f, now))
             head = order[0]
-            batch = [head]
-            if self.inst.directives.batchable:
-                for f in order[1:]:
-                    if len(batch) >= self.inst.directives.max_batch:
-                        break
-                    if f.meta.method == head.meta.method:
-                        batch.append(f)
-            self.inst.dequeue_selected(batch)
-            self.inst.running = list(batch)
+            method = self.inst.methods.get(head.meta.method)
+            if isinstance(method, EngineBackedMethod):
+                # Engine-backed leaves are asynchronous: the external engine
+                # batches continuously, so the instance admits work until the
+                # engine's batch width is saturated instead of blocking on
+                # one in-flight batch.
+                free = max(1, method.capacity()) - len(self.inst.running)
+                if free <= 0:
+                    return
+                batch = [f for f in order if f.meta.method == head.meta.method][:free]
+                self.inst.dequeue_selected(batch)
+                self.inst.running.extend(batch)
+            else:
+                if self.inst.busy:
+                    return
+                batch = [head]
+                if self.inst.directives.batchable:
+                    for f in order[1:]:
+                        if len(batch) >= self.inst.directives.max_batch:
+                            break
+                        if f.meta.method == head.meta.method:
+                            batch.append(f)
+                self.inst.dequeue_selected(batch)
+                self.inst.running = list(batch)
         self._execute(batch)
 
     def _execute(self, batch: List[Future]) -> None:
@@ -119,7 +134,9 @@ class ComponentController:
             f._set_state(FutureState.RUNNING)
             f.meta.started_at = now
         method = self.inst.methods.get(batch[0].meta.method)
-        if isinstance(method, EmulatedMethod):
+        if isinstance(method, EngineBackedMethod):
+            self._execute_engine(batch, method)
+        elif isinstance(method, EmulatedMethod):
             self._execute_emulated(batch, method)
         elif callable(method):
             self._execute_composite(batch[0], method)
@@ -160,6 +177,34 @@ class ComponentController:
                 self._maybe_dispatch()
 
         self.kernel.schedule(service, finish, tag=f"exec:{self.inst.instance_id}")
+
+    def _execute_engine(self, batch: List[Future],
+                        method: "EngineBackedMethod") -> None:
+        """Hand the batch to a real serving engine; completions arrive later
+        via ``complete_async`` from the engine's pump thread."""
+        try:
+            method.launch(batch, self)
+        except BaseException as e:  # noqa: BLE001 — submission failure (§5)
+            for f in batch:
+                self.complete_async(f, error=e)
+
+    def complete_async(self, fut: Future, value: Any = None,
+                       error: Optional[BaseException] = None) -> None:
+        """Thread-safe completion entry for asynchronous backends.
+
+        Routed through ``kernel.schedule`` so that, under the SimKernel, the
+        completion becomes an ordinary event (deterministic ordering) and,
+        under the RealTimeKernel, it fires on a timer thread rather than
+        re-entering the caller's stack.
+        """
+        def finish() -> None:
+            if fut.state in (FutureState.READY, FutureState.FAILED):
+                return  # preempted/cancelled while in flight
+            self.inst.metrics.record_service(
+                max(0.0, self.kernel.now() - fut.meta.started_at))
+            self._complete(fut, value=value, error=error)
+
+        self.kernel.schedule(0.0, finish, tag=f"engine-done:{fut.fid}")
 
     def _execute_composite(self, fut: Future, fn) -> None:
         """User-code agent method that may itself call stubs: run on a driver

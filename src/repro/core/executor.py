@@ -2,7 +2,7 @@
 
 An *agent type* (e.g. ``developer``) has one or more *instances*
 (``developer:node3/1``), each managed by a component-level controller.  Method
-implementations come in two flavours:
+implementations come in three flavours:
 
 * ``EmulatedMethod`` — a leaf component (LLM engine, vector store, web API)
   whose behaviour is a cheap Python ``value_fn`` and whose *cost* is a
@@ -14,6 +14,15 @@ implementations come in two flavours:
   other agents/tools through stubs (Fig. 3).  Executed on a kernel driver
   thread; the instance stays busy for the whole span, which is exactly what
   produces the head-of-line blocking the paper's policies mitigate.
+
+* ``EngineBackedMethod`` subclasses — leaf LLM calls executed on a *real*
+  serving engine (``repro.serving.InferenceEngine`` via
+  ``repro.serving.bridge.EngineMethod``).  The controller hands the future
+  to the backend and moves on: the engine batches continuously on its own
+  thread and resolves the future through a completion callback, so one
+  instance carries up to ``capacity()`` in-flight futures at a time.  This
+  is the real-execution counterpart of §6.3 emulation — same stub, same
+  future, same routing; only the leaf executes for real.
 """
 
 from __future__ import annotations
@@ -93,6 +102,32 @@ class EmulatedMethod:
         if self.value_fn is None:
             return None
         return self.value_fn(*args, **kwargs)
+
+
+class EngineBackedMethod:
+    """Abstract async leaf method executed on an external serving engine.
+
+    Contract with the component controller:
+
+    * ``launch(batch, controller)`` is called with futures whose dependencies
+      are already materialized; it must return quickly (submission only) and
+      arrange for ``controller.complete_async(fut, value=..., error=...)``
+      to be invoked exactly once per future, from any thread.
+    * The instance is NOT considered blocked while engine calls are in
+      flight; the controller keeps admitting work until ``capacity()``
+      futures are running on this instance (the engine's own continuous
+      batching replaces controller-side batching).
+
+    The concrete implementation lives in ``repro.serving.bridge`` so that
+    ``repro.core`` stays importable without JAX/serving dependencies.
+    """
+
+    def capacity(self) -> int:
+        """Max futures in flight on one instance (engine batch width)."""
+        return 8
+
+    def launch(self, batch: List[Any], controller: Any) -> None:
+        raise NotImplementedError
 
 
 # ---------------------------------------------------------------- instances

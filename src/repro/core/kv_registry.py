@@ -40,6 +40,10 @@ class KVRegistry:
         self._sessions: Dict[str, SessionCacheInfo] = {}
         # serving-layer callbacks: instance_id -> hook(session_id, hint)
         self._hooks: Dict[str, Callable[[str, str], None]] = {}
+        # reuse-decision telemetry: how often the agent layer found a warm
+        # cache when preparing a call (consumed by the engine bridge)
+        self.stats: Dict[str, int] = {"reuse_queries": 0, "reuse_hits": 0,
+                                      "reuse_tokens": 0}
 
     # ------------------------------------------------------------ bookkeeping
     def touch(self, session_id: str, instance_id: str, tokens: int,
@@ -64,6 +68,26 @@ class KVRegistry:
             if info.residency == Residency.DROP:
                 return 0
             return info.tokens
+
+    def expect_reuse(self, session_id: str, instance_id: str) -> int:
+        """Like ``cached_tokens`` but records the query in ``stats`` — the
+        agent layer calls this when deciding whether a follow-up can be sent
+        as a continuation suffix (warm cache) or needs its full context
+        rebuilt (cold)."""
+        tokens = self.cached_tokens(session_id, instance_id)
+        with self._lock:
+            self.stats["reuse_queries"] += 1
+            if tokens > 0:
+                self.stats["reuse_hits"] += 1
+                self.stats["reuse_tokens"] += tokens
+        return tokens
+
+    def instance_sessions(self, instance_id: str) -> List[str]:
+        """Sessions whose cache currently resides on ``instance_id``."""
+        with self._lock:
+            return [s for s, i in self._sessions.items()
+                    if i.instance_id == instance_id
+                    and i.residency != Residency.DROP]
 
     # ----------------------------------------------------------------- hints
     def register_hook(self, instance_id: str,

@@ -166,6 +166,10 @@ class NalarRuntime:
         self._controllers: Dict[str, ComponentController] = {}
         self._instance_counter: Dict[str, int] = {}
         self._agent_ctx = threading.local()
+        # real execution backends (serving bridges) attached to agent types;
+        # populated by repro.serving.bridge.register_engine_agent
+        self.engine_backends: Dict[str, Any] = {}
+        self._shutdown_hooks: List[Callable[[], None]] = []
         self.global_controller = GlobalController(
             self, policy or default_policies(), interval=control_interval)
         _set_current(self)
@@ -412,8 +416,18 @@ class NalarRuntime:
         self.global_controller.stop()
         return t
 
+    def add_shutdown_hook(self, fn: Callable[[], None]) -> None:
+        """Run ``fn`` on shutdown (engine bridges stop their pump threads)."""
+        self._shutdown_hooks.append(fn)
+
     def shutdown(self) -> None:
         self.global_controller.stop()
+        for fn in reversed(self._shutdown_hooks):
+            try:
+                fn()
+            except Exception:  # noqa: BLE001 — best-effort teardown
+                pass
+        self._shutdown_hooks.clear()
         if current_runtime() is self:
             _set_current(None)
 

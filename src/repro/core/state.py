@@ -237,6 +237,47 @@ class ManagedDict(_ManagedBase):
         return dict(self._get())
 
 
+class SessionTranscript:
+    """Per-(session, agent_type) token transcript kept in managed state.
+
+    The engine bridge uses this to make prefix-KV reuse *semantically* real:
+    every LLM call in a session appends (prompt + generated) token ids here,
+    so a follow-up call knows the full conversation context.  When the
+    engine still holds the session's KV cache (per ``KVRegistry``), only the
+    new suffix is sent; when the cache was evicted or the session migrated
+    to a cold instance, the transcript rebuilds the full context in one
+    prefill.  Because it lives in the ``SessionStateStore``, the transcript
+    moves with session migration like any other managed state (§3.3).
+    """
+
+    NAME = "__llm_transcript__"
+
+    def __init__(self, state_store: SessionStateStore, agent_type: str,
+                 node_id: str) -> None:
+        self._store = state_store
+        self._agent_type = agent_type
+        self._node = node_id
+
+    def tokens(self, session_id: str) -> list:
+        return list(self._store.load(session_id, self._agent_type, self.NAME,
+                                     self._node, default=[]))
+
+    def extend(self, session_id: str, new_tokens: list,
+               max_tokens: Optional[int] = None) -> None:
+        """Append tokens; with ``max_tokens``, keep only the trailing window
+        (tokens beyond the engine's context budget can never be prefilled
+        again, so storing them only bloats migration payloads)."""
+        cur = self._store.load(session_id, self._agent_type, self.NAME,
+                               self._node, default=[])
+        out = list(cur) + [int(t) for t in new_tokens]
+        if max_tokens is not None and len(out) > max_tokens:
+            out = out[-max_tokens:]
+        self._store.save(session_id, self._agent_type, self.NAME, out)
+
+    def clear(self, session_id: str) -> None:
+        self._store.save(session_id, self._agent_type, self.NAME, [])
+
+
 # aliases matching the paper's naming
 managedList = ManagedList
 managedDict = ManagedDict

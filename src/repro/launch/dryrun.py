@@ -247,6 +247,10 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    # jax's Compiled.cost_analysis() has returned a one-element list of
+    # dicts on some versions and a bare dict on others; normalize.
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     trips = loop_trips(cfg, shape)
     n_dev = int(mesh.devices.size)
     coll = collective_bytes(compiled.as_text(), loop_trip_counts=trips,

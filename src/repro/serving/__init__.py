@@ -1,8 +1,12 @@
 from .batching import Request, WaitQueue, bucket_len
+from .bridge import (EngineBridge, EngineMethod, GenerationResult,
+                     hash_tokenize, register_engine_agent)
 from .engine import EngineMetrics, InferenceEngine, get_slot, set_slot
 from .kv_cache import PagedKVPool, SessionPages, StateCachePool
 from .sampler import SamplingParams, sample
 
-__all__ = ["EngineMetrics", "InferenceEngine", "PagedKVPool", "Request",
+__all__ = ["EngineBridge", "EngineMethod", "EngineMetrics",
+           "GenerationResult", "InferenceEngine", "PagedKVPool", "Request",
            "SamplingParams", "SessionPages", "StateCachePool", "WaitQueue",
-           "bucket_len", "get_slot", "sample", "set_slot"]
+           "bucket_len", "get_slot", "hash_tokenize",
+           "register_engine_agent", "sample", "set_slot"]

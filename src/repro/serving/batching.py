@@ -29,6 +29,11 @@ class Request:
     extras: Dict[str, np.ndarray] = field(default_factory=dict)
     priority: float = 0.0
     submitted_at: float = 0.0
+    # Full-context prompt to prefill if the session's KV cache turns out to
+    # be cold at admission (evicted/migrated since the caller checked).  Set
+    # by the NALAR engine bridge when ``prompt`` is only the continuation
+    # suffix of a longer transcript.
+    fallback_prompt: Optional[np.ndarray] = None
     # filled during execution
     generated: List[int] = field(default_factory=list)
     finished: bool = False
@@ -38,7 +43,8 @@ class Request:
 
     @staticmethod
     def make(prompt, session_id: str = "", sampling: Optional[SamplingParams] = None,
-             priority: float = 0.0, now: float = 0.0, **extras) -> "Request":
+             priority: float = 0.0, now: float = 0.0,
+             fallback_prompt=None, **extras) -> "Request":
         return Request(
             request_id=f"req{next(_req_ids)}",
             session_id=session_id or f"sess-req{next(_req_ids)}",
@@ -47,6 +53,8 @@ class Request:
             extras={k: np.asarray(v) for k, v in extras.items()},
             priority=priority,
             submitted_at=now,
+            fallback_prompt=(None if fallback_prompt is None
+                             else np.asarray(fallback_prompt, np.int32)),
         )
 
 

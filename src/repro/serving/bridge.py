@@ -1,0 +1,355 @@
+"""Bridge between NALAR futures and the real JAX ``InferenceEngine``.
+
+This is the module that turns the repo from a discrete-event *emulator* of
+agent serving into an actual agent-serving system: a stub call on an
+engine-backed agent creates an ordinary NALAR future, the runtime routes it
+like any other, and the component controller hands it here — where it becomes
+a ``serving.Request`` in the engine's continuous-batching queue.  A pump
+thread steps the engine; completion callbacks resolve the futures.
+
+Per-session KV state flows through the two core registries:
+
+* ``KVRegistry`` (agent layer) knows which engine instance holds a session's
+  cache and how many tokens it covers.  Before submitting, the bridge asks
+  ``expect_reuse(session, instance)``: a warm cache means only the *new*
+  tokens are sent (the engine appends them to the cached prefix — measurably
+  fewer prefill tokens); a cold one means the full transcript is prefilled.
+* ``SessionTranscript`` (managed state, ``core/state.py``) records every
+  call's prompt + generated tokens under the session's identity, so that
+  cold rebuilds and cross-instance migrations keep the conversation context
+  without developer involvement (§3.3).
+
+Layering: ``repro.core`` never imports serving; the abstract
+``EngineBackedMethod`` hook lives in ``core.executor`` and is implemented
+here, keeping the core runtime importable without JAX.
+"""
+
+from __future__ import annotations
+
+import threading
+import zlib
+from collections import deque
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.directives import Directives
+from ..core.executor import EngineBackedMethod
+from ..core.future import Future, resolve_args
+from ..core.state import SessionTranscript
+from ..core.stubs import AgentSpec
+from .batching import Request
+from .engine import InferenceEngine
+from .sampler import SamplingParams
+
+
+def hash_tokenize(text: Any, vocab_size: int) -> List[int]:
+    """Deterministic toy tokenizer: stable token id per whitespace word.
+
+    The reproduction has no trained tokenizer; what matters for serving
+    behaviour is that identical text maps to identical token ids (so prefix
+    caching is exercised honestly) and ids stay inside the vocabulary.
+    """
+    words = str(text).split()
+    if not words:
+        return [0]
+    return [zlib.crc32(w.encode()) % vocab_size for w in words]
+
+
+@dataclass
+class GenerationResult:
+    """Value an engine-backed future resolves to (default decode)."""
+
+    request_id: str
+    session_id: str
+    tokens: List[int]               # newly generated token ids
+    prompt_tokens: int              # tokens actually sent this call
+    prefix_reused_tokens: int       # prefix restored from the session cache
+    engine_id: str = ""
+
+    def __len__(self) -> int:
+        return len(self.tokens)
+
+    def __str__(self) -> str:
+        return (f"GenerationResult({len(self.tokens)} tokens, "
+                f"reused={self.prefix_reused_tokens}, via {self.engine_id})")
+
+
+class EngineBridge:
+    """Owns one ``InferenceEngine`` and its pump thread.
+
+    ``submit_future`` is called by ``EngineMethod.launch`` on the component
+    controller's thread; everything JAX happens on the single pump thread
+    (continuous batching), and future resolution re-enters the runtime via
+    ``ComponentController.complete_async`` (kernel-scheduled, thread-safe).
+    """
+
+    def __init__(self, runtime, engine: InferenceEngine,
+                 agent_type: str) -> None:
+        self.rt = runtime
+        self.engine = engine
+        self.agent_type = agent_type
+        self.transcript: Optional[SessionTranscript] = None
+        self._cv = threading.Condition()
+        self._pending = 0
+        self._stop = False
+        # request_id -> (future, controller): for failure propagation when
+        # the pump loop itself dies (engine bug, OOM, ...)
+        self._inflight: Dict[str, Tuple[Future, Any]] = {}
+        # per-session ordering: a session's calls must hit the engine one at
+        # a time (each call's prompt depends on the previous call's
+        # transcript and cache), while different sessions batch freely
+        self._session_active: set = set()
+        self._session_q: Dict[str, Deque[Tuple[Future, Any, "EngineMethod"]]] = {}
+        self._thread = threading.Thread(
+            target=self._pump, daemon=True,
+            name=f"engine-pump:{engine.instance_id}")
+        self._thread.start()
+        runtime.add_shutdown_hook(self.stop)
+
+    # ------------------------------------------------------------- lifecycle
+    def attach(self, instance_id: str, node_id: str) -> None:
+        """Bind to the provisioned NALAR agent instance: one identity for
+        routing, KV residency, and managed-state placement."""
+        self.engine.bind_registry(self.rt.kv_registry, instance_id)
+        self.transcript = SessionTranscript(self.rt.state_store,
+                                            self.agent_type, node_id)
+
+    def stop(self) -> None:
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        self._thread.join(timeout=5.0)
+
+    # ------------------------------------------------------------ submission
+    def submit_future(self, fut: Future, controller,
+                      method: "EngineMethod") -> None:
+        if self.transcript is None:
+            raise RuntimeError(
+                "EngineBridge not attached to an agent instance; register "
+                "the agent via repro.serving.bridge.register_engine_agent")
+        sid = fut.meta.session_id
+        if sid:
+            with self._cv:
+                if sid in self._session_active:
+                    # a same-session call is in flight: its completion will
+                    # submit this one (the prompt depends on its outcome)
+                    self._session_q.setdefault(sid, deque()).append(
+                        (fut, controller, method))
+                    return
+                self._session_active.add(sid)
+        try:
+            self._submit_now(fut, controller, method)
+        except BaseException:
+            if sid:
+                self._advance_session(sid)
+            raise
+
+    def _advance_session(self, sid: str) -> None:
+        """Previous call of ``sid`` settled: submit the next queued one."""
+        while True:
+            with self._cv:
+                q = self._session_q.get(sid)
+                if not q:
+                    self._session_active.discard(sid)
+                    self._session_q.pop(sid, None)
+                    return
+                fut, controller, method = q.popleft()
+            try:
+                self._submit_now(fut, controller, method)
+                return
+            except BaseException as e:  # noqa: BLE001 — fail this call only
+                controller.complete_async(fut, error=e)
+
+    def _submit_now(self, fut: Future, controller,
+                    method: "EngineMethod") -> None:
+        args, kwargs = resolve_args(fut.args, fut.kwargs)
+        vocab = self.engine.cfg.vocab_size
+        new_tokens = [int(t) % vocab for t in method.encode(*args, **kwargs)]
+
+        hint = fut.meta.work_hint
+        max_new = int(hint.get("out_tokens", method.sampling.max_new_tokens))
+        sampling = replace(method.sampling, max_new_tokens=max_new)
+
+        sid = fut.meta.session_id
+        iid = self.engine.instance_id
+        prompt: List[int] = new_tokens
+        fallback: Optional[List[int]] = None
+        if sid:
+            history = self.transcript.tokens(sid)
+            # keep context within the engine's sequence budget
+            room = max(1, self.engine.max_seq - max_new - len(new_tokens) - 1)
+            history = history[-room:]
+            if history:
+                cached = self.rt.kv_registry.expect_reuse(sid, iid)
+                full = history + new_tokens
+                if cached > 0:
+                    # warm cache on this instance: send only the suffix; the
+                    # engine appends it to the cached prefix.  If the pool
+                    # evicted the pages since we checked, the engine falls
+                    # back to prefilling the full context.
+                    prompt, fallback = new_tokens, full
+                else:
+                    prompt = full
+
+        req = Request.make(prompt, session_id=sid,
+                           sampling=sampling, priority=fut.meta.priority,
+                           now=self.rt.kernel.now(), fallback_prompt=fallback)
+
+        def on_done(r: Request) -> None:
+            with self._cv:
+                self._pending -= 1
+                self._inflight.pop(r.request_id, None)
+                self._cv.notify_all()
+            try:
+                if sid and not fut.available:
+                    # the conversation advances by this call's new tokens +
+                    # the generation; any prefilled history was already in
+                    # the transcript (rebuild paths must not duplicate it).
+                    # Skip if the future was already resolved elsewhere
+                    # (failed/cancelled): the caller never saw these tokens.
+                    # Cap at the engine's context budget — older tokens can
+                    # never be prefilled again, so storing them only bloats
+                    # state migration.
+                    self.transcript.extend(sid, new_tokens + list(r.generated),
+                                           max_tokens=self.engine.max_seq)
+                value = method.make_value(r, self.engine.instance_id)
+                controller.complete_async(fut, value=value)
+            except BaseException as e:  # noqa: BLE001 — fault reporting (§5)
+                controller.complete_async(fut, error=e)
+            finally:
+                if sid:
+                    self._advance_session(sid)
+
+        with self._cv:
+            if self._stop:
+                raise RuntimeError("engine bridge is stopped")
+            self._pending += 1
+            self._inflight[req.request_id] = (fut, controller)
+            self.engine.submit_async(req, on_done)
+            self._cv.notify_all()
+
+    # ------------------------------------------------------------ pump loop
+    def _pump(self) -> None:
+        while True:
+            with self._cv:
+                while not self._stop and self._pending == 0:
+                    self._cv.wait(timeout=0.25)
+                if self._stop:
+                    return
+            try:
+                self.engine.step()
+                self.engine.drain_completions()
+            except BaseException as e:  # noqa: BLE001 — engine died
+                with self._cv:
+                    dead = list(self._inflight.values())
+                    dead += [(f, c) for q in self._session_q.values()
+                             for (f, c, _m) in q]
+                    self._inflight.clear()
+                    self._session_q.clear()
+                    self._session_active.clear()
+                    self._pending = 0
+                for fut, ctrl in dead:
+                    ctrl.complete_async(fut, error=e)
+
+    def telemetry(self) -> Dict[str, Any]:
+        t = dict(self.engine.telemetry())
+        t["kv_reuse"] = dict(self.rt.kv_registry.stats)
+        t["resident_sessions"] = self.rt.kv_registry.instance_sessions(
+            self.engine.instance_id)
+        with self._cv:
+            t["bridge_inflight"] = self._pending
+        return t
+
+
+@dataclass
+class EngineMethod(EngineBackedMethod):
+    """Leaf LLM method executed on a real ``InferenceEngine``.
+
+    Drop-in peer of ``EmulatedMethod`` in an ``AgentSpec.methods`` dict:
+    same stubs, same futures, same routing/migration machinery — but the
+    call lands in a continuous-batching engine instead of a latency model.
+
+    ``encode(*args, **kwargs)`` maps the stub call to prompt token ids;
+    ``decode(request)`` maps the finished engine request to the future's
+    value (defaults: :func:`hash_tokenize` / :class:`GenerationResult`).
+    Per-call ``_hint={"out_tokens": n}`` overrides the generation length,
+    mirroring how the emulated ``LLMLatency`` consumes hints.
+    """
+
+    bridge: EngineBridge
+    sampling: SamplingParams = field(
+        default_factory=lambda: SamplingParams(max_new_tokens=16))
+    encode: Optional[Callable[..., List[int]]] = None
+    decode: Optional[Callable[[Request], Any]] = None
+
+    def __post_init__(self) -> None:
+        if self.encode is None:
+            vocab = self.bridge.engine.cfg.vocab_size
+            self.encode = lambda *a, **kw: hash_tokenize(
+                " ".join(str(x) for x in a), vocab)
+
+    def capacity(self) -> int:
+        # keep the wait queue primed one batch deep so freed slots refill
+        # without a controller round-trip
+        return self.bridge.engine.max_batch * 2
+
+    def launch(self, batch: List[Future], controller) -> None:
+        for fut in batch:
+            try:
+                self.bridge.submit_future(fut, controller, self)
+            except BaseException as e:  # noqa: BLE001 — bad encode/args must
+                # fail only this future, not batch-mates already submitted
+                controller.complete_async(fut, error=e)
+
+    def make_value(self, req: Request, engine_id: str) -> Any:
+        if self.decode is not None:
+            return self.decode(req)
+        return GenerationResult(
+            request_id=req.request_id, session_id=req.session_id,
+            tokens=list(req.generated), prompt_tokens=len(req.prompt),
+            prefix_reused_tokens=req.prefix_reused_tokens,
+            engine_id=engine_id)
+
+
+def register_engine_agent(runtime, name: str, engine: InferenceEngine, *,
+                          methods: Tuple[str, ...] = ("generate",),
+                          sampling: Optional[SamplingParams] = None,
+                          encode: Optional[Callable[..., List[int]]] = None,
+                          decode: Optional[Callable[[Request], Any]] = None,
+                          node: Optional[str] = None,
+                          resources: Optional[Dict[str, float]] = None):
+    """Register a real-engine-backed agent type on ``runtime``.
+
+    Returns the stub.  The engine becomes the single instance of the agent
+    type: its telemetry, KV residency and managed state are all tagged with
+    the provisioned NALAR instance id, so the Router's cache-locality rule
+    (§4.3.2) and session migration see one coherent component.
+
+    Requires ``NalarRuntime(simulate=False)``: engine completions arrive in
+    wall-clock time, which the virtual-time SimKernel cannot await.
+    """
+    from ..core.clock import RealTimeKernel
+    if not isinstance(runtime.kernel, RealTimeKernel):
+        raise RuntimeError(
+            "engine-backed agents need a real-time runtime; construct "
+            "NalarRuntime(simulate=False) (the SimKernel's virtual time "
+            "cannot wait on wall-clock engine completions)")
+
+    bridge = EngineBridge(runtime, engine, agent_type=name)
+    m = EngineMethod(bridge=bridge,
+                     sampling=sampling or SamplingParams(max_new_tokens=16),
+                     encode=encode, decode=decode)
+    spec = AgentSpec(
+        name=name,
+        methods={mn: m for mn in methods},
+        directives=Directives(max_instances=1, min_instances=1,
+                              uses_managed_state=True,
+                              resources=resources or {}))
+    node = node or next(iter(runtime.nodes))
+    stub = runtime.register_agent(spec, nodes=[node], instances=1)
+    iid = runtime.instances_of_type(name)[0]
+    bridge.attach(iid, node)
+    runtime.engine_backends[name] = bridge
+    return stub

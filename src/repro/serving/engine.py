@@ -120,10 +120,51 @@ class InferenceEngine:
         self._decode_fn = jax.jit(model.decode_step)
         self._prefill_cache: Dict[int, Callable] = {}
 
+        # async completion plumbing (NALAR bridge): request_id -> callback,
+        # plus a list of finished requests awaiting drain.  Callbacks fire
+        # outside the step lock so they may re-enter submit().
+        self._callbacks: Dict[str, Callable[[Request], None]] = {}
+        self._finished: List[Request] = []
+
     # ----------------------------------------------------------- submission
     def submit(self, req: Request) -> str:
         self.queue.push(req)
         return req.request_id
+
+    def submit_async(self, req: Request,
+                     on_done: Optional[Callable[[Request], None]] = None) -> str:
+        """Queue ``req``; ``on_done(req)`` fires from ``drain_completions``
+        after the request finishes (the NALAR future-resolution hook)."""
+        if on_done is not None:
+            with self._lock:
+                self._callbacks[req.request_id] = on_done
+        return self.submit(req)
+
+    def poll_finished(self) -> List[Request]:
+        """Requests finished since the last poll/drain (no callbacks fired)."""
+        with self._lock:
+            out, self._finished = self._finished, []
+        return out
+
+    def drain_completions(self) -> int:
+        """Fire completion callbacks for finished requests.  Called by the
+        bridge pump thread after each step(), outside the engine lock."""
+        with self._lock:
+            done, self._finished = self._finished, []
+            cbs = [(r, self._callbacks.pop(r.request_id, None)) for r in done]
+        for req, cb in cbs:
+            if cb is not None:
+                cb(req)
+        return len(cbs)
+
+    def bind_registry(self, kv_registry, instance_id: str) -> None:
+        """(Re)bind this engine to a NALAR runtime identity: the engine's
+        telemetry and cache-pool hints are tagged with the agent-instance id
+        so the runtime's Router and KVRegistry see one coherent name."""
+        self.instance_id = instance_id
+        self.kv_registry = kv_registry
+        if kv_registry is not None:
+            kv_registry.register_hook(instance_id, self.pool.on_hint)
 
     def generate(self, prompt, session_id: str = "",
                  sampling: Optional[SamplingParams] = None,
@@ -197,6 +238,11 @@ class InferenceEngine:
                 # SSM/hybrid: resumed state + run prompt incrementally is
                 # equivalent to prefill; simplest correct path: prefill anyway
                 resumed = None
+            if resumed is None and req.fallback_prompt is not None:
+                # The caller sent only a continuation suffix expecting a warm
+                # session cache, but the cache is cold (evicted or migrated):
+                # rebuild the full context in one prefill instead.
+                req.prompt = req.fallback_prompt
             if resumed is not None:
                 row_cache, tokens = resumed
                 req.prefix_reused_tokens = tokens
@@ -294,6 +340,9 @@ class InferenceEngine:
                                        tokens, now)
         self.slots[slot] = None
         self._active_mask[slot] = False
+        self._finished.append(req)
+        if len(self._finished) > 8192:   # sync callers never drain; bound it
+            del self._finished[:4096]
 
     # ------------------------------------------------------------ telemetry
     def run_until_idle(self, max_steps: int = 100_000) -> None:
@@ -301,9 +350,17 @@ class InferenceEngine:
             if self.step() == 0 and len(self.queue) == 0:
                 return
 
-    def telemetry(self) -> Dict[str, float]:
+    def slot_sessions(self) -> Dict[int, str]:
+        """Session tag of every occupied batch slot (cache-slot ownership)."""
+        with self._lock:
+            return {i: r.session_id for i, r in enumerate(self.slots)
+                    if r is not None}
+
+    def telemetry(self) -> Dict[str, Any]:
         m = self.metrics
         return {"queued": m.queued, "active": m.active,
                 "completed": m.completed, "decode_steps": m.decode_steps,
-                "prefills": m.prefills, "prefix_hits": m.prefix_hits,
-                "tokens_generated": m.tokens_generated}
+                "prefills": m.prefills, "prefill_tokens": m.prefill_tokens,
+                "prefix_hits": m.prefix_hits,
+                "tokens_generated": m.tokens_generated,
+                "slot_sessions": self.slot_sessions()}

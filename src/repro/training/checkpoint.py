@@ -1,22 +1,57 @@
-"""Pytree checkpointing (msgpack + zstd).
+"""Pytree checkpointing (msgpack + zstd, zlib fallback).
 
 Layout: a single ``.ckpt`` file holding {treedef-repr, flat arrays}.  Arrays
 are serialized with dtype/shape headers; bf16 round-trips through uint16
 views (msgpack has no bf16).  Restoration validates structure against a
 template pytree, which is what makes NALAR-style retry-with-state safe: a
 resumed worker either gets exactly the structure it expects or fails loudly.
+
+``zstandard`` is optional: when absent, payloads compress with stdlib zlib.
+Files are self-describing via a 4-byte magic, so either build can restore
+checkpoints written by the other (as long as the needed codec is present).
 """
 
 from __future__ import annotations
 
 import os
+import zlib
 from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # pragma: no cover - depends on environment
+    zstandard = None
+
+_MAGIC_ZSTD = b"NLZS"
+_MAGIC_ZLIB = b"NLZL"
+
+
+def _compress(packed: bytes) -> bytes:
+    if zstandard is not None:
+        return _MAGIC_ZSTD + zstandard.ZstdCompressor(level=3).compress(packed)
+    return _MAGIC_ZLIB + zlib.compress(packed, level=6)
+
+
+def _decompress(comp: bytes) -> bytes:
+    magic, body = comp[:4], comp[4:]
+    if magic == _MAGIC_ZSTD:
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint was written with zstd but zstandard is not "
+                "installed; install it or re-save with the zlib codec")
+        return zstandard.ZstdDecompressor().decompress(body)
+    if magic == _MAGIC_ZLIB:
+        return zlib.decompress(body)
+    # legacy frame (pre-magic): raw zstd stream
+    if zstandard is not None:
+        return zstandard.ZstdDecompressor().decompress(comp)
+    raise RuntimeError("unrecognized checkpoint framing (legacy zstd file "
+                       "without zstandard installed?)")
 
 
 def _encode_array(x: Any) -> Dict[str, Any]:
@@ -45,7 +80,7 @@ def save(path: str, tree: Any) -> int:
         "leaves": [_encode_array(x) for x in leaves],
     }
     packed = msgpack.packb(payload, use_bin_type=True)
-    comp = zstandard.ZstdCompressor(level=3).compress(packed)
+    comp = _compress(packed)
     tmp = path + ".tmp"
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     with open(tmp, "wb") as f:
@@ -57,7 +92,7 @@ def save(path: str, tree: Any) -> int:
 def restore(path: str, template: Any) -> Any:
     with open(path, "rb") as f:
         comp = f.read()
-    packed = zstandard.ZstdDecompressor().decompress(comp)
+    packed = _decompress(comp)
     payload = msgpack.unpackb(packed, raw=False)
     leaves, treedef = jax.tree_util.tree_flatten(template)
     if payload["n_leaves"] != len(leaves):

@@ -8,6 +8,11 @@ reassignment policy moves GPU capacity between branches; baselines can't,
 and their overloaded branch's latency blows up (the paper reports OOM
 failures at 70-80 RPS — here the failure mode is unbounded queueing, and we
 report a timeout rate).
+
+Two execution modes: :func:`build_runtime` (emulated branch LLMs, virtual
+time — the paper's §6.3 methodology) and :func:`build_engine_runtime`
+(branch LLMs on real ``InferenceEngine`` instances, wall-clock time — see
+``examples/real_engine_workflow.py``).
 """
 
 from __future__ import annotations
@@ -56,6 +61,46 @@ def build_runtime(sys_cfg: SystemConfig, *, n_gpus: int = 8,
                               max_instances=n_gpus - 1,
                               min_instances=1, resources={"GPU": 1}),
     ), instances=n_gpus - n_gpus // 2)
+    return rt
+
+
+def build_engine_runtime(*, arch: str = "qwen3_0_6b", max_batch: int = 4,
+                         max_seq: int = 128, max_new_tokens: int = 8,
+                         seed: int = 0) -> NalarRuntime:
+    """Real-execution variant of :func:`build_runtime`.
+
+    Same workflow topology — a cheap router tool classifies, then a branch
+    LLM generates — but the two branch agents execute on actual
+    ``repro.serving.InferenceEngine`` instances (reduced model, CPU JAX)
+    through the ``EngineMethod`` backend instead of ``LLMLatency`` emulation.
+    Requests run in wall-clock time (``simulate=False``); repeated calls in
+    one session reuse prefix KV on the engine that holds the session cache.
+    """
+    import jax
+
+    from ..configs import get_smoke_config
+    from ..models import build_model
+    from ..serving import InferenceEngine, SamplingParams
+    from ..serving.bridge import register_engine_agent
+
+    rt = NalarRuntime(simulate=False,
+                      nodes={"n0": {"GPU": 2, "CPU": 8}}, seed=seed)
+    rt.register_agent(AgentSpec(
+        name="router",
+        methods={"classify": emulated(
+            FixedLatency(0.001), lambda q: "code" if "code" in q else "chat")},
+        directives=Directives(max_instances=2, resources={"CPU": 1}),
+    ), instances=1)
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    for name in ("chat_llm", "code_llm"):
+        engine = InferenceEngine(model, params, max_batch=max_batch,
+                                 max_seq=max_seq)
+        register_engine_agent(
+            rt, name, engine,
+            sampling=SamplingParams(max_new_tokens=max_new_tokens),
+            resources={"GPU": 1})
     return rt
 
 

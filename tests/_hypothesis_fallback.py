@@ -1,0 +1,106 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The repo's property tests (tests/test_properties.py) are written against the
+real hypothesis API.  This shim implements just the surface they use —
+``given``, ``settings`` and a handful of strategies — backed by a seeded
+``random.Random`` so the tests still run (as deterministic randomized tests,
+without shrinking) in environments where the extra dependency is missing.
+"""
+
+from __future__ import annotations
+
+import random
+import string
+from typing import Any, Callable, List
+
+
+class Strategy:
+    def __init__(self, draw: Callable[[random.Random, int], Any]) -> None:
+        self._draw = draw
+
+    def example(self, rng: random.Random, depth: int = 0) -> Any:
+        return self._draw(rng, depth)
+
+    def __or__(self, other: "Strategy") -> "Strategy":
+        return Strategy(lambda rng, d: (self if rng.random() < 0.5 else other)
+                        .example(rng, d))
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies``."""
+
+    @staticmethod
+    def integers(min_value: int = -(2 ** 31), max_value: int = 2 ** 31) -> Strategy:
+        return Strategy(lambda rng, d: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0) -> Strategy:
+        return Strategy(lambda rng, d: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(seq) -> Strategy:
+        items = list(seq)
+        return Strategy(lambda rng, d: rng.choice(items))
+
+    @staticmethod
+    def text(max_size: int = 8) -> Strategy:
+        alphabet = string.ascii_letters + string.digits
+        return Strategy(lambda rng, d: "".join(
+            rng.choice(alphabet) for _ in range(rng.randint(0, max_size))))
+
+    @staticmethod
+    def lists(elements: Strategy, min_size: int = 0,
+              max_size: int = 8) -> Strategy:
+        return Strategy(lambda rng, d: [
+            elements.example(rng, d + 1)
+            for _ in range(rng.randint(min_size, max_size))])
+
+    @staticmethod
+    def tuples(*elements: Strategy) -> Strategy:
+        return Strategy(lambda rng, d: tuple(e.example(rng, d + 1)
+                                             for e in elements))
+
+    @staticmethod
+    def dictionaries(keys: Strategy, values: Strategy,
+                     max_size: int = 8) -> Strategy:
+        def draw(rng: random.Random, d: int) -> dict:
+            return {keys.example(rng, d + 1): values.example(rng, d + 1)
+                    for _ in range(rng.randint(0, max_size))}
+        return Strategy(draw)
+
+    @staticmethod
+    def recursive(base: Strategy, extend: Callable[[Strategy], Strategy],
+                  max_leaves: int = 10) -> Strategy:
+        # depth-bounded recursion instead of hypothesis's leaf accounting
+        max_depth = max(1, max_leaves // 3)
+
+        def draw(rng: random.Random, d: int) -> Any:
+            if d >= max_depth or rng.random() < 0.4:
+                return base.example(rng, d + 1)
+            return extend(ref).example(rng, d + 1)
+
+        ref = Strategy(draw)
+        return ref
+
+
+def settings(max_examples: int = 25, **_ignored) -> Callable:
+    def deco(fn: Callable) -> Callable:
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: Strategy) -> Callable:
+    def deco(fn: Callable) -> Callable:
+        n = getattr(fn, "_fallback_max_examples", 25)
+
+        def wrapper() -> None:
+            rng = random.Random(f"fallback:{fn.__name__}")
+            for _ in range(n):
+                args: List[Any] = [s.example(rng) for s in strats]
+                fn(*args)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

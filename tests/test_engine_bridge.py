@@ -1,0 +1,223 @@
+"""Runtime <-> InferenceEngine bridge: futures execute on the real engine.
+
+Covers the tentpole contract:
+ * a stub call on an engine-backed agent resolves its future with real
+   engine output (GenerationResult);
+ * two calls in one session reuse prefix KV — the engine's prefill-token
+   telemetry shows the second call skipped the shared prefix;
+ * simulate=True behaviour is unchanged (emulated agents still run in
+   virtual time; engine agents are rejected on a SimKernel runtime).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (AgentSpec, Directives, FixedLatency, NalarRuntime,
+                        deployment, emulated)
+from repro.core.runtime import current_runtime
+from repro.models import build_model
+from repro.serving import (GenerationResult, InferenceEngine, SamplingParams,
+                           register_engine_agent)
+
+
+@pytest.fixture(scope="module")
+def model_setup():
+    cfg = get_smoke_config("qwen3_0_6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def make_engine_runtime(model, params, max_new_tokens=4):
+    rt = NalarRuntime(simulate=False)
+    engine = InferenceEngine(model, params, max_batch=4, max_seq=128)
+    register_engine_agent(
+        rt, "llm", engine,
+        sampling=SamplingParams(max_new_tokens=max_new_tokens))
+    return rt, engine
+
+
+def test_future_resolves_with_engine_output(model_setup):
+    cfg, model, params = model_setup
+    rt, engine = make_engine_runtime(model, params)
+
+    def driver():
+        fut = current_runtime().stub("llm").generate("hello engine world")
+        assert not fut.available     # async: submission returns immediately
+        return fut.value(timeout=300)
+
+    out = deployment.main(driver, runtime=rt)
+    assert isinstance(out, GenerationResult)
+    assert len(out.tokens) == 4
+    assert all(0 <= t < cfg.vocab_size for t in out.tokens)
+    assert engine.metrics.completed == 1
+    # the future executed on the engine's NALAR instance identity
+    assert out.engine_id == rt.instances_of_type("llm")[0]
+    rt.shutdown()
+
+
+def test_same_session_calls_reuse_prefix_kv(model_setup):
+    cfg, model, params = model_setup
+    rt, engine = make_engine_runtime(model, params)
+
+    def driver():
+        llm = current_runtime().stub("llm")
+        r1 = llm.generate("the quick brown fox jumps over").value(timeout=300)
+        t_after_first = engine.metrics.prefill_tokens
+        r2 = llm.generate("and keeps running").value(timeout=300)
+        return r1, r2, t_after_first
+
+    r1, r2, t_after_first = deployment.main(driver, runtime=rt)
+    # first call prefilled its prompt; second call resumed the session cache
+    assert r1.prefix_reused_tokens == 0
+    assert r2.prefix_reused_tokens > 0
+    assert engine.metrics.prefix_hits == 1
+    # prefill-token telemetry did NOT grow on the warm call: the full
+    # context (first prompt + generation + suffix) was never re-prefilled
+    assert engine.metrics.prefill_tokens == t_after_first
+    # second call sent only the new suffix (3 words), not the transcript
+    assert r2.prompt_tokens == 3
+    # agent-layer KV registry made (and recorded) the reuse decision
+    assert rt.kv_registry.stats["reuse_hits"] >= 1
+    # managed state carries the session transcript
+    bridge = rt.engine_backends["llm"]
+    sid = next(iter(rt.sessions._sessions))
+    transcript = bridge.transcript.tokens(sid)
+    assert len(transcript) == (r1.prompt_tokens + len(r1.tokens)
+                               + r2.prompt_tokens + len(r2.tokens))
+    rt.shutdown()
+
+
+def test_concurrent_futures_share_engine_batch(model_setup):
+    """Engine-backed instances are not head-of-line blocked: futures from
+    different sessions are in flight on one instance at once."""
+    cfg, model, params = model_setup
+    rt, engine = make_engine_runtime(model, params, max_new_tokens=3)
+    results = []
+
+    def driver(i):
+        return current_runtime().stub("llm") \
+            .generate(f"query number {i}").value(timeout=300)
+
+    rt.start()
+    for i in range(6):       # six requests -> six independent sessions
+        rt.submit_request(driver, i,
+                          on_done=lambda out, err: results.append((out, err)))
+    rt.run()
+    assert len(results) == 6
+    assert all(err is None for _, err in results)
+    assert all(isinstance(out, GenerationResult) for out, _ in results)
+    assert engine.metrics.completed == 6
+    rt.shutdown()
+
+
+def test_engine_submit_async_and_poll(model_setup):
+    """The engine's raw async surface: submit with a callback, poll the
+    finished list (no NALAR runtime involved)."""
+    cfg, model, params = model_setup
+    from repro.serving import Request
+    engine = InferenceEngine(model, params, max_batch=2, max_seq=64)
+    done = []
+    req = Request.make(list(range(5)),
+                       sampling=SamplingParams(max_new_tokens=3))
+    engine.submit_async(req, on_done=done.append)
+    engine.run_until_idle()
+    assert req.finished
+    # callbacks have not fired yet; poll_finished surfaces the request
+    polled = engine.poll_finished()
+    assert polled == [req] and done == []
+    assert engine.poll_finished() == []          # drained
+    # drain_completions after poll finds nothing left to fire
+    assert engine.drain_completions() == 0
+
+
+def test_concurrent_same_session_calls_stay_ordered(model_setup):
+    """Same-session calls issued concurrently are serialized by the bridge:
+    each later call sees the previous call's transcript (no racy context)."""
+    cfg, model, params = model_setup
+    rt, engine = make_engine_runtime(model, params)
+
+    def fanout():
+        llm = current_runtime().stub("llm")
+        futs = [llm.generate(f"concurrent turn {i}") for i in range(3)]
+        return [f.value(timeout=300) for f in futs]
+
+    outs = deployment.main(fanout, runtime=rt)
+    assert len(outs) == 3
+    # calls 2 and 3 were warm continuations of the serialized session
+    assert sum(o.prefix_reused_tokens > 0 for o in outs) == 2
+    assert [o.prompt_tokens for o in outs] == [3, 3, 3]   # suffixes only
+    # transcript is exactly the concatenation of (new tokens + generation)
+    bridge = rt.engine_backends["llm"]
+    sid = next(iter(rt.sessions._sessions))
+    assert len(bridge.transcript.tokens(sid)) == sum(
+        o.prompt_tokens + len(o.tokens) for o in outs)
+    rt.shutdown()
+
+
+def test_encode_failure_fails_only_that_future(model_setup):
+    """A bad input poisons its own future, not batch-mates submitted
+    alongside it."""
+    cfg, model, params = model_setup
+    rt = NalarRuntime(simulate=False)
+    engine = InferenceEngine(model, params, max_batch=4, max_seq=128)
+
+    def encode(q):
+        if "poison" in str(q):
+            raise ValueError("unencodable input")
+        from repro.serving import hash_tokenize
+        return hash_tokenize(q, cfg.vocab_size)
+
+    register_engine_agent(rt, "llm", engine, encode=encode,
+                          sampling=SamplingParams(max_new_tokens=3))
+
+    def fanout():
+        llm = current_runtime().stub("llm")
+        futs = [llm.generate("fine one"), llm.generate("poison pill"),
+                llm.generate("fine two")]
+        out, errs = [], []
+        for f in futs:
+            try:
+                out.append(f.value(timeout=300))
+            except ValueError as e:
+                errs.append(str(e))
+        return out, errs
+
+    out, errs = deployment.main(fanout, runtime=rt)
+    assert len(out) == 2 and all(isinstance(o, GenerationResult) for o in out)
+    assert errs == ["unencodable input"]
+    rt.shutdown()
+
+
+def test_simulate_true_behavior_unchanged():
+    """Virtual-time emulated execution is untouched by the bridge: same
+    deterministic result and virtual-clock latency as the seed runtime."""
+    ends = []
+    for _ in range(2):
+        rt = NalarRuntime(simulate=True)
+        rt.register_agent(AgentSpec(
+            name="tool",
+            methods={"run": emulated(FixedLatency(0.5),
+                                     lambda x: x * 2)},
+            directives=Directives(max_instances=1, resources={"CPU": 1})))
+
+        def driver():
+            return current_runtime().stub("tool").run(21).value()
+
+        out = deployment.main(driver, runtime=rt)
+        assert out == 42
+        ends.append(rt.kernel.now())
+        rt.shutdown()
+    assert ends[0] == ends[1]            # deterministic virtual time
+    assert ends[0] >= 0.5                # latency model still charged
+
+
+def test_engine_agent_rejected_on_sim_kernel(model_setup):
+    cfg, model, params = model_setup
+    rt = NalarRuntime(simulate=True)
+    engine = InferenceEngine(model, params, max_batch=2, max_seq=64)
+    with pytest.raises(RuntimeError, match="simulate=False"):
+        register_engine_agent(rt, "llm", engine)
+    rt.shutdown()

@@ -1,9 +1,17 @@
-"""Property-based tests (hypothesis) on system invariants."""
+"""Property-based tests (hypothesis) on system invariants.
+
+When hypothesis is not installed, a deterministic random-sampling fallback
+(tests/_hypothesis_fallback.py) stands in so these still run everywhere.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import NodeStore, Telemetry
 from repro.core.future import extract_dependencies
