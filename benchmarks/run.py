@@ -18,7 +18,7 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from . import (fig9_financial, fig9_router, fig9_swe, fig10_control_loop,  # noqa: E402
-               sec62_policies, table4_two_level)
+               pool_routing, sec62_policies, table4_two_level)
 
 BENCHES = {
     "fig9a_financial": fig9_financial,
@@ -27,6 +27,8 @@ BENCHES = {
     "fig10_control_loop": fig10_control_loop,
     "table4_two_level": table4_two_level,
     "sec62_policies": sec62_policies,
+    # real engines, wall-clock: replica-pool routing policy comparison
+    "pool_routing": pool_routing,
 }
 
 

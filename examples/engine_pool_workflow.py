@@ -1,0 +1,116 @@
+"""Three REAL engine replicas behind one agent type, with live migration.
+
+The tentpole demo of the `EnginePool`: N `InferenceEngine` replicas (reduced
+qwen3-0.6b, CPU JAX) are the N instances of a single `llm` agent type, so
+the paper's control machinery drives real execution end-to-end —
+
+1. concurrent sessions spread across replicas (least-ETA default routing);
+2. follow-up turns stick to the replica holding the session's KV cache and
+   send only their new suffix (Router KV locality, §4.3.2);
+3. a live `migrate(session, src, dst)` replays the session transcript onto
+   the destination engine (one replay prefill, visible in its
+   prefill-token telemetry), re-homes the KV registry, and the session's
+   next turn is a *warm* continuation on the new replica.
+
+The pool is heterogeneous on purpose: the last replica runs half the batch
+width, and everything still works because migration moves tokens, not
+cache pages.
+
+    PYTHONPATH=src python examples/engine_pool_workflow.py
+"""
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import PolicyChain, deployment
+from repro.core.runtime import current_runtime
+from repro.workloads.router import build_pool_runtime
+
+
+def turn(text: str):
+    rt = current_runtime()
+    return rt.stub("llm").generate(text, _hint={"out_tokens": 5}) \
+             .value(timeout=300)
+
+
+def main() -> None:
+    print("[pool] building 3-replica EnginePool (reduced qwen3-0.6b, CPU)...")
+    rt = build_pool_runtime(replicas=3, max_new_tokens=5,
+                            policy=PolicyChain(), heterogeneous=True)
+    pool = rt.engine_backends["llm"]
+    print(f"[pool] replicas: {pool.instance_ids}")
+    t0 = time.perf_counter()
+
+    # -- 1+2: concurrent sessions, sticky warm follow-ups -------------------
+    results = {}
+
+    def session_driver(tag: str):
+        r1 = turn(f"session {tag} opening question with context")
+        r2 = turn(f"{tag} follow up")
+        return r1, r2
+
+    rt.start()
+    # stagger arrivals: least-ETA then sees earlier sessions in flight and
+    # spreads the cold starts (simultaneous arrivals all route before any
+    # lands, which ties every replica at zero load)
+    for i, tag in enumerate(("alpha", "beta", "gamma")):
+        rt.submit_request(session_driver, tag, delay=i * 0.4,
+                          on_done=lambda out, err, t=tag:
+                          results.__setitem__(t, (out, err)))
+    time.sleep(3 * 0.4 + 0.5)          # let every arrival timer fire
+    rt.run()
+    used = set()
+    for tag, (out, err) in sorted(results.items()):
+        assert err is None, f"session {tag} failed: {err}"
+        r1, r2 = out
+        used.add(r1.engine_id)
+        print(f"  {tag}: turn1 on {r1.engine_id} (sent {r1.prompt_tokens}), "
+              f"turn2 on {r2.engine_id} (sent {r2.prompt_tokens}, "
+              f"reused {r2.prefix_reused_tokens})")
+        assert r1.engine_id == r2.engine_id, "follow-up left its KV home"
+        assert r2.prefix_reused_tokens > 0, "follow-up was not warm"
+    print(f"[pool] {len(used)} distinct replicas served the opening turns")
+
+    # -- 3: live migration with transcript replay ---------------------------
+    src = results["alpha"][0][0].engine_id     # alpha's home replica
+    # alpha's session id: the registry knows each session's cache home
+    sid = next(s for s in rt.sessions._sessions
+               if (info := rt.kv_registry.lookup(s)) is not None
+               and info.instance_id == src)
+    dst = next(i for i in pool.instance_ids if i != src)
+    dst_engine = pool.bridge_of(dst).engine
+    pt_before = dst_engine.metrics.prefill_tokens
+
+    n = pool.migrate_session(sid, src, dst)
+    replayed = dst_engine.metrics.prefill_tokens - pt_before
+    print(f"[pool] migrate {sid}: {src} -> {dst} "
+          f"(returned {n}, replayed {replayed} prefill tokens)")
+    assert n >= 1 and replayed > 0, "transcript replay did not happen"
+
+    pt_after_replay = dst_engine.metrics.prefill_tokens
+    r3 = deployment.main(turn, "post migration follow up",
+                         runtime=rt, session=sid)
+    print(f"[pool] post-migration turn on {r3.engine_id}: "
+          f"sent {r3.prompt_tokens}, reused {r3.prefix_reused_tokens}, "
+          f"dst prefilled {dst_engine.metrics.prefill_tokens - pt_after_replay} "
+          f"more tokens")
+    assert r3.engine_id == dst, "follow-up did not land on the destination"
+    assert r3.prefix_reused_tokens > 0, \
+        "destination did not reuse the replayed transcript"
+    assert dst_engine.metrics.prefill_tokens == pt_after_replay, \
+        "warm continuation should prefill nothing beyond the replay"
+    assert pool.migrate_session(sid, src, dst) == 0, \
+        "double-migrate must be a no-op"
+
+    wall = time.perf_counter() - t0
+    print(f"[pool] stats: {pool.stats}")
+    print(f"[pool] kv-registry reuse: {rt.kv_registry.stats}")
+    rt.shutdown()
+    print(f"[pool] OK in {wall:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,10 +21,10 @@ from .future import Future, FutureMetadata, FutureState, FutureTable
 from .kv_registry import KVRegistry, Residency
 from .node_store import NodeStore, StoreCluster
 from .policy import (Action, ActionSink, ClusterView, HighPrioritySessionPolicy,
-                     HoLMitigationPolicy, InstanceView, LoadBalancePolicy,
-                     LPTPolicy, LPTSchedule, Policy, PolicyChain,
-                     ResourceReassignmentPolicy, SRTFPolicy, SRTFSchedule,
-                     default_policies)
+                     HoLMitigationPolicy, InstanceView, KVAffinityPolicy,
+                     LoadBalancePolicy, LPTPolicy, LPTSchedule, Policy,
+                     PolicyChain, ResourceReassignmentPolicy, SRTFPolicy,
+                     SRTFSchedule, default_policies)
 from .runtime import NalarRuntime, Router, current_runtime, deployment
 from .session import SessionRegistry, get_context, set_context
 from .state import (ManagedDict, ManagedList, SessionStateStore,
@@ -38,7 +38,8 @@ __all__ = [
     "EngineBackedMethod", "FixedLatency",
     "Future", "FutureMetadata", "FutureState", "FutureTable",
     "GlobalController", "HighPrioritySessionPolicy", "HoLMitigationPolicy",
-    "InstanceView", "Kernel", "KVRegistry", "LatencyModel", "LLMLatency",
+    "InstanceView", "KVAffinityPolicy", "Kernel", "KVRegistry",
+    "LatencyModel", "LLMLatency",
     "LoadBalancePolicy", "LocalSchedule", "LognormalLatency", "LPTPolicy",
     "LPTSchedule", "ManagedDict", "ManagedList", "NalarRuntime", "NodeStore",
     "Policy", "PolicyChain", "RealTimeKernel", "Residency",

@@ -56,6 +56,14 @@ class GlobalController:
     def collect_view(self) -> ClusterView:
         now = self.runtime.kernel.now()
         view = ClusterView(now=now)
+        # Sessions that still have unresolved futures.  Metrics mirrors are
+        # pushed asynchronously, so an instance's ``waiting_sessions`` list
+        # can name sessions whose work has since completed; acting on those
+        # (e.g. migrating a finished session, Fig. 6 style) wastes real
+        # migration work.  Prune against the future table at aggregation.
+        live_sessions = {f.meta.session_id
+                         for f in self.runtime.futures.snapshot()
+                         if f.meta.session_id and not f.available}
         for store in self.runtime.stores.all_stores():
             for key in store.keys("metrics:"):
                 m = store.hgetall(key)
@@ -73,7 +81,9 @@ class GlobalController:
                     completed=int(m.get("completed", 0)),
                     failed=int(m.get("failed", 0)),
                     alive=bool(m.get("alive", True)),
-                    waiting_sessions=list(m.get("waiting_sessions", [])),
+                    waiting_sessions=[s for s in m.get("waiting_sessions", [])
+                                      if s in live_sessions],
+                    inflight=int(m.get("inflight", 0)),
                 )
                 view.instances[iid] = iv
                 view.by_type.setdefault(iv.agent_type, []).append(iid)
@@ -84,6 +94,7 @@ class GlobalController:
         for s in self.runtime.sessions.all():
             view.session_priority[s.session_id] = s.priority
         view.node_resources = self.runtime.free_resources()
+        view.kv_residency = self.runtime.kv_registry.residency_map()
         return view
 
     def run_once(self) -> Dict[str, float]:

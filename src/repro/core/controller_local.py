@@ -126,6 +126,10 @@ class ComponentController:
                             batch.append(f)
                 self.inst.dequeue_selected(batch)
                 self.inst.running = list(batch)
+            # re-publish after dequeue: otherwise the node-store mirror keeps
+            # claiming these sessions are *waiting* here until completion,
+            # and a policy round in between acts on the stale list
+            self._publish_metrics()
         self._execute(batch)
 
     def _execute(self, batch: List[Future]) -> None:
@@ -254,6 +258,31 @@ class ComponentController:
         self._maybe_dispatch()
 
     # ------------------------------------------------------------- migration
+    def take_session_futures(self, session_id: str) -> List[Future]:
+        """Atomically remove and return this session's queued futures.
+
+        Used by ``serving.pool.EnginePool`` migration to hand a session's
+        not-yet-launched work to the destination replica without reaching
+        into the queue's bookkeeping (``waiting_sessions`` stays coherent).
+        """
+        with self._lock:
+            futs = [f for f in list(self.inst.queue)
+                    if f.meta.session_id == session_id]
+            if futs:
+                self.inst.dequeue_selected(futs)
+        if futs:
+            self._publish_metrics()
+        return futs
+
+    def detach_running(self, fut: Future) -> None:
+        """Drop ``fut`` from the running set (engine-pool re-route: the
+        future never reached the engine and is being re-submitted on
+        another replica)."""
+        with self._lock:
+            if fut in self.inst.running:
+                self.inst.running.remove(fut)
+        self._publish_metrics()
+
     def migrate_out(self, fut: Future, dst_instance_id: str) -> bool:
         """Fig. 8 protocol, steps 2–6, coordinated locally.
 
@@ -321,7 +350,19 @@ class ComponentController:
         return True
 
     def migrate_session(self, session_id: str, dst_instance_id: str) -> int:
-        """Move all queued/parked futures of a session (Table 2 ``migrate``)."""
+        """Move a session to another instance (Table 2 ``migrate``).
+
+        Engine-pool agent types delegate to the pool backend, which owns the
+        physical semantics: defer past the in-flight engine call, replay the
+        transcript on the destination, re-home the KV registry, then move
+        queued futures.  Emulated/composite agents keep the seed behaviour —
+        move all queued/parked futures of the session.
+        """
+        backend = self.runtime.engine_backends.get(self.inst.agent_type)
+        if backend is not None and hasattr(backend, "migrate_session"):
+            return backend.migrate_session(session_id,
+                                           self.inst.instance_id,
+                                           dst_instance_id)
         with self._lock:
             movable = [f for f in list(self.inst.queue)
                        if f.meta.session_id == session_id]
@@ -379,6 +420,7 @@ class ComponentController:
             "node": self.inst.node_id,
             "qsize": self.inst.qsize(),
             "busy": self.inst.busy,
+            "inflight": len(self.inst.running),
             "busy_until": m.busy_until,
             "ema_service": m.ema_service,
             "completed": m.completed,

@@ -209,10 +209,19 @@ class AgentInstance:
             return len(self.running) > 0
 
     def eta(self, now: float) -> float:
-        """Estimated seconds until this instance is free (HoL signal)."""
+        """Estimated seconds until this instance is free (HoL signal).
+
+        Emulated methods publish ``busy_until``; async engine-backed (and
+        composite) methods don't, so in-flight futures are also charged at
+        the EMA service rate — otherwise least-ETA routing is blind to a
+        replica already carrying a full engine batch.
+        """
         with self._lock:
             remaining = max(0.0, self.metrics.busy_until - now) if self.running else 0.0
-            return remaining + self.qsize() * max(self.metrics.ema_service, 1e-3)
+            ema = max(self.metrics.ema_service, 1e-3)
+            if self.running and remaining == 0.0:
+                remaining = len(self.running) * ema
+            return remaining + self.qsize() * ema
 
     def load_score(self, now: float) -> float:
         return self.eta(now)

@@ -89,6 +89,18 @@ class KVRegistry:
                     if i.instance_id == instance_id
                     and i.residency != Residency.DROP]
 
+    def residency_map(self) -> Dict[str, Tuple[str, int]]:
+        """session_id -> (instance holding its cache, cached token count).
+
+        The global controller snapshots this into ``ClusterView.kv_residency``
+        so policies can express KV-affinity with the plain ``route``
+        primitive (see ``policy.KVAffinityPolicy``).  Dropped caches are
+        excluded — a released session has no affinity."""
+        with self._lock:
+            return {s: (i.instance_id, i.tokens)
+                    for s, i in self._sessions.items()
+                    if i.residency != Residency.DROP}
+
     # ----------------------------------------------------------------- hints
     def register_hook(self, instance_id: str,
                       hook: Callable[[str, str], None]) -> None:

@@ -43,10 +43,17 @@ class InstanceView:
     failed: int
     alive: bool
     waiting_sessions: List[str]
+    # futures currently executing (async engine-backed instances carry many)
+    inflight: int = 0
 
     def eta(self, now: float) -> float:
         rem = max(0.0, self.busy_until - now) if self.busy else 0.0
-        return rem + self.qsize * max(self.ema_service, 1e-3)
+        ema = max(self.ema_service, 1e-3)
+        if self.busy and rem == 0.0:
+            # async backends never publish busy_until; charge in-flight
+            # work at the EMA rate so least-ETA policies see engine load
+            rem = self.inflight * ema
+        return rem + self.qsize * ema
 
 
 @dataclass
@@ -61,6 +68,9 @@ class ClusterView:
     futures: Dict[str, dict] = field(default_factory=dict)
     # node -> free resources
     node_resources: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    # session_id -> (instance holding its K,V cache, cached tokens) — the
+    # §4.3.2 residency snapshot, so policies can route for cache affinity
+    kv_residency: Dict[str, tuple] = field(default_factory=dict)
 
     def instances_of(self, agent_type: str) -> List[InstanceView]:
         return [self.instances[i] for i in self.by_type.get(agent_type, [])
@@ -280,6 +290,60 @@ class LPTPolicy(Policy):
     def step(self, view: ClusterView, act: ActionSink) -> None:
         for agent_type in view.by_type:
             act.install_schedule(agent_type, LPTSchedule())
+
+
+class KVAffinityPolicy(Policy):
+    """Pin every session to the instance holding its K,V cache (§4.3.2
+    expressed as a ~10-line §4.2 policy).
+
+    A session whose prefix cache is warm on replica X pays only the new
+    suffix on X but a full-context rebuild anywhere else, so the ``route``
+    pin is installed for the cache's home replica.  With an
+    ``imbalance_eta`` threshold the policy trades affinity for load: when
+    the home replica's ETA exceeds the best sibling's by more than the
+    threshold, it *migrates* the session there instead — the cache follows
+    (transcript replay on engine pools), re-creating affinity at the
+    destination instead of fighting it.
+    """
+
+    name = "kv_affinity"
+
+    def __init__(self, agent_types: Optional[List[str]] = None,
+                 imbalance_eta: Optional[float] = None,
+                 max_migrations_per_step: int = 1) -> None:
+        self.agent_types = agent_types
+        self.imbalance_eta = imbalance_eta
+        # migrations are issued against a static view, so each one invisibly
+        # shifts the very ETAs the next decision would read; moving one
+        # session per round (the next round sees the result) avoids herding
+        # every resident session onto the same "best" sibling at once
+        self.max_migrations_per_step = max_migrations_per_step
+
+    def step(self, view: ClusterView, act: ActionSink) -> None:
+        migrated = 0
+        for sid, (iid, _tokens) in view.kv_residency.items():
+            home = view.instances.get(iid)
+            if home is None or not home.alive:
+                continue
+            if self.agent_types and home.agent_type not in self.agent_types:
+                continue
+            if (self.imbalance_eta is not None
+                    and migrated < self.max_migrations_per_step
+                    # only sessions with pending work are worth a physical
+                    # move: waiting_sessions is pruned to live futures at
+                    # aggregation, so finished/idle sessions never pay a
+                    # transcript replay on the strength of a stale record
+                    and sid in home.waiting_sessions):
+                siblings = [iv for iv in view.instances_of(home.agent_type)
+                            if iv.instance_id != iid]
+                if siblings:
+                    best = min(siblings, key=lambda iv: iv.eta(view.now))
+                    if (home.eta(view.now) - best.eta(view.now)
+                            > self.imbalance_eta):
+                        act.migrate(sid, iid, best.instance_id)
+                        migrated += 1
+                        continue
+            act.route(sid, home.agent_type, iid)
 
 
 class HighPrioritySessionPolicy(Policy):

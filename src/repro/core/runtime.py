@@ -57,6 +57,12 @@ class Router:
         # in-flight service time, the HoL trap), "round_robin"
         self.mode = "least_eta"
         self._rr: Dict[str, int] = {}
+        # native cache/state locality (steps 2a/2b below).  On by default —
+        # disabling it models baseline systems that spray sessions across
+        # replicas and pay a full-context rebuild per call (the pooled-
+        # routing benchmark compares exactly this), or lets an explicit
+        # KVAffinityPolicy own the decision through `route` pins instead.
+        self.kv_affinity = True
 
     def pin(self, session_id: str, agent_type: str, instance: str) -> None:
         self._pins[(session_id, agent_type)] = instance
@@ -94,14 +100,14 @@ class Router:
         # its cache (§4.3.2 — "scheduling is rendered sticky").  NALAR's HoL
         # policy relieves this by *migrating the cache*, after which the
         # registry points follow-ups at the new instance.
-        if spec.directives.uses_managed_state and sid:
+        if self.kv_affinity and spec.directives.uses_managed_state and sid:
             info = self.rt.kv_registry.lookup(sid)
             if info is not None:
                 inst = self.rt.instance(info.instance_id)
                 if inst is not None and inst.alive and inst.agent_type == at:
                     return inst
         # 2b. managed-state locality: prefer the node holding session state
-        if spec.directives.uses_managed_state and sid:
+        if self.kv_affinity and spec.directives.uses_managed_state and sid:
             names = self.rt.state_store.session_state_names(sid, at)
             if names:
                 node = self.rt.state_store.placement_of(sid, at, names[0])

@@ -259,6 +259,16 @@ class SessionTranscript:
         self._node = node_id
 
     def tokens(self, session_id: str) -> list:
+        """The session's transcript, materialized at this binding's node.
+
+        ``SessionStateStore.load`` moves the logical transcript here when it
+        is placed elsewhere — which makes this call the state-layer half of
+        cross-replica migration: the destination bridge's transcript binding
+        reads the tokens (materializing them at the destination node) and
+        ``serving.pool.EnginePool`` replays them into the destination
+        engine's cache.  Token-level replay is what makes the move work
+        across *heterogeneous* replicas, where raw KV pages would not be
+        layout-compatible."""
         return list(self._store.load(session_id, self._agent_type, self.NAME,
                                      self._node, default=[]))
 

@@ -3,10 +3,12 @@ from .bridge import (EngineBridge, EngineMethod, GenerationResult,
                      hash_tokenize, register_engine_agent)
 from .engine import EngineMetrics, InferenceEngine, get_slot, set_slot
 from .kv_cache import PagedKVPool, SessionPages, StateCachePool
+from .pool import EnginePool, register_engine_pool
 from .sampler import SamplingParams, sample
 
-__all__ = ["EngineBridge", "EngineMethod", "EngineMetrics",
+__all__ = ["EngineBridge", "EngineMethod", "EngineMetrics", "EnginePool",
            "GenerationResult", "InferenceEngine", "PagedKVPool", "Request",
            "SamplingParams", "SessionPages", "StateCachePool", "WaitQueue",
            "bucket_len", "get_slot", "hash_tokenize",
-           "register_engine_agent", "sample", "set_slot"]
+           "register_engine_agent", "register_engine_pool", "sample",
+           "set_slot"]

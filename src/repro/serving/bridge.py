@@ -102,6 +102,10 @@ class EngineBridge:
         # transcript and cache), while different sessions batch freely
         self._session_active: set = set()
         self._session_q: Dict[str, Deque[Tuple[Future, Any, "EngineMethod"]]] = {}
+        # session migrations deferred until the in-flight call resolves:
+        # sid -> fn(remaining_queue).  A migration must never yank the KV
+        # cache out from under a running request; it runs between calls.
+        self._migrate_pending: Dict[str, Callable] = {}
         self._thread = threading.Thread(
             target=self._pump, daemon=True,
             name=f"engine-pump:{engine.instance_id}")
@@ -146,16 +150,46 @@ class EngineBridge:
                 self._advance_session(sid)
             raise
 
+    def defer_until_idle(self, sid: str, fn: Callable) -> bool:
+        """If ``sid`` has an in-flight engine call, arrange for ``fn(queued)``
+        to run once it resolves — *before* any queued same-session call is
+        submitted — where ``queued`` is the list of (future, controller,
+        method) tuples still waiting.  Returns True if deferred, False if the
+        session is idle here (the caller should act immediately).
+
+        This is the in-flight-future safety rule of session migration: the
+        running request finishes where it started; everything after it moves.
+        """
+        with self._cv:
+            if sid in self._session_active:
+                self._migrate_pending[sid] = fn
+                return True
+        return False
+
     def _advance_session(self, sid: str) -> None:
         """Previous call of ``sid`` settled: submit the next queued one."""
         while True:
             with self._cv:
-                q = self._session_q.get(sid)
-                if not q:
+                # deferred migration takes priority over queued calls, and
+                # must be checked under the same lock that deactivates the
+                # session (a migrate request landing between those two steps
+                # would otherwise never fire)
+                mig = self._migrate_pending.pop(sid, None)
+                if mig is not None:
+                    # hand the whole remaining session queue to the deferred
+                    # migration; the session is no longer active here
+                    remaining = list(self._session_q.pop(sid, ()))
                     self._session_active.discard(sid)
-                    self._session_q.pop(sid, None)
-                    return
-                fut, controller, method = q.popleft()
+                else:
+                    q = self._session_q.get(sid)
+                    if not q:
+                        self._session_active.discard(sid)
+                        self._session_q.pop(sid, None)
+                        return
+                    fut, controller, method = q.popleft()
+            if mig is not None:
+                mig(remaining)
+                return
             try:
                 self._submit_now(fut, controller, method)
                 return
@@ -250,8 +284,17 @@ class EngineBridge:
                     self._session_q.clear()
                     self._session_active.clear()
                     self._pending = 0
+                    migs = list(self._migrate_pending.values())
+                    self._migrate_pending.clear()
                 for fut, ctrl in dead:
                     ctrl.complete_async(fut, error=e)
+                for mig in migs:
+                    # still re-home the session: its queued futures died with
+                    # the engine, but follow-ups must not land here again
+                    try:
+                        mig([])
+                    except Exception:  # noqa: BLE001 — best-effort re-home
+                        pass
 
     def telemetry(self) -> Dict[str, Any]:
         t = dict(self.engine.telemetry())

@@ -265,6 +265,44 @@ class InferenceEngine:
                 self.kv_registry.touch(req.session_id, self.instance_id,
                                        len(req.prompt), now)
 
+    # ------------------------------------------------------------ migration
+    def warm_session(self, session_id: str, prompt_tokens: List[int]) -> int:
+        """Prefill ``prompt_tokens`` straight into the session cache pool.
+
+        This is the migration-in half of transcript replay (§4.3.1 applied
+        to K,V state): the pool replays a session's transcript onto this
+        replica so the *next* call in the session is a warm continuation —
+        no batch slot is occupied and nothing is generated.  Returns the
+        number of tokens now cached for the session (0 if nothing to do).
+
+        The prefill cost is real and shows up in ``metrics.prefill_tokens``
+        — that is the honest price of a migration, paid once, instead of on
+        every follow-up call (which is what cold re-routing would cost).
+        """
+        if not session_id or not prompt_tokens:
+            return 0
+        vocab = self.cfg.vocab_size
+        toks = [int(t) % vocab for t in prompt_tokens]
+        toks = toks[-(self.max_seq - 1):]       # respect the context budget
+        req = Request.make(toks, session_id=session_id)
+        now = time.monotonic()
+        with self._lock:
+            _logits, row_cache = self._prefill(req)
+            tokens = int(np.asarray(row_cache["pos"]).reshape(-1)[0])
+            if isinstance(self.pool, PagedKVPool):
+                if tokens > self.max_seq:
+                    return 0
+                k = row_cache["k"][:, 0, :tokens]
+                v = row_cache["v"][:, 0, :tokens]
+                if not self.pool.write_session(session_id, k, v, tokens, now):
+                    return 0
+            else:
+                self.pool.store(session_id, row_cache, tokens)
+            if self.kv_registry is not None:
+                self.kv_registry.touch(session_id, self.instance_id,
+                                       tokens, now)
+        return tokens
+
     # ----------------------------------------------------------------- step
     def _next_rng(self) -> jax.Array:
         self._rng, sub = jax.random.split(self._rng)

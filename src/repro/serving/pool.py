@@ -1,0 +1,327 @@
+"""Multi-replica engine pool: real ``InferenceEngine`` replicas behind one
+agent type, with policy-driven routing and live session migration.
+
+PR 1's bridge made a *single* engine a NALAR component; this module makes N
+of them (possibly heterogeneous configs) the instances of one agent type, so
+the paper's two-level control machinery — ``route`` / ``route_weighted`` /
+``migrate`` actions computed by the ``GlobalController`` — resolves to
+concrete replicas instead of simulated instances:
+
+* **Placement is KV-aware.**  Each replica is an ordinary ``AgentInstance``;
+  the Router's precedence (pin → KV locality → managed-state locality →
+  weighted table → least-ETA) applies unchanged, so a session's follow-up
+  lands where its prefix KV lives without any pool-specific routing code.
+* **Migration replays the transcript.**  ``migrate(session_id, src, dst)``
+  physically rebuilds the session on the destination: the managed-state
+  layer materializes the ``SessionTranscript`` at the destination node, the
+  destination engine prefills it straight into its cache pool
+  (``InferenceEngine.warm_session``), and the ``KVRegistry`` re-homes reuse
+  expectations — after which the session's next call is a warm continuation
+  on the new replica.  Works across heterogeneous replicas because tokens,
+  not cache pages, are the migration payload.
+* **In-flight futures are never broken.**  If the session has a call running
+  on the source engine, the migration defers until it resolves
+  (``EngineBridge.defer_until_idle``); queued same-session calls move with
+  the session and execute on the destination, in order.  (Same-session
+  serialization is per-bridge: a call issued concurrently — mid-migration,
+  or routed cache-blind to another replica — may run cold in parallel.
+  That is always *safe*: the engine's fallback-prompt path rebuilds context
+  at admission; what is lost is the warm-cache saving, not correctness of
+  completion.)
+* **Retry behavior is consistent.**  A migration to a dead or unknown
+  replica falls back to the least-loaded live replica; a repeated migration
+  to the session's current home is a no-op (no second replay prefill).
+
+Layering: like ``bridge.py``, this file sees both sides; ``repro.core``
+still never imports serving.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from ..core.directives import Directives
+from ..core.executor import EngineBackedMethod
+from ..core.future import FutureState
+from ..core.stubs import AgentSpec
+from .bridge import EngineBridge, EngineMethod
+from .engine import InferenceEngine
+from .sampler import SamplingParams
+
+
+class _UnboundPoolMethod(EngineBackedMethod):
+    """Placeholder in the pool's ``AgentSpec``: every live replica gets its
+    own per-instance ``EngineMethod``, so this only executes if an instance
+    was provisioned outside ``register_engine_pool`` (e.g. a bare
+    ``provision`` policy action).  Fail loudly instead of silently sharing
+    another replica's engine."""
+
+    def __init__(self, agent_type: str) -> None:
+        self.agent_type = agent_type
+
+    def capacity(self) -> int:
+        return 1
+
+    def launch(self, batch, controller) -> None:
+        err = RuntimeError(
+            f"instance {controller.inst.instance_id} of pool "
+            f"{self.agent_type!r} has no engine replica bound; add replicas "
+            f"through repro.serving.pool.register_engine_pool")
+        for f in batch:
+            controller.complete_async(f, error=err)
+
+
+class EnginePool:
+    """N engine replicas serving one agent type.
+
+    Owned by the runtime via ``runtime.engine_backends[name]``; the
+    ``ComponentController`` delegates session migration commands here (the
+    global controller's ``migrate`` action), and benchmarks read
+    ``telemetry()`` / ``migrations`` for the paper's prefill-token evidence.
+    """
+
+    def __init__(self, runtime, name: str) -> None:
+        self.rt = runtime
+        self.name = name
+        self.bridges: Dict[str, EngineBridge] = {}   # instance_id -> bridge
+        self._lock = threading.Lock()
+        # audit log of completed physical migrations (benchmarks assert on it)
+        self.migrations: List[Dict[str, Any]] = []
+        self.stats: Dict[str, int] = {
+            "migrations": 0, "migrations_deferred": 0,
+            "migrations_fallback": 0, "migrations_noop": 0,
+            "futures_rerouted": 0, "replayed_tokens": 0,
+        }
+
+    # -------------------------------------------------------------- replicas
+    def add_replica(self, instance_id: str, bridge: EngineBridge) -> None:
+        with self._lock:
+            self.bridges[instance_id] = bridge
+
+    def _bump(self, key: str, n: int = 1) -> None:
+        # counters are hit from controller threads and pump threads alike
+        with self._lock:
+            self.stats[key] += n
+
+    @property
+    def instance_ids(self) -> List[str]:
+        with self._lock:
+            return list(self.bridges)
+
+    def bridge_of(self, instance_id: str) -> Optional[EngineBridge]:
+        with self._lock:
+            return self.bridges.get(instance_id)
+
+    def live_replicas(self) -> List[str]:
+        out = []
+        for iid in self.instance_ids:
+            inst = self.rt.instance(iid)
+            if inst is not None and inst.alive:
+                out.append(iid)
+        return out
+
+    # ------------------------------------------------------------- migration
+    def _resolve_dst(self, dst_iid: str, avoid: str) -> Optional[str]:
+        """Destination replica, with consistent-retry fallback: a dead or
+        unknown destination becomes the least-loaded live replica."""
+        inst = self.rt.instance(dst_iid)
+        if inst is not None and inst.alive and self.bridge_of(dst_iid) is not None:
+            return dst_iid
+        now = self.rt.kernel.now()
+        cands = [self.rt.instance(i) for i in self.instance_ids if i != avoid]
+        cands = [i for i in cands if i is not None and i.alive]
+        if not cands:
+            return None
+        self._bump("migrations_fallback")
+        return min(cands, key=lambda i: i.load_score(now)).instance_id
+
+    def migrate_session(self, session_id: str, src_iid: str,
+                        dst_iid: str) -> int:
+        """Move ``session_id`` from ``src_iid`` to ``dst_iid`` (Table 2
+        ``migrate`` resolved against real replicas).
+
+        Returns the number of futures re-routed plus one for the physical
+        re-home, 0 for a no-op (already at the destination, no live
+        destination, or the session lives on neither replica).  If the
+        session has an in-flight call on the source, the move is scheduled
+        to run the moment that call resolves and 1 is returned.
+        """
+        if not session_id:
+            return 0
+        dst = self._resolve_dst(dst_iid, avoid=src_iid)
+        if dst is None or dst == src_iid:
+            self._bump("migrations_noop")
+            return 0
+        info = self.rt.kv_registry.lookup(session_id)
+        home = info.instance_id if info is not None else None
+        if home == dst:
+            self._bump("migrations_noop")   # double-migrate: idempotent
+            return 0
+        if home is not None and home != src_iid and home in self.bridges:
+            # stale command: the session has already moved elsewhere in the
+            # pool; migrating it "from src" would race the real owner
+            self._bump("migrations_noop")
+            return 0
+
+        src_bridge = self.bridge_of(src_iid)
+        if src_bridge is not None:
+            deferred = src_bridge.defer_until_idle(
+                session_id,
+                lambda queued: self._do_migrate(session_id, src_iid, dst,
+                                                queued))
+            if deferred:
+                self._bump("migrations_deferred")
+                return 1
+        return self._do_migrate(session_id, src_iid, dst, [])
+
+    def _do_migrate(self, sid: str, src_iid: str, dst_iid: str,
+                    queued: List[Tuple[Any, Any, Any]]) -> int:
+        """The physical move.  Runs with no same-session call in flight."""
+        # A deferred move fires after an arbitrary delay (the in-flight call
+        # ran to completion), so the destination chosen at schedule time may
+        # have died in between — re-validate, with the same fallback.
+        resolved = self._resolve_dst(dst_iid, avoid=src_iid)
+        dst_ctrl = self.rt.controller_of(resolved) if resolved else None
+        dst_bridge = self.bridge_of(resolved) if resolved else None
+        if resolved is None or dst_ctrl is None or dst_bridge is None:
+            # no live destination left: the session stays home and its
+            # queued calls continue on the source, in order
+            src_bridge = self.bridge_of(src_iid)
+            for fut, controller, method in queued:
+                try:
+                    if src_bridge is None:
+                        raise RuntimeError(
+                            f"pool {self.name!r}: no live replica to run "
+                            f"session {sid!r}")
+                    src_bridge.submit_future(fut, controller, method)
+                except BaseException as e:  # noqa: BLE001 — fail this call
+                    controller.complete_async(fut, error=e)
+            self._bump("migrations_noop")
+            return 0
+        dst_iid = resolved
+        now = self.rt.kernel.now()
+
+        # 1. Registry re-homes reuse expectations first: ``migrate`` moves
+        #    the residency record and fires migrate_out at the source pool,
+        #    freeing its pages.  (Must precede the replay — warm_session's
+        #    ``touch`` would otherwise re-create the record at dst and turn
+        #    the registry migrate into a no-op that never frees the source.)
+        self.rt.kv_registry.migrate(sid, src_iid, dst_iid)
+
+        # 2. State layer does the rebuild: reading the transcript through the
+        #    destination bridge materializes it at the destination node, and
+        #    the destination engine prefills it straight into its session
+        #    cache pool (touching the registry with the replayed count).  A
+        #    follow-up racing this window hits the engine's fallback_prompt
+        #    path — cold-at-admission is always safe.
+        tokens = dst_bridge.transcript.tokens(sid)
+        replayed = dst_bridge.engine.warm_session(sid, tokens)
+
+        # 3. Any other managed state of the session follows it.
+        self.rt.migrate_session_state(sid, self.name, dst_ctrl.inst.node_id)
+
+        # 4. Routing re-home: new futures land on the destination.
+        self.rt.router.pin(sid, self.name, dst_iid)
+
+        # 5. Re-route work that was waiting behind the in-flight call:
+        #    first the bridge's session queue (already launched, in order),
+        #    then anything still sitting in the source controller's queue.
+        src_ctrl = self.rt.controller_of(src_iid)
+        ctl_queued: List[Any] = []
+        if src_ctrl is not None:
+            ctl_queued = src_ctrl.take_session_futures(sid)
+        moved = 0
+        for fut, _ctrl, _method in queued:
+            moved += self._reroute(fut, src_ctrl, dst_ctrl)
+        for fut in ctl_queued:
+            moved += self._reroute(fut, src_ctrl, dst_ctrl)
+
+        with self._lock:
+            self.migrations.append(dict(
+                session_id=sid, src=src_iid, dst=dst_iid,
+                replayed_tokens=replayed, futures_moved=moved, at=now))
+            self.stats["migrations"] += 1
+            self.stats["futures_rerouted"] += moved
+            self.stats["replayed_tokens"] += replayed
+        return moved + 1
+
+    def _reroute(self, fut, src_ctrl, dst_ctrl) -> int:
+        """Hand one not-yet-executed session future to the destination."""
+        if fut is None or fut.available:
+            return 0
+        if src_ctrl is not None:
+            src_ctrl.detach_running(fut)
+        fut._set_state(FutureState.PENDING)
+        self.rt.telemetry.on_migration(
+            fut, src_ctrl.inst.instance_id if src_ctrl else "",
+            dst_ctrl.inst.instance_id, self.rt.kernel.now())
+        dst_ctrl.submit(fut)
+        return 1
+
+    # ------------------------------------------------------------- telemetry
+    def telemetry(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {"pool": self.name, "stats": dict(self.stats),
+                               "replicas": {}}
+        for iid in self.instance_ids:
+            bridge = self.bridge_of(iid)
+            if bridge is not None:
+                out["replicas"][iid] = bridge.telemetry()
+        return out
+
+
+def register_engine_pool(runtime, name: str,
+                         engines: List[InferenceEngine], *,
+                         methods: Tuple[str, ...] = ("generate",),
+                         sampling: Optional[SamplingParams] = None,
+                         encode: Optional[Callable[..., List[int]]] = None,
+                         decode: Optional[Callable] = None,
+                         nodes: Optional[List[str]] = None,
+                         resources: Optional[Dict[str, float]] = None):
+    """Register ``len(engines)`` real-engine replicas as one agent type.
+
+    Returns the stub.  Each engine becomes one NALAR agent instance with its
+    own ``EngineBridge`` and pump thread; the ``EnginePool`` is installed as
+    the agent type's backend (``runtime.engine_backends[name]``) so global
+    ``migrate`` actions replay transcripts across replicas.  Replicas may be
+    heterogeneous (different ``max_batch`` / ``max_seq`` / model configs):
+    routing weights and ETAs are per-instance, and migration moves tokens
+    rather than cache pages.
+
+    Requires ``NalarRuntime(simulate=False)`` for the same reason as
+    ``register_engine_agent``: engine completions arrive in wall-clock time.
+    """
+    from ..core.clock import RealTimeKernel
+    if not isinstance(runtime.kernel, RealTimeKernel):
+        raise RuntimeError(
+            "engine pools need a real-time runtime; construct "
+            "NalarRuntime(simulate=False) (the SimKernel's virtual time "
+            "cannot wait on wall-clock engine completions)")
+    if not engines:
+        raise ValueError("engine pool needs at least one engine")
+
+    pool = EnginePool(runtime, name)
+    spec = AgentSpec(
+        name=name,
+        methods={mn: _UnboundPoolMethod(name) for mn in methods},
+        directives=Directives(max_instances=len(engines), min_instances=1,
+                              uses_managed_state=True,
+                              resources=resources or {}))
+    stub = runtime.register_agent(spec, nodes=nodes or list(runtime.nodes),
+                                  instances=len(engines))
+    iids = runtime.instances_of_type(name)
+    if len(iids) != len(engines):
+        raise RuntimeError(
+            f"pool {name!r}: provisioned {len(iids)} of {len(engines)} "
+            f"replicas (node resources exhausted?)")
+    default_sampling = sampling or SamplingParams(max_new_tokens=16)
+    for iid, engine in zip(iids, engines):
+        inst = runtime.instance(iid)
+        bridge = EngineBridge(runtime, engine, agent_type=name)
+        bridge.attach(iid, inst.node_id)
+        method = EngineMethod(bridge=bridge, sampling=default_sampling,
+                              encode=encode, decode=decode)
+        inst.methods = {mn: method for mn in methods}
+        pool.add_replica(iid, bridge)
+    runtime.engine_backends[name] = pool
+    return stub

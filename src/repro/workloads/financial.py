@@ -1,4 +1,9 @@
-"""Financial Analyst workflow (paper §6, Fig. 9a).
+"""Financial Analyst workflow — reproduces paper §6 **Fig. 9a** (financial-
+analyst serving benchmark; also the Fig. 6 high-priority-session case
+study).  Run it with:
+
+    PYTHONPATH=src python -m benchmarks.fig9_financial       # figure numbers
+    PYTHONPATH=src python examples/financial_analyst.py      # single workflow
 
 An analyst agent fans out to stock-analysis / bond-market / market-research
 / news-search agents, then summarizes on a *shared, session-stateful* LLM

@@ -1,4 +1,10 @@
-"""Router-based workflow (paper §6, Fig. 9b).
+"""Router-based workflow — reproduces paper §6 **Fig. 9b** (router serving
+benchmark).  Run it with:
+
+    PYTHONPATH=src python -m benchmarks.fig9_router          # figure numbers
+    PYTHONPATH=src python examples/router_workflow.py        # single workflow
+    PYTHONPATH=src python examples/real_engine_workflow.py   # real engines
+    PYTHONPATH=src python examples/engine_pool_workflow.py   # replica pool
 
 A lightweight router classifies each query and forwards it to either a chat
 workflow or a coding agent.  Per the Azure LLM traces the paper uses, the
@@ -9,10 +15,12 @@ and their overloaded branch's latency blows up (the paper reports OOM
 failures at 70-80 RPS — here the failure mode is unbounded queueing, and we
 report a timeout rate).
 
-Two execution modes: :func:`build_runtime` (emulated branch LLMs, virtual
-time — the paper's §6.3 methodology) and :func:`build_engine_runtime`
-(branch LLMs on real ``InferenceEngine`` instances, wall-clock time — see
-``examples/real_engine_workflow.py``).
+Three execution modes: :func:`build_runtime` (emulated branch LLMs, virtual
+time — the paper's §6.3 methodology), :func:`build_engine_runtime` (branch
+LLMs on single real ``InferenceEngine`` instances, wall-clock time), and
+:func:`build_pool_runtime` (one LLM agent type backed by an ``EnginePool``
+of N real replicas, where global-controller routing/migration actions
+resolve to concrete replicas — see ``benchmarks/pool_routing.py``).
 """
 
 from __future__ import annotations
@@ -101,6 +109,56 @@ def build_engine_runtime(*, arch: str = "qwen3_0_6b", max_batch: int = 4,
             rt, name, engine,
             sampling=SamplingParams(max_new_tokens=max_new_tokens),
             resources={"GPU": 1})
+    return rt
+
+
+def build_pool_runtime(*, replicas: int = 3, arch: str = "qwen3_0_6b",
+                       max_batch: int = 4, max_seq: int = 128,
+                       max_new_tokens: int = 6, router_mode: str = "least_eta",
+                       kv_affinity: bool = True, policy=None,
+                       control_interval: float = 0.25,
+                       heterogeneous: bool = False,
+                       seed: int = 0) -> NalarRuntime:
+    """One ``llm`` agent type backed by an ``EnginePool`` of real replicas.
+
+    This is the pooled topology of the migration/routing benchmarks: N
+    ``InferenceEngine`` replicas (sharing reduced-model weights, each with
+    its own KV pool and pump thread) are the N instances of one agent type,
+    so Router modes (``round_robin`` / ``least_eta``), ``route`` pins from a
+    global policy, and ``migrate`` actions all resolve to concrete engines.
+    ``kv_affinity=False`` disables the Router's native cache-locality rule —
+    the baseline configuration that sprays a session's turns across replicas
+    and pays a full-context prefill per turn.  ``heterogeneous=True`` halves
+    the last replica's batch width (a deliberately weaker engine) to show
+    policies handling non-uniform capacity.
+    """
+    import jax
+
+    from ..configs import get_smoke_config
+    from ..models import build_model
+    from ..serving import InferenceEngine, SamplingParams
+    from ..serving.pool import register_engine_pool
+
+    rt = NalarRuntime(simulate=False,
+                      nodes={"n0": {"GPU": replicas, "CPU": 8}},
+                      policy=policy, control_interval=control_interval,
+                      seed=seed)
+    rt.router.mode = router_mode
+    rt.router.kv_affinity = kv_affinity
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    engines = []
+    for i in range(replicas):
+        mb = max_batch
+        if heterogeneous and i == replicas - 1:
+            mb = max(1, max_batch // 2)
+        engines.append(InferenceEngine(model, params, max_batch=mb,
+                                       max_seq=max_seq))
+    register_engine_pool(
+        rt, "llm", engines,
+        sampling=SamplingParams(max_new_tokens=max_new_tokens),
+        resources={"GPU": 1})
     return rt
 
 

@@ -1,4 +1,8 @@
-"""Software-engineering workflow (paper §6, Fig. 9c / Fig. 1).
+"""Software-engineering workflow — reproduces paper §6 **Fig. 9c** (and the
+Fig. 1 motivating example).  Run it with:
+
+    PYTHONPATH=src python -m benchmarks.fig9_swe             # figure numbers
+    PYTHONPATH=src python examples/software_engineering.py   # single workflow
 
 MetaGPT-style recursive workflow on SWE-bench-like tasks: a program manager
 decomposes the request; developer agents implement subtasks consulting a

@@ -159,3 +159,93 @@ def test_hol_migration_improves_tail_latency():
     p95_off = run(NoOp())
     p95_on = run(PolicyChain(HoLMitigationPolicy(wait_threshold=0.2)))
     assert p95_on <= p95_off    # mitigation can only help here
+
+
+def test_kv_affinity_policy_pins_sessions_to_cache_home():
+    from repro.core import KVAffinityPolicy
+    view = make_view(a0=("svc", 0, False, 0.0), a1=("svc", 0, False, 0.0))
+    view.kv_residency = {"s1": ("a1", 40), "s2": ("a0", 12)}
+    sink = ActionSink()
+    KVAffinityPolicy().step(view, sink)
+    pins = {a.payload["session_id"]: a.payload["instance"]
+            for a in sink.actions if a.kind == "route"}
+    assert pins == {"s1": "a1", "s2": "a0"}
+
+
+def test_kv_affinity_policy_migrates_away_from_overload():
+    from repro.core import KVAffinityPolicy
+    view = make_view(a0=("svc", 6, True, 30.0), a1=("svc", 0, False, 0.0))
+    view.instances["a0"].waiting_sessions = ["s1"]
+    # s1 has work queued behind the overload -> migrate it; s2's cache also
+    # lives on a0 but it has nothing pending -> a physical replay would be
+    # wasted, so it is only pinned
+    view.kv_residency = {"s1": ("a0", 40), "s2": ("a0", 12)}
+    sink = ActionSink()
+    KVAffinityPolicy(imbalance_eta=1.0).step(view, sink)
+    kinds = {a.payload["session_id"]: a.kind for a in sink.actions}
+    assert kinds == {"s1": "migrate", "s2": "route"}
+    mig = next(a for a in sink.actions if a.kind == "migrate")
+    assert mig.payload == dict(session_id="s1", src="a0", dst="a1")
+
+
+def test_collect_view_prunes_completed_sessions_from_waiting():
+    """Regression: metrics mirrors are pushed asynchronously, so an
+    instance's ``waiting_sessions`` can keep naming sessions whose futures
+    have all completed.  Aggregation must prune them — otherwise policies
+    (e.g. HoL mitigation) migrate sessions that no longer exist."""
+    from repro.core.session import clear_context, set_context
+
+    rt = NalarRuntime(simulate=True, nodes={"n0": {"CPU": 8}})
+    rt.register_agent(AgentSpec(
+        name="svc",
+        methods={"run": emulated(FixedLatency(10.0), lambda x: x)},
+        directives=Directives(resources={"CPU": 1})), instances=1)
+    iid = rt.instances_of_type("svc")[0]
+
+    # one genuinely unresolved future for session "s-live"
+    set_context("s-live", "r0", "driver:r0")
+    try:
+        rt.stub("svc").run(1)
+    finally:
+        clear_context()
+
+    # stale mirror claiming both a live and a long-finished session wait here
+    rt.stores.get("n0").hset_many(f"metrics:{iid}", {
+        "agent_type": "svc", "node": "n0", "qsize": 2, "busy": True,
+        "busy_until": 50.0, "ema_service": 1.0, "completed": 3, "failed": 0,
+        "alive": True, "waiting_sessions": ["s-done", "s-live"],
+    })
+
+    view = rt.global_controller.collect_view()
+    assert view.instances[iid].waiting_sessions == ["s-live"]
+
+    # the HoL policy therefore acts on the live session, never the dead one
+    view.instances[iid].qsize = 3
+    view.by_type.setdefault("svc", [iid])
+    idle = InstanceView(
+        instance_id="svc:idle", agent_type="svc", node="n0", qsize=0,
+        busy=False, busy_until=0.0, ema_service=1.0, completed=0, failed=0,
+        alive=True, waiting_sessions=[])
+    view.instances["svc:idle"] = idle
+    view.by_type["svc"].append("svc:idle")
+    sink = ActionSink()
+    HoLMitigationPolicy(wait_threshold=0.1).step(view, sink)
+    migrated = [a.payload["session_id"] for a in sink.actions
+                if a.kind == "migrate"]
+    assert migrated == ["s-live"]
+    rt.shutdown()
+
+
+def test_instance_view_eta_charges_async_inflight_work():
+    """Async (engine-backed) instances never publish busy_until; their ETA
+    must still reflect in-flight futures so least-ETA policies see load."""
+    empty = InstanceView(
+        instance_id="e0", agent_type="llm", node="n0", qsize=0, busy=False,
+        busy_until=0.0, ema_service=0.5, completed=0, failed=0, alive=True,
+        waiting_sessions=[], inflight=0)
+    loaded = InstanceView(
+        instance_id="e1", agent_type="llm", node="n0", qsize=0, busy=True,
+        busy_until=0.0, ema_service=0.5, completed=0, failed=0, alive=True,
+        waiting_sessions=[], inflight=4)
+    assert empty.eta(10.0) == 0.0
+    assert loaded.eta(10.0) == pytest.approx(4 * 0.5)

@@ -1,0 +1,229 @@
+"""EnginePool: policy-driven routing + live session migration over N real
+engine replicas.
+
+Covers the tentpole contract:
+ * replicas are ordinary NALAR instances — routing modes and KV affinity
+   resolve to concrete engines;
+ * ``migrate(session, src, dst)`` physically replays the transcript onto
+   the destination (its prefill telemetry shows the one-time rebuild) and
+   the next session call is a warm continuation there;
+ * edge cases: in-flight futures defer the move, a dead destination falls
+   back to a live replica, and double-migrate is a no-op.
+"""
+
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import NalarRuntime, PolicyChain, deployment
+from repro.core.runtime import current_runtime
+from repro.models import build_model
+from repro.serving import (GenerationResult, InferenceEngine, SamplingParams,
+                           register_engine_pool)
+
+
+@pytest.fixture(scope="module")
+def model_setup():
+    cfg = get_smoke_config("qwen3_0_6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def make_pool_runtime(model, params, replicas=3, max_new_tokens=3,
+                      max_seq=64):
+    # quiet global policy: these tests assert exact routing/migration
+    # behaviour, so the default load-balance/HoL chain must stay out of it
+    rt = NalarRuntime(simulate=False, policy=PolicyChain(),
+                      nodes={"n0": {"GPU": replicas, "CPU": 8}})
+    engines = [InferenceEngine(model, params, max_batch=2, max_seq=max_seq)
+               for _ in range(replicas)]
+    register_engine_pool(
+        rt, "llm", engines,
+        sampling=SamplingParams(max_new_tokens=max_new_tokens),
+        resources={"GPU": 1})
+    return rt, rt.engine_backends["llm"]
+
+
+def run_turn(rt, sid, text):
+    def driver():
+        return current_runtime().stub("llm").generate(text).value(timeout=300)
+    kwargs = {} if sid is None else {"session": sid}
+    return deployment.main(driver, runtime=rt, **kwargs)
+
+
+def session_of(rt):
+    return next(iter(rt.sessions._sessions))
+
+
+def test_round_robin_spreads_then_affinity_sticks(model_setup):
+    """Turn 1 of each session round-robins across replicas; turn 2 follows
+    the KV cache (Router locality precedes the default mode)."""
+    cfg, model, params = model_setup
+    rt, pool = make_pool_runtime(model, params)
+    rt.router.mode = "round_robin"
+
+    homes = []
+    for i in range(3):
+        r1 = run_turn(rt, None, f"session {i} opening line")
+        sid = [s for s in rt.sessions._sessions][-1]
+        r2 = run_turn(rt, sid, "short follow up")
+        assert isinstance(r1, GenerationResult)
+        assert r2.engine_id == r1.engine_id      # sticky via KV locality
+        assert r2.prefix_reused_tokens > 0       # warm continuation
+        homes.append(r1.engine_id)
+    assert len(set(homes)) == 3                  # all replicas exercised
+    assert set(homes) == set(pool.instance_ids)
+    rt.shutdown()
+
+
+def test_migrate_replays_transcript_and_next_turn_is_warm(model_setup):
+    cfg, model, params = model_setup
+    rt, pool = make_pool_runtime(model, params)
+
+    r1 = run_turn(rt, None, "the quick brown fox jumps over")
+    sid = session_of(rt)
+    r2 = run_turn(rt, sid, "and keeps running")
+    src = r2.engine_id
+    dst = next(i for i in pool.instance_ids if i != src)
+    dst_engine = pool.bridge_of(dst).engine
+    src_pool_pages = pool.bridge_of(src).engine.pool
+
+    pt0 = dst_engine.metrics.prefill_tokens
+    moved = pool.migrate_session(sid, src, dst)
+    assert moved >= 1
+    replay = dst_engine.metrics.prefill_tokens - pt0
+    assert replay > 0                            # physical rebuild happened
+    # registry re-homed reuse expectations
+    assert rt.kv_registry.lookup(sid).instance_id == dst
+    # source pool freed the session's pages (migrate_out hint)
+    assert src_pool_pages.session(sid) is None
+
+    pt1 = dst_engine.metrics.prefill_tokens
+    r3 = run_turn(rt, sid, "post migration turn")
+    assert r3.engine_id == dst                   # routing re-homed
+    assert r3.prefix_reused_tokens > 0           # replayed transcript reused
+    assert dst_engine.metrics.prefill_tokens == pt1   # no second rebuild
+
+    # double-migrate is a no-op: no extra replay prefill
+    assert pool.migrate_session(sid, src, dst) == 0
+    assert dst_engine.metrics.prefill_tokens == pt1
+    assert pool.stats["migrations"] == 1
+    assert pool.stats["migrations_noop"] >= 1
+    rt.shutdown()
+
+
+def test_migrate_with_inflight_future_defers_until_resolution(model_setup):
+    """A migration issued while the session has a call on the source engine
+    must not move anything until that call resolves."""
+    cfg, model, params = model_setup
+    rt, pool = make_pool_runtime(model, params)
+
+    run_turn(rt, None, "warm up this session first")
+    sid = session_of(rt)
+    src = rt.kv_registry.lookup(sid).instance_id
+    dst = next(i for i in pool.instance_ids if i != src)
+    src_bridge = pool.bridge_of(src)
+    dst_engine = pool.bridge_of(dst).engine
+
+    # simulate an in-flight same-session call on the source bridge
+    with src_bridge._cv:
+        src_bridge._session_active.add(sid)
+    pt0 = dst_engine.metrics.prefill_tokens
+    assert pool.migrate_session(sid, src, dst) == 1   # scheduled, not done
+    assert pool.stats["migrations_deferred"] == 1
+    assert rt.kv_registry.lookup(sid).instance_id == src   # nothing moved
+    assert dst_engine.metrics.prefill_tokens == pt0        # no replay yet
+
+    # the in-flight call resolves -> the deferred migration runs
+    src_bridge._advance_session(sid)
+    assert rt.kv_registry.lookup(sid).instance_id == dst
+    assert dst_engine.metrics.prefill_tokens > pt0
+    assert pool.stats["migrations"] == 1
+
+    r = run_turn(rt, sid, "after deferred migration")
+    assert r.engine_id == dst
+    assert r.prefix_reused_tokens > 0
+    rt.shutdown()
+
+
+def test_migrate_to_dead_replica_falls_back_to_live_one(model_setup):
+    cfg, model, params = model_setup
+    rt, pool = make_pool_runtime(model, params)
+
+    run_turn(rt, None, "place this session somewhere")
+    sid = session_of(rt)
+    src = rt.kv_registry.lookup(sid).instance_id
+    others = [i for i in pool.instance_ids if i != src]
+    dead, alive = others[0], others[1]
+    rt.kill_instance(dead)
+    assert not rt.instance(dead).alive
+
+    moved = pool.migrate_session(sid, src, dead)
+    assert moved >= 1
+    assert pool.stats["migrations_fallback"] == 1
+    home = rt.kv_registry.lookup(sid).instance_id
+    assert home == alive                          # consistent fallback
+
+    r = run_turn(rt, sid, "retry lands on the fallback")
+    assert r.engine_id == alive
+    assert r.prefix_reused_tokens > 0
+
+    # unknown destination id behaves the same way (no crash, live placement)
+    moved2 = pool.migrate_session(sid, alive, "llm:n0/does-not-exist")
+    assert moved2 >= 1
+    assert rt.kv_registry.lookup(sid).instance_id != alive
+    rt.shutdown()
+
+
+def test_deferred_migration_revalidates_dead_destination(model_setup):
+    """A destination that dies while the migration is deferred must be
+    re-resolved at fire time, not replayed onto a corpse."""
+    cfg, model, params = model_setup
+    rt, pool = make_pool_runtime(model, params)
+
+    run_turn(rt, None, "seed the session transcript")
+    sid = session_of(rt)
+    src = rt.kv_registry.lookup(sid).instance_id
+    others = [i for i in pool.instance_ids if i != src]
+    dst, fallback = others[0], others[1]
+    src_bridge = pool.bridge_of(src)
+
+    with src_bridge._cv:
+        src_bridge._session_active.add(sid)
+    assert pool.migrate_session(sid, src, dst) == 1      # deferred
+    rt.kill_instance(dst)                                 # dies in the window
+    src_bridge._advance_session(sid)                      # in-flight resolves
+
+    home = rt.kv_registry.lookup(sid).instance_id
+    assert home == fallback                               # re-resolved live
+    r = run_turn(rt, sid, "post migration turn")
+    assert r.engine_id == fallback
+    assert r.prefix_reused_tokens > 0
+    rt.shutdown()
+
+
+def test_pool_rejected_on_sim_kernel(model_setup):
+    cfg, model, params = model_setup
+    rt = NalarRuntime(simulate=True)
+    engine = InferenceEngine(model, params, max_batch=2, max_seq=64)
+    with pytest.raises(RuntimeError, match="simulate=False"):
+        register_engine_pool(rt, "llm", [engine])
+    rt.shutdown()
+
+
+def test_engine_warm_session_populates_cache(model_setup):
+    """The replay primitive in isolation: warm_session prefills tokens into
+    the session pool so a later request resumes instead of prefilling."""
+    cfg, model, params = model_setup
+    engine = InferenceEngine(model, params, max_batch=2, max_seq=64)
+    toks = list(range(1, 20))
+    cached = engine.warm_session("s-warm", toks)
+    assert cached >= len(toks)
+    assert engine.pool.session("s-warm") is not None
+    pt = engine.metrics.prefill_tokens
+    req = engine.generate([7, 8, 9], session_id="s-warm",
+                          sampling=SamplingParams(max_new_tokens=2))
+    assert req.prefix_reused_tokens == cached     # resumed, not re-prefilled
+    assert engine.metrics.prefill_tokens == pt
+    assert engine.warm_session("s-warm", []) == 0
