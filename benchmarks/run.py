@@ -17,8 +17,9 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from . import (fig9_financial, fig9_router, fig9_swe, fig10_control_loop,  # noqa: E402
-               pool_routing, sec62_policies, table4_two_level)
+from . import (failure_injection, fig9_financial, fig9_router,  # noqa: E402
+               fig9_swe, fig10_control_loop, pool_routing, sec62_policies,
+               table4_two_level)
 
 BENCHES = {
     "fig9a_financial": fig9_financial,
@@ -29,6 +30,8 @@ BENCHES = {
     "sec62_policies": sec62_policies,
     # real engines, wall-clock: replica-pool routing policy comparison
     "pool_routing": pool_routing,
+    # replica killed mid-run: goodput/p95 with the retry ladder on vs off
+    "failure_injection": failure_injection,
 }
 
 

@@ -17,14 +17,15 @@ from .directives import Directives
 from .executor import (AgentInstance, EmulatedMethod, EngineBackedMethod,
                        FixedLatency, LatencyModel, LLMLatency,
                        LognormalLatency)
-from .future import Future, FutureMetadata, FutureState, FutureTable
+from .future import (Future, FutureCancelled, FutureMetadata, FutureState,
+                     FutureTable, InstanceDied)
 from .kv_registry import KVRegistry, Residency
 from .node_store import NodeStore, StoreCluster
 from .policy import (Action, ActionSink, ClusterView, HighPrioritySessionPolicy,
                      HoLMitigationPolicy, InstanceView, KVAffinityPolicy,
                      LoadBalancePolicy, LPTPolicy, LPTSchedule, Policy,
-                     PolicyChain, ResourceReassignmentPolicy, SRTFPolicy,
-                     SRTFSchedule, default_policies)
+                     PolicyChain, ResourceReassignmentPolicy, RetryPolicy,
+                     SRTFPolicy, SRTFSchedule, default_policies)
 from .runtime import NalarRuntime, Router, current_runtime, deployment
 from .session import SessionRegistry, get_context, set_context
 from .state import (ManagedDict, ManagedList, SessionStateStore,
@@ -36,14 +37,16 @@ __all__ = [
     "AgentInstance", "AgentSpec", "Action", "ActionSink", "ClusterView",
     "ComponentController", "Directives", "EmulatedMethod",
     "EngineBackedMethod", "FixedLatency",
-    "Future", "FutureMetadata", "FutureState", "FutureTable",
-    "GlobalController", "HighPrioritySessionPolicy", "HoLMitigationPolicy",
+    "Future", "FutureCancelled", "FutureMetadata", "FutureState",
+    "FutureTable", "GlobalController", "HighPrioritySessionPolicy",
+    "HoLMitigationPolicy", "InstanceDied",
     "InstanceView", "KVAffinityPolicy", "Kernel", "KVRegistry",
     "LatencyModel", "LLMLatency",
     "LoadBalancePolicy", "LocalSchedule", "LognormalLatency", "LPTPolicy",
     "LPTSchedule", "ManagedDict", "ManagedList", "NalarRuntime", "NodeStore",
     "Policy", "PolicyChain", "RealTimeKernel", "Residency",
-    "ResourceReassignmentPolicy", "Router", "SRTFPolicy", "SRTFSchedule",
+    "ResourceReassignmentPolicy", "RetryPolicy", "Router", "SRTFPolicy",
+    "SRTFSchedule",
     "SessionRegistry", "SessionStateStore", "SessionTranscript", "SimKernel",
     "StoreCluster",
     "Stub", "Telemetry", "current_runtime", "default_policies", "deployment",

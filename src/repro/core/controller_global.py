@@ -17,7 +17,7 @@ from __future__ import annotations
 import time
 from typing import Dict, List, Optional
 
-from .policy import ActionSink, ClusterView, InstanceView, Policy
+from .policy import ActionSink, ClusterView, InstanceView, Policy, RetryPolicy
 
 
 class GlobalController:
@@ -29,6 +29,12 @@ class GlobalController:
         # virtual-time cost to poll one node's store (network RTT model);
         # real wall-clock compute cost is measured separately for Fig. 10.
         self.node_fetch_latency = node_fetch_latency
+        # always-on rung 2 of the retry ladder: decides the fate of failures
+        # component controllers escalated (reroute to a survivor / give up).
+        # Swappable like the main policy, but kept separate from it so
+        # escalations are never lost to an operator policy chain that
+        # doesn't know about them.
+        self.retry_policy: Policy = RetryPolicy()
         self._running = False
         self.loop_wall_times: List[float] = []   # real seconds per loop
         self.loop_breakdown: List[Dict[str, float]] = []
@@ -84,6 +90,8 @@ class GlobalController:
                     waiting_sessions=[s for s in m.get("waiting_sessions", [])
                                       if s in live_sessions],
                     inflight=int(m.get("inflight", 0)),
+                    retries=int(m.get("retries", 0)),
+                    cancelled=int(m.get("cancelled", 0)),
                 )
                 view.instances[iid] = iv
                 view.by_type.setdefault(iv.agent_type, []).append(iid)
@@ -95,7 +103,33 @@ class GlobalController:
             view.session_priority[s.session_id] = s.priority
         view.node_resources = self.runtime.free_resources()
         view.kv_residency = self.runtime.kv_registry.residency_map()
+        view.blacklisted = set(self.runtime.blacklist)
+        view.escalated = [
+            dict(fid=rec.fut.fid,
+                 agent_type=rec.fut.meta.agent_type,
+                 session=rec.fut.meta.session_id,
+                 executor=rec.src_instance,
+                 attempt=rec.fut.meta.attempt,
+                 escalations=rec.fut.meta.escalations,
+                 reason=rec.reason,
+                 error=repr(rec.error))
+            for rec in self.runtime.pending_escalations()]
         return view
+
+    def handle_escalations(self) -> None:
+        """Off-cycle retry round, nudged by ``runtime.escalate``.
+
+        Escalated failures must not wait for the next periodic tick (under
+        the SimKernel there might never be one — periodic events don't keep
+        the simulation alive), so controllers schedule this directly.  Only
+        the retry policy runs; the operator's policy chain stays periodic.
+        """
+        if not self.runtime.pending_escalations():
+            return
+        view = self.collect_view()
+        sink = ActionSink()
+        self.retry_policy.step(view, sink)
+        self.apply(sink)
 
     def run_once(self) -> Dict[str, float]:
         """One policy round.  Returns wall-clock breakdown (collect/policy/push)."""
@@ -104,6 +138,8 @@ class GlobalController:
         t1 = time.perf_counter()
         sink = ActionSink()
         self.policy.step(view, sink)
+        if view.escalated:
+            self.retry_policy.step(view, sink)
         t2 = time.perf_counter()
         self.apply(sink)
         t3 = time.perf_counter()
@@ -157,6 +193,12 @@ class GlobalController:
                 rt.kill_instance(p["instance"], drain_to=p.get("drain_to"))
             elif a.kind == "provision":
                 rt.provision_instance(p["agent_type"], p["node"])
+            elif a.kind == "retry_future":
+                rt.apply_retry(p["fid"], p["instance"])
+            elif a.kind == "fail_future":
+                rt.fail_escalated(p["fid"], p.get("reason", ""))
+            elif a.kind == "blacklist":
+                rt.blacklist_instance(p["instance"])
             elif a.kind == "install_schedule":
                 for iid in list(rt.instances_of_type(p["agent_type"])):
                     ctrl = rt.controller_of(iid)

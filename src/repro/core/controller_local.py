@@ -19,7 +19,8 @@ import threading
 from typing import Any, Dict, List, Optional
 
 from .executor import AgentInstance, EmulatedMethod, EngineBackedMethod
-from .future import Future, FutureState, resolve_args
+from .future import (Future, FutureCancelled, FutureState, InstanceDied,
+                     TERMINAL_STATES, resolve_args)
 
 
 class LocalSchedule:
@@ -136,6 +137,7 @@ class ComponentController:
         now = self.kernel.now()
         for f in batch:
             f._set_state(FutureState.RUNNING)
+            f._run_id += 1      # fences stale completions of older attempts
             f.meta.started_at = now
         method = self.inst.methods.get(batch[0].meta.method)
         if isinstance(method, EngineBackedMethod):
@@ -160,12 +162,13 @@ class ComponentController:
         now = self.kernel.now()
         self.inst.metrics.busy_until = now + service
         self.inst.metrics.record_service(service)
+        runs = [(f, f._run_id) for f in batch]
 
         def finish() -> None:
             done_any = False
-            for f in batch:
-                if f.state != FutureState.RUNNING:
-                    continue  # preempted/migrated mid-flight
+            for f, run_id in runs:
+                if f.state != FutureState.RUNNING or f._run_id != run_id:
+                    continue  # preempted/migrated/retried mid-flight
                 done_any = True
                 try:
                     self.runtime.enter_agent_context(f, self.inst)
@@ -193,17 +196,25 @@ class ComponentController:
                 self.complete_async(f, error=e)
 
     def complete_async(self, fut: Future, value: Any = None,
-                       error: Optional[BaseException] = None) -> None:
+                       error: Optional[BaseException] = None,
+                       expect_run: Optional[int] = None) -> None:
         """Thread-safe completion entry for asynchronous backends.
 
         Routed through ``kernel.schedule`` so that, under the SimKernel, the
         completion becomes an ordinary event (deterministic ordering) and,
         under the RealTimeKernel, it fires on a timer thread rather than
         re-entering the caller's stack.
+
+        A future cancelled (or otherwise resolved) while in flight on an
+        engine must NOT be materialized by the late completion; callers that
+        captured ``expect_run`` at submission additionally fence against the
+        future having been retried on another replica in the meantime.
         """
         def finish() -> None:
-            if fut.state in (FutureState.READY, FutureState.FAILED):
-                return  # preempted/cancelled while in flight
+            if fut.state in TERMINAL_STATES:
+                return  # preempted/cancelled/failed while in flight
+            if expect_run is not None and fut._run_id != expect_run:
+                return  # stale completion of a superseded attempt
             self.inst.metrics.record_service(
                 max(0.0, self.kernel.now() - fut.meta.started_at))
             self._complete(fut, value=value, error=error)
@@ -213,6 +224,8 @@ class ComponentController:
     def _execute_composite(self, fut: Future, fn) -> None:
         """User-code agent method that may itself call stubs: run on a driver
         thread so nested future blocking works under virtual time."""
+        run_id = fut._run_id
+
         def body() -> None:
             start = self.kernel.now()
             try:
@@ -226,26 +239,55 @@ class ComponentController:
                 self.runtime.exit_agent_context()
             self.inst.metrics.record_service(self.kernel.now() - start)
             if err is None:
-                self._complete(fut, value=value)
+                self._complete(fut, value=value, expect_run=run_id)
             else:
-                self._complete(fut, error=err)
+                self._complete(fut, error=err, expect_run=run_id)
 
         self.kernel.spawn_driver(body, name=f"agent:{fut.fid}")
 
     # ------------------------------------------------------------ completion
     def _complete(self, fut: Future, value: Any = None,
-                  error: Optional[BaseException] = None) -> None:
+                  error: Optional[BaseException] = None,
+                  expect_run: Optional[int] = None) -> None:
         now = self.kernel.now()
         with self._lock:
             if fut in self.inst.running:
                 self.inst.running.remove(fut)
+        if expect_run is not None and fut._run_id != expect_run:
+            # stale completion of a superseded attempt: the future was
+            # preempted/retried and re-executes elsewhere; drop the result
+            self._publish_metrics()
+            self._maybe_dispatch()
+            return
+        epoch = (fut.fid, fut.meta.attempt)
+        if fut.state == FutureState.CANCELLED:
+            # resolved by cancellation while in flight: discard the late
+            # result; the cancel path already rolled back + notified
+            self.runtime.state_store.rollback_epoch(epoch)
+            self._publish_metrics()
+            self._maybe_dispatch()
+            return
         if error is not None:
+            # failed attempt: its managed-state writes never happened
+            # (exactly-once contract — rollback precedes any re-execution)
+            self.runtime.state_store.rollback_epoch(epoch)
+            if self._handle_failure(fut, error, now):
+                self._publish_metrics()
+                self._maybe_dispatch()
+                return          # absorbed: retrying locally or escalated
             self.inst.metrics.failed += 1
             fut.fail(error, now)
         else:
+            self.runtime.state_store.commit_epoch(epoch)
             self.inst.metrics.completed += 1
             fut.materialize(value, now)
-        # push the value to each consumer controller (push-based readiness)
+        self._push_consumers(fut)
+        self.runtime.telemetry.on_future_done(fut, self.inst, now)
+        self._publish_metrics()
+        self._maybe_dispatch()
+
+    def _push_consumers(self, fut: Future) -> None:
+        """Push resolution to each consumer controller (push-based readiness)."""
         for consumer in list(fut.meta.consumers):
             ctrl = self.runtime.controller_of(consumer)
             if ctrl is not None and ctrl is not self:
@@ -253,9 +295,102 @@ class ComponentController:
                 self.kernel.schedule(delay, lambda c=ctrl, fid=fut.fid: c.on_dep_ready(fid))
             elif ctrl is self:
                 self.on_dep_ready(fut.fid)
+
+    # ------------------------------------------------------- failure handling
+    def _retry_budget(self, fut: Future) -> int:
+        """Per-call retry budget.
+
+        ``_hint={"max_retries": n}`` overrides the agent directive outright
+        (0 disables retries for this call).  The pre-existing ``"retry"``
+        hint doubles as the budget only when truthy — drivers tag first
+        attempts of their own retry loops with ``{"retry": 0}`` as a
+        *scheduling* signal (LPT re-entrance), which must not silently
+        disable the operator's ``max_retries`` directive.
+        """
+        hint = fut.meta.work_hint
+        for key, zero_counts in (("max_retries", True), ("retry", False)):
+            v = hint.get(key)
+            if v is None:
+                continue
+            try:
+                n = int(v)
+            except (TypeError, ValueError):
+                continue
+            if n > 0 or (zero_counts and n == 0):
+                return max(0, n)
+        return self.inst.directives.max_retries
+
+    def _retryable(self, error: BaseException) -> bool:
+        r = self.inst.directives.retryable
+        if callable(r):
+            try:
+                return bool(r(error))
+            except Exception:  # noqa: BLE001 — a broken predicate fails fast
+                return False
+        return bool(r)
+
+    def _handle_failure(self, fut: Future, error: BaseException,
+                        now: float) -> bool:
+        """The retry ladder (rung 1 + handoff to rung 2).
+
+        Returns True when the failure was absorbed: either a local in-place
+        retry was scheduled (backoff), or the future escalated to the global
+        controller's RetryPolicy (budget exhausted / instance death).  False
+        means the failure is terminal and the caller should ``fail`` it.
+        """
+        if isinstance(error, FutureCancelled):
+            return False        # cancellation is never retried
+        budget = self._retry_budget(fut)
+        if budget <= 0 or not self._retryable(error):
+            return False
+        dead = not self.inst.alive or isinstance(error, InstanceDied)
+        if not dead and fut.meta.attempt < budget:
+            self._schedule_retry(fut, now)
+            return True
+        # rung 2: local budget exhausted, or the executor died — hand the
+        # future to the global controller for rerouting to a survivor
+        return self.runtime.escalate(
+            fut, error, self.inst.instance_id,
+            reason="instance_death" if dead else "budget_exhausted")
+
+    def _schedule_retry(self, fut: Future, now: float) -> None:
+        """Rung 1: retry in place with exponential backoff."""
+        delay = self.inst.directives.retry_backoff * (2 ** fut.meta.attempt)
+        if not fut.reset_for_retry(now):
+            return
+        self.inst.metrics.retries += 1
+
+        def resubmit() -> None:
+            if fut.state != FutureState.PENDING:
+                return          # cancelled during backoff
+            if self.inst.alive:
+                self.submit(fut)
+            else:
+                self.runtime.dispatch(fut)   # died during backoff: re-route
+
+        self.kernel.schedule(delay, resubmit, tag=f"retry:{fut.fid}")
+
+    def cancel_local(self, fut: Future, reason: str) -> bool:
+        """Cancel a future owned by this controller: remove it from queued /
+        parked / running bookkeeping, resolve it CANCELLED, and propagate
+        readiness so dependents unblock (they observe the cancellation when
+        they touch the value)."""
+        now = self.kernel.now()
+        with self._lock:
+            self.inst.remove_queued(fut)
+            self._parked.pop(fut.fid, None)
+            if fut in self.inst.running:
+                self.inst.running.remove(fut)
+        if not fut.cancel(now, reason):
+            return False
+        # a running attempt may have written managed state already
+        self.runtime.state_store.rollback_epoch((fut.fid, fut.meta.attempt))
+        self.inst.metrics.cancelled += 1
+        self._push_consumers(fut)
         self.runtime.telemetry.on_future_done(fut, self.inst, now)
         self._publish_metrics()
         self._maybe_dispatch()
+        return True
 
     # ------------------------------------------------------------- migration
     def take_session_futures(self, session_id: str) -> List[Future]:
@@ -335,8 +470,10 @@ class ComponentController:
         def activate() -> None:
             if parked and pending:
                 with dst_ctrl._lock:
-                    still = {d for d in pending
-                             if not self.runtime.futures.get(d).available}
+                    # a dep retired by the FutureTable GC counts as resolved
+                    deps = {d: self.runtime.futures.get(d) for d in pending}
+                    still = {d for d, f in deps.items()
+                             if f is not None and not f.available}
                     if still:
                         dst_ctrl._parked[fut.fid] = still
                     else:
@@ -392,7 +529,20 @@ class ComponentController:
         elif kind == "kill":
             self.shutdown(drain_to=payload.get("drain_to"))
 
-    def shutdown(self, drain_to: Optional[str] = None) -> None:
+    def shutdown(self, drain_to: Optional[str] = None,
+                 hard: bool = False) -> None:
+        """Stop this instance.
+
+        Graceful (default): queued and parked work drains to ``drain_to`` or
+        re-routes through the runtime; in-flight work is allowed to finish
+        (its completion events still fire).  ``hard=True`` models instance
+        *death* (fault injection): in-flight work is lost — each running
+        future fails with ``InstanceDied`` and travels the retry ladder
+        (escalating to the global controller when retries are enabled).
+        Engine-backed in-flight futures are failed by the serving backend's
+        ``on_replica_killed`` hook instead, which also recovers the dead
+        replica's sessions by transcript replay.
+        """
         self.inst.alive = False
         with self._lock:
             pending = list(self.inst.queue)
@@ -410,6 +560,15 @@ class ComponentController:
                     dequeued = True
             if dequeued:
                 self.runtime.dispatch(f)
+        if hard:
+            with self._lock:
+                running = list(self.inst.running)
+            err = InstanceDied(f"instance {self.inst.instance_id} died")
+            for f in running:
+                if isinstance(self.inst.methods.get(f.meta.method),
+                              EngineBackedMethod):
+                    continue    # failed by the backend's on_replica_killed
+                self._complete(f, error=err)
         self._publish_metrics()
 
     # -------------------------------------------------------------- metrics
@@ -425,6 +584,8 @@ class ComponentController:
             "ema_service": m.ema_service,
             "completed": m.completed,
             "failed": m.failed,
+            "retries": m.retries,
+            "cancelled": m.cancelled,
             "alive": self.inst.alive,
             "waiting_sessions": list(self.inst.waiting_sessions),
             "updated_at": self.kernel.now(),

@@ -29,10 +29,17 @@ def format_trace(rec: RequestRecord, width: int = 48) -> str:
         hi = int((s.ready_at - t0) / span * width)
         bar = (" " * lo + "." * max(mid - lo, 0)
                + "#" * max(hi - mid, 1))[:width].ljust(width)
-        mark = "!" if s.failed else " "
+        mark = " "
+        if s.failed:
+            mark = "!"
+        elif getattr(s, "cancelled", False):
+            mark = "x"
+        retry = (f" retry#{s.attempt}"
+                 if getattr(s, "attempt", 0) > 0 else "")
         lines.append(
             f" {mark}[{bar}] {s.agent_type}.{s.method} @ {s.executor} "
-            f"queue={s.queue_time:.3f}s service={s.service_time:.3f}s")
+            f"queue={s.queue_time:.3f}s service={s.service_time:.3f}s"
+            f"{retry}")
     return "\n".join(lines)
 
 

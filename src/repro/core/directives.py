@@ -11,7 +11,7 @@ attribution impossible.  ``validate()`` enforces it.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional
 
 
 @dataclass
@@ -32,6 +32,19 @@ class Directives:
     # Does this agent keep managed (session) state?  Set automatically when the
     # agent code touches managedList/managedDict; may also be declared.
     uses_managed_state: bool = False
+    # ---- failure handling (the retry ladder) --------------------------------
+    # Max *local* retries per future: the component controller re-executes a
+    # failed attempt in place (state epoch rolled back first) with exponential
+    # backoff.  After the budget is exhausted — or immediately when the
+    # instance died — the failure escalates to the global controller's
+    # RetryPolicy, which reroutes to a surviving replica.  0 = fail fast.
+    # A per-call ``_hint={"retry": n}`` overrides this budget.
+    max_retries: int = 0
+    # Which errors are worth retrying: bool, or a predicate over the raised
+    # exception.  Cancellations are never retried regardless.
+    retryable: Any = True
+    # Base backoff in (virtual) seconds; attempt k waits backoff * 2^k.
+    retry_backoff: float = 0.05
 
     def validate(self) -> None:
         if self.batchable and self.uses_managed_state:
@@ -43,6 +56,10 @@ class Directives:
             raise ValueError("min_instances > max_instances")
         if self.max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if self.retry_backoff < 0:
+            raise ValueError("retry_backoff must be >= 0")
 
     def merged(self, **overrides) -> "Directives":
         d = Directives(**{**self.__dict__, **overrides})

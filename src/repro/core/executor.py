@@ -135,6 +135,10 @@ class EngineBackedMethod:
 class InstanceMetrics:
     completed: int = 0
     failed: int = 0
+    # failure-handling telemetry: local re-attempts started here, and
+    # futures cancelled while queued/running here
+    retries: int = 0
+    cancelled: int = 0
     busy_until: float = 0.0
     total_busy: float = 0.0
     queue_len: int = 0

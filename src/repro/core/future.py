@@ -34,6 +34,26 @@ class FutureState(str, Enum):
     CANCELLED = "cancelled"
 
 
+#: states in which a future is resolved and will never run again
+TERMINAL_STATES = (FutureState.READY, FutureState.FAILED,
+                   FutureState.CANCELLED)
+
+
+class FutureCancelled(RuntimeError):
+    """Raised by ``Future.value()`` when the future was cancelled.
+
+    Cancellation is a *terminal* resolution: consumers are notified exactly
+    like on failure, but the retry ladder never re-dispatches a cancelled
+    future."""
+
+
+class InstanceDied(RuntimeError):
+    """The agent instance executing a future died (fault injection, replica
+    crash, hard ``kill_instance``).  Component controllers escalate this
+    error straight to the global controller — local in-place retries are
+    pointless on a dead executor."""
+
+
 @dataclass
 class FutureMetadata:
     """Mutable coordination metadata (Table 3)."""
@@ -51,8 +71,16 @@ class FutureMetadata:
     scheduled_at: float = -1.0
     started_at: float = -1.0
     ready_at: float = -1.0
+    # failure-handling bookkeeping: attempt 0 is the first execution, each
+    # retry (local or escalated) increments it; ``escalations`` counts hops
+    # through the global controller's RetryPolicy ladder
+    attempt: int = 0
+    escalations: int = 0
     # bookkeeping for emulated execution / cost models
     work_hint: Dict[str, Any] = field(default_factory=dict)
+    # every node whose store holds (or held) this future's metadata mirror —
+    # migration/escalation re-home the mirror, and GC must scrub them all
+    mirror_nodes: List[str] = field(default_factory=list)
 
 
 class Future:
@@ -64,7 +92,7 @@ class Future:
 
     __slots__ = (
         "fid", "meta", "_state", "_value", "_error", "_ready_evt",
-        "_runtime", "_lock", "args", "kwargs",
+        "_runtime", "_lock", "args", "kwargs", "_run_id",
     )
 
     def __init__(self, runtime: Any, meta: FutureMetadata,
@@ -79,12 +107,18 @@ class Future:
         self._lock = threading.Lock()
         self.args = args
         self.kwargs = kwargs or {}
+        # execution fence: bumped every time a controller moves the future
+        # into RUNNING.  Completion callbacks captured under an older run id
+        # are stale (the attempt was preempted, retried, or its instance
+        # died) and must not resolve the future.
+        self._run_id = 0
 
     # ------------------------------------------------------------ public API
     @property
     def available(self) -> bool:
-        """True iff the value is materialized (non-blocking)."""
-        return self._state in (FutureState.READY, FutureState.FAILED)
+        """True iff the future is resolved (non-blocking): value materialized,
+        failed, or cancelled."""
+        return self._state in TERMINAL_STATES
 
     def value(self, timeout: Optional[float] = None) -> Any:
         """Blocking access (Op 3).  Registers the caller as a consumer."""
@@ -108,11 +142,15 @@ class Future:
     def materialize(self, value: Any, now: float) -> None:
         """Make the value available and push readiness to waiters.
 
-        Value immutability: a second materialization is a runtime bug.
+        Value immutability: a second materialization is a runtime bug.  A
+        materialization racing a cancellation loses silently — the caller
+        renounced the value, so the late result is discarded.
         """
         with self._lock:
             if self._state == FutureState.READY:
                 raise RuntimeError(f"future {self.fid} materialized twice")
+            if self._state == FutureState.CANCELLED:
+                return
             self._value = value
             self._state = FutureState.READY
             self.meta.ready_at = now
@@ -120,12 +158,57 @@ class Future:
 
     def fail(self, error: BaseException, now: float) -> None:
         with self._lock:
-            if self._state in (FutureState.READY, FutureState.FAILED):
+            if self._state in TERMINAL_STATES:
                 return
             self._error = error
             self._state = FutureState.FAILED
             self.meta.ready_at = now
         self._runtime.kernel.notify(self._ready_evt)
+
+    def cancel(self, now: float, reason: str = "cancelled") -> bool:
+        """Resolve the future as CANCELLED; waiters raise ``FutureCancelled``.
+
+        Returns False when the future is already resolved.  Queue removal and
+        consumer notification are orchestrated by ``runtime.cancel_future`` /
+        the executor's component controller — this method only flips the
+        handle's state and wakes blocked ``value()`` callers.
+        """
+        with self._lock:
+            if self._state in TERMINAL_STATES:
+                return False
+            self._error = FutureCancelled(
+                f"future {self.fid} ({self.meta.agent_type}.{self.meta.method}) "
+                f"cancelled: {reason}")
+            self._state = FutureState.CANCELLED
+            self.meta.ready_at = now
+        self._runtime.kernel.notify(self._ready_evt)
+        return True
+
+    def reset_for_retry(self, now: float) -> bool:
+        """FAILED/SCHEDULED/RUNNING -> PENDING reset for retry re-dispatch.
+
+        Increments the attempt counter and re-arms readiness so the future
+        can travel the dispatch path again.  READY and CANCELLED futures are
+        immutable — the reset is refused.
+        """
+        with self._lock:
+            if self._state in (FutureState.READY, FutureState.CANCELLED):
+                return False
+            self._error = None
+            self._state = FutureState.PENDING
+            self.meta.attempt += 1
+            # close the fence immediately: a completion captured under the
+            # superseded attempt must not land during the PENDING
+            # backoff/escalation window either
+            self._run_id += 1
+            self.meta.scheduled_at = -1.0
+            self.meta.started_at = -1.0
+            self.meta.ready_at = -1.0
+            if self._ready_evt.is_set():
+                # the future had terminally failed (its waiters already woke
+                # and observed the error); new waiters need a fresh event
+                self._ready_evt = threading.Event()
+        return True
 
     def unresolved_deps(self, table: "FutureTable") -> List[str]:
         out = []
@@ -146,11 +229,26 @@ class FutureTable:
     In the distributed deployment this is sharded across node stores; the
     in-process table keeps one authoritative object per future while the node
     stores hold serialized metadata mirrors (what Fig. 10 measures).
+
+    The table is *bounded*: once it grows past ``gc_threshold`` entries, a
+    sweep retires resolved futures (READY/FAILED/CANCELLED).  Resolved
+    futures have already pushed their values to every registered consumer,
+    and dependency checks treat a missing fid as resolved, so retirement is
+    invisible to the runtime — it just keeps long-running deployments
+    (the 130K-future scale of ``fig10_control_loop``) memory-flat.  Callers
+    holding the ``Future`` object keep full access to its value.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, gc_threshold: int = 4096) -> None:
         self._lock = threading.Lock()
         self._futures: Dict[str, Future] = {}
+        # sweep trigger; 0/None disables GC entirely
+        self.gc_threshold = gc_threshold
+        self.retired = 0          # total futures GC'd over the table's life
+        # adaptive watermark: when a sweep finds little to collect (a burst
+        # of still-pending futures), back off geometrically so future
+        # creation stays amortized O(1) instead of O(n) per add
+        self._sweep_floor = 0
 
     def add(self, f: Future) -> None:
         with self._lock:
@@ -171,6 +269,27 @@ class FutureTable:
     def snapshot(self) -> List[Future]:
         with self._lock:
             return list(self._futures.values())
+
+    def needs_sweep(self) -> bool:
+        if not self.gc_threshold:
+            return False
+        with self._lock:
+            return len(self._futures) > max(self.gc_threshold,
+                                            self._sweep_floor)
+
+    def sweep(self) -> List[Future]:
+        """Retire resolved futures; returns them (for mirror cleanup)."""
+        with self._lock:
+            dead = [f for f in self._futures.values()
+                    if f.state in TERMINAL_STATES]
+            for f in dead:
+                del self._futures[f.fid]
+            self.retired += len(dead)
+            # next sweep only once the table doubles past what survived —
+            # collapses back to gc_threshold as soon as futures resolve
+            self._sweep_floor = max(self.gc_threshold,
+                                    2 * len(self._futures))
+        return dead
 
 
 def resolve_args(args: tuple, kwargs: dict) -> tuple:

@@ -45,6 +45,9 @@ class InstanceView:
     waiting_sessions: List[str]
     # futures currently executing (async engine-backed instances carry many)
     inflight: int = 0
+    # failure-handling telemetry (mirrors InstanceMetrics)
+    retries: int = 0
+    cancelled: int = 0
 
     def eta(self, now: float) -> float:
         rem = max(0.0, self.busy_until - now) if self.busy else 0.0
@@ -71,6 +74,12 @@ class ClusterView:
     # session_id -> (instance holding its K,V cache, cached tokens) — the
     # §4.3.2 residency snapshot, so policies can route for cache affinity
     kv_residency: Dict[str, tuple] = field(default_factory=dict)
+    # failures escalated by component controllers awaiting a rerouting
+    # decision: dicts with fid/agent_type/session/executor/attempt/
+    # escalations/reason/error (consumed by RetryPolicy)
+    escalated: List[Dict[str, Any]] = field(default_factory=list)
+    # instances the runtime will no longer route to (dead replicas)
+    blacklisted: set = field(default_factory=set)
 
     def instances_of(self, agent_type: str) -> List[InstanceView]:
         return [self.instances[i] for i in self.by_type.get(agent_type, [])
@@ -127,6 +136,21 @@ class ActionSink:
     def install_schedule(self, agent_type: str, policy: LocalSchedule) -> None:
         self.actions.append(Action("install_schedule", dict(
             agent_type=agent_type, policy=policy)))
+
+    def retry_future(self, fid: str, instance: str) -> None:
+        """Re-dispatch an escalated future on ``instance`` (rung 2 of the
+        retry ladder: reroute to a surviving replica)."""
+        self.actions.append(Action("retry_future", dict(fid=fid,
+                                                        instance=instance)))
+
+    def fail_future(self, fid: str, reason: str = "") -> None:
+        """Give up on an escalated future: fail it with its original error."""
+        self.actions.append(Action("fail_future", dict(fid=fid,
+                                                       reason=reason)))
+
+    def blacklist(self, instance: str) -> None:
+        """Remove ``instance`` from every routing decision from now on."""
+        self.actions.append(Action("blacklist", dict(instance=instance)))
 
 
 class Policy:
@@ -279,7 +303,11 @@ class LPTSchedule(LocalSchedule):
     name = "lpt"
 
     def order_key(self, fut, now: float):
-        retries = fut.meta.work_hint.get("retry", 0)
+        # re-entrance comes from either the driver's own retry loop (the
+        # "retry" hint, Fig. 4 style) or the runtime's retry ladder (the
+        # attempt counter on re-dispatched futures)
+        retries = max(fut.meta.work_hint.get("retry", 0),
+                      getattr(fut.meta, "attempt", 0))
         est = fut.meta.work_hint.get("est_service", 1.0)
         return (-retries, -est, fut.meta.created_at)
 
@@ -344,6 +372,61 @@ class KVAffinityPolicy(Policy):
                         migrated += 1
                         continue
             act.route(sid, home.agent_type, iid)
+
+
+class RetryPolicy(Policy):
+    """Rung 2 of the retry ladder (§5 fault handling as a §4.2 policy).
+
+    Component controllers retry failures *in place* up to the agent's
+    ``max_retries`` budget; what they cannot fix locally — the budget ran
+    out, or the instance itself died — they escalate.  Escalations appear in
+    ``ClusterView.escalated``; for each one this policy
+
+      1. blacklists the failed executor if it is dead (``ClusterView``
+         marks it, and the runtime stops routing there for good),
+      2. reroutes the future to the least-loaded *surviving* replica of the
+         same agent type (never the one that just failed it), or
+      3. fails the future with its original error when no survivor remains
+         or the future has been rerouted ``max_reroutes`` times already.
+
+    Installed by default on the global controller (it also runs between
+    periodic rounds when a controller nudges an escalation), and swappable
+    like any other policy — e.g. a custom subclass could provision a fresh
+    replica instead of failing on rung 3.
+    """
+
+    name = "retry"
+
+    def __init__(self, max_reroutes: int = 2) -> None:
+        self.max_reroutes = max_reroutes
+
+    def step(self, view: ClusterView, act: ActionSink) -> None:
+        for rec in view.escalated:
+            src = rec.get("executor", "")
+            src_view = view.instances.get(src)
+            if src_view is not None and not src_view.alive \
+                    and src not in view.blacklisted:
+                act.blacklist(src)
+            if rec.get("escalations", 0) > self.max_reroutes:
+                act.fail_future(rec["fid"], reason="reroute budget exhausted")
+                continue
+            cands = [iv for iv in view.instances_of(rec["agent_type"])
+                     if iv.instance_id != src
+                     and iv.instance_id not in view.blacklisted]
+            if not cands:
+                act.fail_future(rec["fid"], reason="no surviving replica")
+                continue
+            # prefer the session's KV home: replica failure recovery just
+            # replayed the transcript there (§4.3.2) — retrying anywhere
+            # else pays a cold full-context prefill for nothing
+            dst = None
+            home = view.kv_residency.get(rec.get("session", ""))
+            if home is not None:
+                dst = next((iv for iv in cands
+                            if iv.instance_id == home[0]), None)
+            if dst is None:
+                dst = min(cands, key=lambda iv: iv.eta(view.now))
+            act.retry_future(rec["fid"], dst.instance_id)
 
 
 class HighPrioritySessionPolicy(Policy):

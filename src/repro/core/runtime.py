@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import random
 import threading
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional
 
 from .clock import Kernel, RealTimeKernel, SimKernel
@@ -17,7 +18,7 @@ from .controller_global import GlobalController
 from .controller_local import ComponentController
 from .directives import Directives
 from .executor import AgentInstance
-from .future import Future, FutureTable
+from .future import Future, FutureState, FutureTable
 from .kv_registry import KVRegistry
 from .node_store import StoreCluster
 from .policy import Policy, default_policies
@@ -38,6 +39,18 @@ def _set_current(rt: Optional["NalarRuntime"]) -> None:
     global _current_runtime
     with _rt_lock:
         _current_runtime = rt
+
+
+@dataclass
+class EscalationRecord:
+    """A failure a component controller could not absorb locally, parked
+    until the global controller's RetryPolicy decides its fate."""
+
+    fut: Future
+    error: BaseException
+    src_instance: str
+    reason: str               # "budget_exhausted" | "instance_death"
+    at: float
 
 
 class Router:
@@ -145,10 +158,11 @@ class NalarRuntime:
                  net_latency_same_node: float = 5e-5,
                  net_latency_cross_node: float = 5e-4,
                  state_bandwidth: float = 1e9,
+                 future_gc_threshold: int = 4096,
                  seed: int = 0) -> None:
         self.kernel: Kernel = SimKernel() if simulate else RealTimeKernel()
         self.stores = StoreCluster()
-        self.futures = FutureTable()
+        self.futures = FutureTable(gc_threshold=future_gc_threshold)
         self.sessions = SessionRegistry()
         self.telemetry = Telemetry()
         self.kv_registry = KVRegistry()
@@ -175,6 +189,11 @@ class NalarRuntime:
         # real execution backends (serving bridges) attached to agent types;
         # populated by repro.serving.bridge.register_engine_agent
         self.engine_backends: Dict[str, Any] = {}
+        # failure handling: escalated futures awaiting a RetryPolicy decision,
+        # and instances the router must never pick again (dead replicas)
+        self._esc_lock = threading.Lock()
+        self.escalations: Dict[str, EscalationRecord] = {}
+        self.blacklist: set = set()
         self._shutdown_hooks: List[Callable[[], None]] = []
         self.global_controller = GlobalController(
             self, policy or default_policies(), interval=control_interval)
@@ -197,6 +216,12 @@ class NalarRuntime:
     def apply_directives(self, agent_type: str, overrides: Dict[str, Any]) -> None:
         spec = self._specs[agent_type]
         spec.directives = spec.directives.merged(**overrides)
+        # already-provisioned instances adopt the new directives too —
+        # ``stub.init(...)`` runs at deployment time, after ``register_agent``
+        # provisioned the min_instances floor
+        for inst in self._instances.values():
+            if inst.agent_type == agent_type:
+                inst.directives = spec.directives
 
     def spec_of(self, agent_type: str) -> AgentSpec:
         return self._specs[agent_type]
@@ -221,16 +246,33 @@ class NalarRuntime:
         return iid
 
     def kill_instance(self, instance_id: str,
-                      drain_to: Optional[str] = None) -> None:
+                      drain_to: Optional[str] = None,
+                      hard: bool = False) -> None:
+        """Stop an instance.
+
+        Graceful (default): respects the ``min_instances`` floor and lets
+        in-flight work finish (the policy-layer ``kill`` action).
+        ``hard=True`` is the fault-injection API: the instance *dies* —
+        no floor (real failures don't respect one), queued work re-routes,
+        and in-flight futures fail with ``InstanceDied`` and travel the
+        retry ladder.  Engine-backed instances additionally recover their
+        resident sessions on surviving replicas by transcript replay
+        (``on_replica_killed`` on the serving backend).
+        """
         inst = self._instances.get(instance_id)
         if inst is None or not inst.alive:
             return
         spec = self._specs[inst.agent_type]
-        live = self.live_instances(inst.agent_type)
-        if len(live) <= spec.directives.min_instances:
-            return  # never go below the floor (Table 1 min_instances)
+        if not hard:
+            live = self.live_instances(inst.agent_type)
+            if len(live) <= spec.directives.min_instances:
+                return  # never go below the floor (Table 1 min_instances)
         ctrl = self._controllers[instance_id]
-        ctrl.shutdown(drain_to=drain_to)
+        ctrl.shutdown(drain_to=drain_to, hard=hard)
+        if hard:
+            backend = self.engine_backends.get(inst.agent_type)
+            if backend is not None and hasattr(backend, "on_replica_killed"):
+                backend.on_replica_killed(instance_id)
         self._release(inst.node_id, spec.directives.resources)
 
     def instance(self, instance_id: str) -> Optional[AgentInstance]:
@@ -241,7 +283,8 @@ class NalarRuntime:
 
     def live_instances(self, agent_type: str) -> List[AgentInstance]:
         return [i for i in self._instances.values()
-                if i.agent_type == agent_type and i.alive]
+                if i.agent_type == agent_type and i.alive
+                and i.instance_id not in self.blacklist]
 
     def instances_of_type(self, agent_type: str) -> List[str]:
         return [i.instance_id for i in self.live_instances(agent_type)]
@@ -285,6 +328,16 @@ class NalarRuntime:
         return self._net_cross + nbytes / self._state_bw
 
     # -------------------------------------------------------------- dispatch
+    def add_future(self, fut: Future) -> None:
+        """Register a newly created future; opportunistically retire resolved
+        ones (and their node-store mirrors) once the table outgrows its
+        threshold, keeping long-running deployments memory-flat."""
+        self.futures.add(fut)
+        if self.futures.needs_sweep():
+            for f in self.futures.sweep():
+                for node in f.meta.mirror_nodes:
+                    self.stores.get(node).delete(f"future:{f.fid}")
+
     def dispatch(self, fut: Future) -> None:
         self.mirror_future(fut)
         inst = self.router.route(fut)
@@ -292,6 +345,9 @@ class NalarRuntime:
             fut.fail(RuntimeError(
                 f"no live instance of agent {fut.meta.agent_type!r}"),
                 self.kernel.now())
+            # reachable mid-run since hard kills: parked dependents must
+            # observe the failure or they stay parked forever
+            self.push_ready(fut)
             return
         ctrl = self._controllers[inst.instance_id]
         src_node = self.node_of_instance(fut.meta.creator)
@@ -324,6 +380,8 @@ class NalarRuntime:
     def mirror_future(self, fut: Future) -> None:
         """Write the metadata mirror into the executor/creator node store."""
         node = self.node_of_instance(fut.meta.executor or fut.meta.creator)
+        if node not in fut.meta.mirror_nodes:
+            fut.meta.mirror_nodes.append(node)
         self.stores.get(node).hset_many(f"future:{fut.fid}", {
             "state": fut.state.value,
             "agent_type": fut.meta.agent_type,
@@ -333,6 +391,7 @@ class NalarRuntime:
             "dependencies": list(fut.meta.dependencies),
             "priority": fut.meta.priority,
             "created_at": fut.meta.created_at,
+            "attempt": fut.meta.attempt,
         })
 
     def reprioritize_session(self, session_id: str) -> None:
@@ -342,6 +401,123 @@ class NalarRuntime:
         for fut in self.futures.snapshot():
             if fut.meta.session_id == session_id and not fut.available:
                 fut.meta.priority = sess.priority_for(fut.meta.agent_type)
+
+    # ------------------------------------------------------- fault handling
+    def push_ready(self, fut: Future, src_node: Optional[str] = None) -> None:
+        """Notify every consumer controller that ``fut`` resolved.
+
+        Runtime-level counterpart of the producing controller's
+        ``_push_consumers`` (which keeps a same-controller inline fast path);
+        used by resolution paths that have no producing controller — a
+        dispatch with no live instance, a RetryPolicy ``fail_future``, a
+        cancellation of an unrouted future."""
+        src = src_node or self.node_of_instance(fut.meta.executor
+                                                or fut.meta.creator)
+        for consumer in list(fut.meta.consumers):
+            ctrl = self._controllers.get(consumer)
+            if ctrl is not None:
+                self.kernel.schedule(
+                    self.net_latency(src, ctrl.inst.node_id),
+                    lambda c=ctrl, f=fut.fid: c.on_dep_ready(f))
+
+    def escalate(self, fut: Future, error: BaseException, src_instance: str,
+                 reason: str) -> bool:
+        """Rung 2 of the retry ladder: park the future (PENDING) for the
+        global controller's RetryPolicy and nudge an off-cycle policy round.
+
+        The nudge is a *non-periodic* kernel event, so under the SimKernel
+        an escalation keeps virtual time alive until it is resolved — the
+        periodic global tick alone would let the simulation quiesce with
+        the future stranded.
+        """
+        if not fut.reset_for_retry(self.kernel.now()):
+            return False        # already resolved (e.g. cancelled)
+        fut.meta.escalations += 1
+        with self._esc_lock:
+            self.escalations[fut.fid] = EscalationRecord(
+                fut=fut, error=error, src_instance=src_instance,
+                reason=reason, at=self.kernel.now())
+        self.mirror_future(fut)
+        spec = self._specs.get(fut.meta.agent_type)
+        delay = spec.directives.retry_backoff if spec is not None else 0.05
+        self.kernel.schedule(delay, self.global_controller.handle_escalations,
+                             tag=f"escalate:{fut.fid}")
+        return True
+
+    def pending_escalations(self) -> List[EscalationRecord]:
+        with self._esc_lock:
+            return list(self.escalations.values())
+
+    def take_escalation(self, fid: str) -> Optional[EscalationRecord]:
+        with self._esc_lock:
+            return self.escalations.pop(fid, None)
+
+    def apply_retry(self, fid: str, dst_instance: str) -> bool:
+        """Enact a RetryPolicy ``retry_future`` decision: re-dispatch the
+        escalated future on the chosen surviving replica."""
+        rec = self.take_escalation(fid)
+        if rec is None:
+            return False
+        fut = rec.fut
+        if fut.state != FutureState.PENDING:
+            return False        # cancelled while parked
+        ctrl = self._controllers.get(dst_instance)
+        if ctrl is None or not ctrl.inst.alive:
+            self.dispatch(fut)  # destination vanished: let the router pick
+            return True
+        ctrl.inst.metrics.retries += 1
+        sid = fut.meta.session_id
+        spec = self._specs.get(fut.meta.agent_type)
+        if sid and spec is not None and spec.directives.stateful:
+            # the "sticky forever" pin points at the dead instance; re-home it
+            self.router.pin(sid, fut.meta.agent_type, dst_instance)
+        self.mirror_future(fut)
+        ctrl.submit(fut)
+        return True
+
+    def fail_escalated(self, fid: str, reason: str = "") -> None:
+        """Enact a RetryPolicy ``fail_future`` decision: the ladder is out of
+        rungs — resolve the future with its original error."""
+        rec = self.take_escalation(fid)
+        if rec is None:
+            return
+        fut = rec.fut
+        now = self.kernel.now()
+        fut.fail(rec.error, now)
+        self.telemetry.on_future_done(fut, None, now)
+        # push readiness so parked dependents observe the failure
+        self.push_ready(fut, src_node=self.node_of_instance(rec.src_instance))
+
+    def blacklist_instance(self, instance_id: str) -> None:
+        """Never route to ``instance_id`` again (dead/poisoned replica)."""
+        self.blacklist.add(instance_id)
+
+    def cancel_future(self, fut: Future, reason: str = "cancelled") -> bool:
+        """Cancel a future wherever it currently is — parked, queued, or in
+        flight.  Queued work is dequeued; in-flight work keeps running but
+        its completion is discarded (terminal-state + run-id guards).
+        Returns False when the future is already resolved."""
+        if fut.available:
+            return False
+        self.take_escalation(fut.fid)    # un-park if awaiting a retry ruling
+        ctrl = self._controllers.get(fut.meta.executor)
+        if ctrl is not None:
+            return ctrl.cancel_local(fut, reason)
+        if not fut.cancel(self.kernel.now(), reason):
+            return False
+        self.telemetry.on_future_done(fut, None, self.kernel.now())
+        self.push_ready(fut)
+        return True
+
+    def cancel_session(self, session_id: str,
+                       reason: str = "session cancelled") -> int:
+        """Cancel every unresolved future of a session (user abandoned it).
+        Returns the number of futures cancelled."""
+        n = 0
+        for fut in self.futures.snapshot():
+            if fut.meta.session_id == session_id and not fut.available:
+                n += bool(self.cancel_future(fut, reason))
+        return n
 
     # ------------------------------------------------- managed-state support
     def migrate_session_state(self, session_id: str, agent_type: str,
@@ -366,8 +542,13 @@ class NalarRuntime:
         stack.append(prev)
         set_context(fut.meta.session_id, fut.meta.request_id,
                     inst.instance_id)
+        # open the attempt's state epoch: managed-state writes made by this
+        # execution are journaled under (fid, attempt) so a failed attempt
+        # rolls back before any retry (exactly-once across retries)
+        self.state_store.begin_epoch((fut.fid, fut.meta.attempt))
 
     def exit_agent_context(self) -> None:
+        self.state_store.end_epoch_binding()
         stack = getattr(self._agent_ctx, "stack", None)
         if stack:
             sid, rid, caller = stack.pop()

@@ -18,10 +18,15 @@ Design notes mirroring the paper:
 
 from __future__ import annotations
 
+import copy
 import threading
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 from .session import get_context
+
+# sentinel recorded in an epoch's undo log when the state object did not
+# exist before the epoch's first touch (rollback deletes it again)
+_MISSING = object()
 
 
 class SessionStateStore:
@@ -29,6 +34,21 @@ class SessionStateStore:
 
     Keys: (session_id, agent_type, name) -> (node_id, payload).
     The payload is the *logical* value; placement (node_id) is runtime-owned.
+
+    **State epochs (consistent retries).**  Every agent-method attempt runs
+    inside an epoch keyed by ``(fid, attempt)``: the controller opens it via
+    ``begin_epoch`` before invoking user code, and the first touch of each
+    state object inside the epoch records a deep-copy undo snapshot.  On
+    success the epoch is committed (snapshots dropped); on failure it is
+    rolled back *before* the retry re-executes, so ``ManagedList`` /
+    ``ManagedDict`` / ``SessionTranscript`` mutations are exactly-once
+    across retries.  Snapshots store *logical* values — rollback writes
+    through the current placement, so a migration landing between the failed
+    attempt and the retry restores correctly at the new node.
+
+    Epochs cover the failing method's own writes.  A retried *composite*
+    re-issues its nested stub calls as fresh futures with fresh epochs;
+    nested effects should be idempotent or live in the leaf that owns them.
     """
 
     def __init__(self, store_cluster) -> None:
@@ -36,6 +56,96 @@ class SessionStateStore:
         self._lock = threading.RLock()
         # (sid, agent_type, name) -> node_id  (placement index)
         self._placement: Dict[Tuple[str, str, str], str] = {}
+        # epoch token -> {(sid, agent_type, name): pre-epoch value | _MISSING}
+        self._epochs: Dict[Any, Dict[Tuple[str, str, str], Any]] = {}
+        # per-thread stack of active epoch tokens (innermost = writes owner)
+        self._epoch_tl = threading.local()
+        # rolled-back epochs (bounded, insertion-ordered).  A hard-killed or
+        # cancelled *composite* attempt keeps executing on its driver thread
+        # (threads cannot be killed); once its epoch is rolled back, any
+        # further write it makes must be DROPPED — un-journaled writes from
+        # a superseded attempt would break the exactly-once guarantee.
+        self._aborted: Dict[Any, None] = {}
+
+    # ------------------------------------------------------------- epochs
+    def _epoch_stack(self) -> list:
+        st = getattr(self._epoch_tl, "stack", None)
+        if st is None:
+            st = []
+            self._epoch_tl.stack = st
+        return st
+
+    def begin_epoch(self, token: Any) -> None:
+        """Open (or re-bind) the undo log for one execution attempt."""
+        with self._lock:
+            self._epochs.setdefault(token, {})
+        self._epoch_stack().append(token)
+
+    def end_epoch_binding(self) -> None:
+        """Unbind the innermost epoch from this thread (the undo log itself
+        survives until commit/rollback — the completion path owns that)."""
+        st = self._epoch_stack()
+        if st:
+            st.pop()
+
+    _MAX_ABORTED = 4096
+
+    def _active_token(self) -> Any:
+        st = self._epoch_stack()
+        return st[-1] if st else None
+
+    def _active_aborted(self) -> bool:
+        """Is the calling thread executing a rolled-back attempt?
+        (Caller holds ``_lock``.)"""
+        t = self._active_token()
+        return t is not None and t in self._aborted
+
+    def commit_epoch(self, token: Any) -> None:
+        """Attempt succeeded: its writes are final, drop the undo log."""
+        with self._lock:
+            self._epochs.pop(token, None)
+
+    def rollback_epoch(self, token: Any) -> int:
+        """Attempt failed: restore every state object it touched.
+
+        Returns the number of restored objects.  Restores go through the
+        *current* placement, which makes rollback correct even when the
+        session migrated after the snapshot was taken.
+        """
+        with self._lock:
+            snap = self._epochs.pop(token, None)
+            # tombstone the attempt even when it wrote nothing yet: its
+            # (possibly still-running) thread may write later
+            self._aborted[token] = None
+            while len(self._aborted) > self._MAX_ABORTED:
+                self._aborted.pop(next(iter(self._aborted)))
+            if not snap:
+                return 0
+            n = 0
+            for (sid, at, name), prior in snap.items():
+                node = self._placement.get((sid, at, name))
+                key = self._key(sid, at, name)
+                if prior is _MISSING:
+                    if node is not None:
+                        self._placement.pop((sid, at, name), None)
+                        self._cluster.get(node).delete(key)
+                elif node is not None:
+                    self._cluster.get(node).hset(
+                        key, "value", copy.deepcopy(prior))
+                n += 1
+            return n
+
+    def _note(self, sid: str, agent_type: str, name: str, prior: Any) -> None:
+        """Record the pre-epoch value on first touch (caller holds _lock)."""
+        st = self._epoch_stack()
+        if not st:
+            return
+        snap = self._epochs.get(st[-1])
+        if snap is None:
+            return
+        key = (sid, agent_type, name)
+        if key not in snap:
+            snap[key] = prior if prior is _MISSING else copy.deepcopy(prior)
 
     @staticmethod
     def _key(sid: str, agent_type: str, name: str) -> str:
@@ -44,14 +154,28 @@ class SessionStateStore:
     def load(self, sid: str, agent_type: str, name: str, node_id: str,
              default: Any) -> Any:
         with self._lock:
+            aborted = self._active_aborted()
             placed = self._placement.get((sid, agent_type, name))
             if placed is None:
+                if aborted:
+                    # a superseded attempt must not create state objects
+                    return default
+                # first touch ever: inside an epoch, rollback must delete it
+                self._note(sid, agent_type, name, _MISSING)
                 self._placement[(sid, agent_type, name)] = node_id
                 store = self._cluster.get(node_id)
                 store.hset(self._key(sid, agent_type, name), "value", default)
                 return default
             store = self._cluster.get(placed)
             v = store.hget(self._key(sid, agent_type, name), "value")
+            if aborted:
+                # read-only for zombies: no journaling, no placement moves —
+                # and a COPY, because callers (ManagedList.append) mutate
+                # the returned object in place before saving
+                return copy.deepcopy(v) if v is not None else default
+            # epoch undo log: snapshot the pristine value before the caller
+            # mutates the returned object in place (ManagedList.append etc.)
+            self._note(sid, agent_type, name, v if v is not None else default)
             if placed != node_id:
                 # State lives elsewhere: materialize locally (the runtime moved
                 # the request here, so the state follows — §4.3.2).
@@ -60,11 +184,21 @@ class SessionStateStore:
 
     def save(self, sid: str, agent_type: str, name: str, value: Any) -> None:
         with self._lock:
+            if self._active_aborted():
+                return      # drop writes from superseded (rolled-back) attempts
             node_id = self._placement.get((sid, agent_type, name))
             if node_id is None:
                 return
-            self._cluster.get(node_id).hset(
-                self._key(sid, agent_type, name), "value", value)
+            key = self._key(sid, agent_type, name)
+            if self._epoch_stack():
+                # write-without-load (e.g. ManagedList.clear): capture the
+                # pre-overwrite value if this epoch hasn't touched the key
+                # yet.  Epoch-less writers (the engine bridge's pump thread)
+                # skip the read-before-write entirely.
+                cur = self._cluster.get(node_id).hget(key, "value")
+                self._note(sid, agent_type, name,
+                           cur if cur is not None else _MISSING)
+            self._cluster.get(node_id).hset(key, "value", value)
 
     def migrate(self, sid: str, agent_type: str, name: str, dst_node: str) -> int:
         """Move one state object; returns payload size estimate (bytes-ish)."""

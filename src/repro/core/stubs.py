@@ -14,8 +14,13 @@ Two entry points:
   (PyYAML-free; the declarations are flat).
 
 Stub calls strip an optional ``_hint`` kwarg ({"in_tokens", "out_tokens",
-"est_service", "graph_depth", "retry", ...}) used by cost models and
-scheduling policies — never seen by user code.
+"est_service", "graph_depth", "retry", "max_retries", ...}) used by cost
+models and scheduling policies — never seen by user code.  Two hints feed
+the runtime's retry ladder: ``"max_retries"`` is the explicit per-call
+budget (overrides the agent directive; 0 disables retries for this call),
+and a *truthy* ``"retry"`` doubles as the budget for convenience —
+``{"retry": 0}`` stays a pure scheduling signal (LPT re-entrance for
+driver-managed retry loops) and leaves the directive in force.
 """
 
 from __future__ import annotations
@@ -82,8 +87,11 @@ def parse_spec(text: str, impls: Dict[str, Any]) -> AgentSpec:
             in_functions = True
         elif key in ("stateful", "batchable"):
             setattr(d, key, val.lower() in ("true", "1", "yes"))
-        elif key in ("max_instances", "min_instances", "max_batch"):
+        elif key in ("max_instances", "min_instances", "max_batch",
+                     "max_retries"):
             setattr(d, key, int(val))
+        elif key == "retry_backoff":
+            d.retry_backoff = float(val)
         elif key == "resources":
             # "GPU=2,CPU=1"
             d.resources = {k: float(v) for k, v in
@@ -137,7 +145,7 @@ class Stub:
                 work_hint=dict(hint),
             )
             fut = Future(rt, meta, args, kwargs)
-            rt.futures.add(fut)
+            rt.add_future(fut)
             rt.dispatch(fut)
             return fut
 

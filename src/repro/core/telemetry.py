@@ -26,6 +26,10 @@ class FutureRecord:
     ready_at: float
     executor: str
     failed: bool
+    cancelled: bool = False
+    # which attempt resolved the future (0 = first execution; >0 means the
+    # retry ladder re-dispatched it — rendered as ``retry#n`` in traces)
+    attempt: int = 0
 
     @property
     def queue_time(self) -> float:
@@ -82,7 +86,9 @@ class Telemetry:
             session_id=fut.meta.session_id, request_id=fut.meta.request_id,
             created_at=fut.meta.created_at, scheduled_at=fut.meta.scheduled_at,
             started_at=fut.meta.started_at, ready_at=now,
-            executor=fut.meta.executor, failed=fut.state.value == "failed")
+            executor=fut.meta.executor, failed=fut.state.value == "failed",
+            cancelled=fut.state.value == "cancelled",
+            attempt=fut.meta.attempt)
         with self._lock:
             self.futures_done += 1
             r = self.requests.get(fut.meta.request_id)

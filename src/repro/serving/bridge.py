@@ -36,7 +36,7 @@ import numpy as np
 
 from ..core.directives import Directives
 from ..core.executor import EngineBackedMethod
-from ..core.future import Future, resolve_args
+from ..core.future import Future, InstanceDied, resolve_args
 from ..core.state import SessionTranscript
 from ..core.stubs import AgentSpec
 from .batching import Request
@@ -126,6 +126,47 @@ class EngineBridge:
             self._cv.notify_all()
         self._thread.join(timeout=5.0)
 
+    def fail_inflight(self, error: BaseException) -> int:
+        """Fail every in-flight and session-queued future with ``error`` and
+        clear the bridge's session bookkeeping.  Deferred migrations still
+        fire (with an empty queue) so their sessions re-home even though the
+        queued calls died.  Returns the number of futures failed.
+
+        Used when the engine itself dies (pump-loop crash) and when the
+        replica is hard-killed (fault injection): either way the engine's
+        results will never arrive, so the futures must travel the retry
+        ladder now rather than hang."""
+        with self._cv:
+            dead = list(self._inflight.values())
+            dead += [(f, c) for q in self._session_q.values()
+                     for (f, c, _m) in q]
+            self._inflight.clear()
+            self._session_q.clear()
+            self._session_active.clear()
+            self._pending = 0
+            migs = list(self._migrate_pending.values())
+            self._migrate_pending.clear()
+        for fut, ctrl in dead:
+            ctrl.complete_async(fut, error=error)
+        for mig in migs:
+            # still re-home the session: its queued futures died with
+            # the engine, but follow-ups must not land here again
+            try:
+                mig([])
+            except Exception:  # noqa: BLE001 — best-effort re-home
+                pass
+        return len(dead)
+
+    def on_replica_killed(self, instance_id: str) -> int:
+        """Fault-injection hook (``runtime.kill_instance(..., hard=True)``):
+        fail the in-flight work and stop the pump so no zombie completion
+        resolves a retried future.  Returns the number of futures failed.
+        ``EnginePool`` layers session recovery on top of this."""
+        n = self.fail_inflight(InstanceDied(
+            f"engine instance {instance_id} died"))
+        self.stop()
+        return n
+
     # ------------------------------------------------------------ submission
     def submit_future(self, fut: Future, controller,
                       method: "EngineMethod") -> None:
@@ -133,6 +174,8 @@ class EngineBridge:
             raise RuntimeError(
                 "EngineBridge not attached to an agent instance; register "
                 "the agent via repro.serving.bridge.register_engine_agent")
+        if fut.available:
+            return      # cancelled/resolved before launch: nothing to run
         sid = fut.meta.session_id
         if sid:
             with self._cv:
@@ -190,6 +233,8 @@ class EngineBridge:
             if mig is not None:
                 mig(remaining)
                 return
+            if fut.available:
+                continue    # cancelled while parked here: skip, pop the next
             try:
                 self._submit_now(fut, controller, method)
                 return
@@ -230,6 +275,9 @@ class EngineBridge:
         req = Request.make(prompt, session_id=sid,
                            sampling=sampling, priority=fut.meta.priority,
                            now=self.rt.kernel.now(), fallback_prompt=fallback)
+        # run-id fence: if the replica dies and the future is retried on a
+        # sibling, a late completion from this engine must not resolve it
+        run_id = fut._run_id
 
         def on_done(r: Request) -> None:
             with self._cv:
@@ -237,7 +285,11 @@ class EngineBridge:
                 self._inflight.pop(r.request_id, None)
                 self._cv.notify_all()
             try:
-                if sid and not fut.available:
+                # decode FIRST: if make_value raises, the attempt failed and
+                # its tokens must never reach the transcript — a retry would
+                # re-send them as history (exactly-once would break)
+                value = method.make_value(r, self.engine.instance_id)
+                if sid and not fut.available and fut._run_id == run_id:
                     # the conversation advances by this call's new tokens +
                     # the generation; any prefilled history was already in
                     # the transcript (rebuild paths must not duplicate it).
@@ -248,10 +300,10 @@ class EngineBridge:
                     # state migration.
                     self.transcript.extend(sid, new_tokens + list(r.generated),
                                            max_tokens=self.engine.max_seq)
-                value = method.make_value(r, self.engine.instance_id)
-                controller.complete_async(fut, value=value)
+                controller.complete_async(fut, value=value,
+                                          expect_run=run_id)
             except BaseException as e:  # noqa: BLE001 — fault reporting (§5)
-                controller.complete_async(fut, error=e)
+                controller.complete_async(fut, error=e, expect_run=run_id)
             finally:
                 if sid:
                     self._advance_session(sid)
@@ -276,25 +328,7 @@ class EngineBridge:
                 self.engine.step()
                 self.engine.drain_completions()
             except BaseException as e:  # noqa: BLE001 — engine died
-                with self._cv:
-                    dead = list(self._inflight.values())
-                    dead += [(f, c) for q in self._session_q.values()
-                             for (f, c, _m) in q]
-                    self._inflight.clear()
-                    self._session_q.clear()
-                    self._session_active.clear()
-                    self._pending = 0
-                    migs = list(self._migrate_pending.values())
-                    self._migrate_pending.clear()
-                for fut, ctrl in dead:
-                    ctrl.complete_async(fut, error=e)
-                for mig in migs:
-                    # still re-home the session: its queued futures died with
-                    # the engine, but follow-ups must not land here again
-                    try:
-                        mig([])
-                    except Exception:  # noqa: BLE001 — best-effort re-home
-                        pass
+                self.fail_inflight(e)
 
     def telemetry(self) -> Dict[str, Any]:
         t = dict(self.engine.telemetry())

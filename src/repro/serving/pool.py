@@ -92,6 +92,8 @@ class EnginePool:
             "migrations": 0, "migrations_deferred": 0,
             "migrations_fallback": 0, "migrations_noop": 0,
             "futures_rerouted": 0, "replayed_tokens": 0,
+            "replica_failures": 0, "failed_inflight": 0,
+            "sessions_recovered": 0,
         }
 
     # -------------------------------------------------------------- replicas
@@ -120,6 +122,38 @@ class EnginePool:
             if inst is not None and inst.alive:
                 out.append(iid)
         return out
+
+    # ------------------------------------------------------- replica failure
+    def on_replica_killed(self, instance_id: str) -> None:
+        """Fault-injection hook: ``runtime.kill_instance(iid, hard=True)``.
+
+        The replica's engine results will never arrive, so (1) every
+        in-flight and bridge-queued future fails with ``InstanceDied`` and
+        travels the retry ladder — with retries enabled, the global
+        controller's RetryPolicy reroutes each one to a surviving replica;
+        (2) every session whose KV cache lived on the dead replica is
+        proactively recovered on a survivor by ``SessionTranscript`` replay
+        (the PR-2 migration machinery with a fallback destination), so
+        retried and follow-up calls resume warm instead of cold.  The pump
+        is stopped so no zombie completion can race a retried attempt.
+        """
+        bridge = self.bridge_of(instance_id)
+        if bridge is None:
+            return
+        n_failed = bridge.on_replica_killed(instance_id)
+        recovered = 0
+        for sid in self.rt.kv_registry.instance_sessions(instance_id):
+            try:
+                # empty destination -> _resolve_dst falls back to the
+                # least-loaded surviving replica; replays the transcript
+                if self.migrate_session(sid, instance_id, "") > 0:
+                    recovered += 1
+            except Exception:  # noqa: BLE001 — best-effort per session
+                pass
+        with self._lock:
+            self.stats["replica_failures"] += 1
+            self.stats["failed_inflight"] += n_failed
+            self.stats["sessions_recovered"] += recovered
 
     # ------------------------------------------------------------- migration
     def _resolve_dst(self, dst_iid: str, avoid: str) -> Optional[str]:

@@ -212,6 +212,102 @@ def test_pool_rejected_on_sim_kernel(model_setup):
     rt.shutdown()
 
 
+def test_hard_kill_recovers_sessions_and_retries_inflight(model_setup):
+    """Fault injection on a real pool: ``kill_instance(..., hard=True)``
+    fails the dead replica's in-flight work into the retry ladder and
+    recovers its sessions on a survivor by transcript replay, so the retried
+    call completes there and follow-ups resume warm."""
+    import time
+
+    cfg, model, params = model_setup
+    rt, pool = make_pool_runtime(model, params, replicas=2)
+    rt.apply_directives("llm", {"max_retries": 1})
+
+    r1 = run_turn(rt, None, "hello from a doomed replica")
+    sid = session_of(rt)
+    victim = rt.kv_registry.lookup(sid).instance_id
+    survivor = next(i for i in pool.instance_ids if i != victim)
+    victim_bridge = pool.bridge_of(victim)
+    survivor_engine = pool.bridge_of(survivor).engine
+
+    # hold the session "in flight" on the victim so the follow-up call
+    # parks in its bridge queue (deterministic in-flight loss)
+    with victim_bridge._cv:
+        victim_bridge._session_active.add(sid)
+    done = {}
+    rt.start()
+    rt.submit_request(
+        lambda: rt.stub("llm").generate("the follow up").value(timeout=60),
+        session=sid, on_done=lambda o, e: done.update(out=o, err=e))
+    deadline = time.time() + 30
+    while time.time() < deadline:
+        with victim_bridge._cv:
+            if victim_bridge._session_q.get(sid):
+                break
+        time.sleep(0.02)
+    assert victim_bridge._session_q.get(sid)
+
+    pt0 = survivor_engine.metrics.prefill_tokens
+    rt.kill_instance(victim, hard=True)
+    rt.run()
+
+    assert done["err"] is None                       # retried to completion
+    assert done["out"].engine_id == survivor
+    assert rt.kv_registry.lookup(sid).instance_id == survivor
+    assert survivor_engine.metrics.prefill_tokens > pt0   # transcript replay
+    assert pool.stats["replica_failures"] == 1
+    assert pool.stats["failed_inflight"] >= 1
+    assert pool.stats["sessions_recovered"] >= 1
+    assert victim in rt.blacklist
+    assert not rt.instance(victim).alive
+
+    r3 = run_turn(rt, sid, "and one more turn")      # routing re-homed
+    assert r3.engine_id == survivor
+    rt.shutdown()
+
+
+def test_cancelled_session_queued_call_never_hits_engine(model_setup):
+    """A future cancelled while parked in the bridge's session queue must be
+    skipped at dequeue, not submitted for a full generation whose result
+    would then be discarded."""
+    import time
+
+    from repro.core import FutureCancelled
+
+    cfg, model, params = model_setup
+    rt, pool = make_pool_runtime(model, params, replicas=2)
+
+    run_turn(rt, None, "open the session")
+    sid = session_of(rt)
+    home = rt.kv_registry.lookup(sid).instance_id
+    bridge = pool.bridge_of(home)
+
+    with bridge._cv:
+        bridge._session_active.add(sid)      # pretend a call is in flight
+    done = {}
+    rt.start()
+    rt.submit_request(
+        lambda: rt.stub("llm").generate("never runs").value(timeout=60),
+        session=sid, on_done=lambda o, e: done.update(out=o, err=e))
+    deadline = time.time() + 30
+    while time.time() < deadline:
+        with bridge._cv:
+            if bridge._session_q.get(sid):
+                break
+        time.sleep(0.02)
+    fut = bridge._session_q[sid][0][0]
+    assert rt.cancel_future(fut, "user abandoned")
+
+    pt0 = bridge.engine.metrics.prefill_tokens
+    bridge._advance_session(sid)             # the in-flight call "resolves"
+    rt.run()
+    assert isinstance(done["err"], FutureCancelled)
+    assert bridge.engine.metrics.prefill_tokens == pt0   # never submitted
+    with bridge._cv:
+        assert sid not in bridge._session_active
+    rt.shutdown()
+
+
 def test_engine_warm_session_populates_cache(model_setup):
     """The replay primitive in isolation: warm_session prefills tokens into
     the session pool so a later request resumes instead of prefilling."""

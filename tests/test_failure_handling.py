@@ -1,0 +1,629 @@
+"""Fault-tolerance subsystem: retry ladder, state epochs, cancellation,
+replica-failure recovery (ISSUE 3 acceptance tests).
+
+Covers, on the deterministic SimKernel:
+ * exactly-once managed state across retries (ManagedList/ManagedDict/
+   SessionTranscript), including a migration landing between attempts;
+ * local in-place retries with backoff and the attempt counter;
+ * escalation to the global controller's RetryPolicy on budget exhaustion
+   and on instance death (hard kill), with dead-replica blacklisting;
+ * cancellation of queued / parked / running / engine-in-flight futures
+   (the ``complete_async`` CANCELLED-guard regression);
+ * bounded FutureTable (GC of resolved futures + node-store mirrors);
+ * retry telemetry (metrics counters, ``retry#n`` trace marks).
+"""
+
+import pytest
+
+from repro.core import (AgentSpec, Directives, FixedLatency, FutureCancelled,
+                        FutureState, InstanceDied, ManagedDict, ManagedList,
+                        NalarRuntime, deployment, emulated, get_context)
+from repro.core.debug import format_trace
+from repro.core.runtime import current_runtime
+from repro.core.state import SessionTranscript
+
+
+def two_node_rt(**kw):
+    return NalarRuntime(simulate=True,
+                        nodes={"n0": {"CPU": 16}, "n1": {"CPU": 16}}, **kw)
+
+
+# ---------------------------------------------------------------- exactly-once
+def _stateful_agent(rt, fail_attempts, latency=0.05, max_retries=2,
+                    instances=1):
+    """Agent whose method writes a ManagedList, a ManagedDict, and the
+    SessionTranscript, then fails on its first ``fail_attempts`` executions."""
+    lst = ManagedList("items")
+    dct = ManagedDict("kv")
+    calls = {"n": 0}
+
+    def work(x):
+        lst.append(x)
+        dct[f"k{x}"] = dct.get(f"k{x}", 0) + 1
+        rt_ = current_runtime()
+        sid, _rid, caller = get_context()
+        tr = SessionTranscript(rt_.state_store, caller.split(":")[0],
+                               rt_.node_of_instance(caller))
+        tr.extend(sid, [x, x + 1])
+        calls["n"] += 1
+        if calls["n"] <= fail_attempts:
+            raise RuntimeError(f"flaky attempt {calls['n']}")
+        return lst.snapshot(), dct.snapshot(), tr.tokens(sid)
+
+    rt.register_agent(AgentSpec(
+        name="stateful",
+        methods={"run": emulated(FixedLatency(latency), work)},
+        directives=Directives(max_retries=max_retries, max_instances=4,
+                              resources={"CPU": 1})), instances=instances)
+    return calls
+
+
+def test_retry_exactly_once_over_managed_state():
+    """A method that fails mid-way and is retried leaves managed state
+    identical to a single clean execution."""
+    rt = two_node_rt()
+    calls = _stateful_agent(rt, fail_attempts=1)
+
+    def driver():
+        f = rt.stub("stateful").run(7)
+        return f.value(), f.meta.attempt
+
+    (lst, dct, toks), attempt = deployment.main(driver, runtime=rt)
+    assert calls["n"] == 2              # two executions...
+    assert attempt == 1
+    assert lst == [7]                   # ...but state as if one
+    assert dct == {"k7": 1}
+    assert toks == [7, 8]
+
+
+def test_retry_exactly_once_with_migration_between_attempts():
+    """The epoch rollback is logical: a session migration landing between
+    the failed attempt and the retry must not resurrect the failed writes."""
+    rt = two_node_rt()
+    calls = _stateful_agent(rt, fail_attempts=1, latency=0.05, instances=1)
+    sid = rt.sessions.new_session().session_id
+    out = {}
+
+    def driver():
+        f = rt.stub("stateful").run(3)
+        out["res"] = f.value()
+
+    # attempt 0 fails at t=0.05 (rollback), retry re-executes at ~0.10;
+    # migrate the session's state to the other node in between
+    rt.kernel.schedule(0.075, lambda: rt.state_store.migrate_session(
+        sid, "stateful", "n1"))
+    rt.start()
+    rt.submit_request(driver, session=sid)
+    rt.run()
+    lst, dct, toks = out["res"]
+    assert calls["n"] == 2
+    assert lst == [3] and dct == {"k3": 1} and toks == [3, 4]
+
+
+def test_clean_failure_rolls_back_partial_writes():
+    """Terminal failure (budget exhausted everywhere) leaves no partial
+    state behind either."""
+    rt = two_node_rt()
+    lst = ManagedList("log")
+
+    def work(x):
+        lst.append(x)
+        raise ValueError("always broken")
+
+    rt.register_agent(AgentSpec(
+        name="bad",
+        methods={"run": emulated(FixedLatency(0.02), work)},
+        directives=Directives(resources={"CPU": 1})), instances=1)
+    sid = rt.sessions.new_session().session_id
+
+    def driver():
+        with pytest.raises(ValueError, match="always broken"):
+            rt.stub("bad").run(1).value()
+        return True
+
+    rt.start()
+    rt.submit_request(driver, session=sid)
+    rt.run()
+    assert rt.state_store.load(sid, "bad", "log", "n0", default=[]) == []
+
+
+# ------------------------------------------------------------- retry ladder
+def test_local_retry_with_backoff_and_metrics():
+    rt = two_node_rt()
+    calls = _stateful_agent(rt, fail_attempts=2, max_retries=3)
+
+    def driver():
+        f = rt.stub("stateful").run(1)
+        v = f.value()
+        return v, f.meta.attempt, f.meta.escalations
+
+    (lst, _, _), attempt, esc = deployment.main(driver, runtime=rt)
+    assert lst == [1]
+    assert calls["n"] == 3 and attempt == 2 and esc == 0
+    inst = rt.instance(rt.instances_of_type("stateful")[0])
+    assert inst.metrics.retries == 2
+    assert inst.metrics.failed == 0     # absorbed, never terminal
+
+
+def test_per_call_retry_hint_overrides_directive():
+    """``_hint={"retry": n}`` is the per-call budget (directive says 0)."""
+    rt = two_node_rt()
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("once")
+        return "ok"
+
+    rt.register_agent(AgentSpec(
+        name="svc",
+        methods={"run": emulated(FixedLatency(0.02), flaky)},
+        directives=Directives(max_retries=0, resources={"CPU": 1})),
+        instances=1)
+
+    def driver():
+        with pytest.raises(RuntimeError):
+            rt.stub("svc").run().value()        # no budget: fails fast
+        return rt.stub("svc").run(_hint={"retry": 2}).value()
+
+    assert deployment.main(driver, runtime=rt) == "ok"
+
+
+def test_retry_zero_scheduling_hint_keeps_directive_budget():
+    """``{"retry": 0}`` is the LPT re-entrance signal for first attempts of
+    driver-managed loops — it must not disable the agent's max_retries.
+    ``{"max_retries": 0}`` is the explicit way to opt a call out."""
+    rt = two_node_rt()
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] in (1, 3):
+            raise RuntimeError("transient")
+        return "ok"
+
+    rt.register_agent(AgentSpec(
+        name="svc",
+        methods={"run": emulated(FixedLatency(0.02), flaky)},
+        directives=Directives(max_retries=2, resources={"CPU": 1})),
+        instances=1)
+
+    def driver():
+        # scheduling hint only: the directive's budget still applies
+        v = rt.stub("svc").run(_hint={"retry": 0}).value()
+        # explicit opt-out: fails fast despite the directive
+        with pytest.raises(RuntimeError, match="transient"):
+            rt.stub("svc").run(_hint={"max_retries": 0}).value()
+        return v
+
+    assert deployment.main(driver, runtime=rt) == "ok"
+
+
+def test_budget_exhaustion_escalates_to_surviving_replica():
+    """Local retries keep landing on the same (poisoned) instance; the
+    escalation reroutes to a sibling via RetryPolicy."""
+    rt = two_node_rt(control_interval=10.0)
+    rt.register_agent(AgentSpec(
+        name="svc",
+        methods={"run": emulated(
+            FixedLatency(0.05),
+            lambda: ("ok" if not get_context()[2].startswith(bad[0])
+                     else (_ for _ in ()).throw(RuntimeError("bad replica"))))},
+        directives=Directives(max_retries=1, max_instances=2,
+                              resources={"CPU": 1})), instances=2)
+    insts = rt.instances_of_type("svc")
+    bad = [insts[0]]
+
+    def driver():
+        rt_ = current_runtime()
+        rt_.router.pin(get_context()[0], "svc", bad[0])
+        f = rt_.stub("svc").run()
+        v = f.value()
+        return v, f.meta.escalations, f.meta.executor
+
+    v, esc, executor = deployment.main(driver, runtime=rt)
+    assert v == "ok"
+    assert esc == 1
+    assert executor == insts[1]         # rerouted off the failing replica
+
+
+def test_no_surviving_replica_fails_with_original_error():
+    rt = two_node_rt(control_interval=10.0)
+    rt.register_agent(AgentSpec(
+        name="solo",
+        methods={"run": emulated(FixedLatency(0.02),
+                                 lambda: (_ for _ in ()).throw(
+                                     ValueError("root cause")))},
+        directives=Directives(max_retries=1, max_instances=1,
+                              resources={"CPU": 1})), instances=1)
+
+    def driver():
+        with pytest.raises(ValueError, match="root cause"):
+            rt.stub("solo").run().value()
+        return True
+
+    assert deployment.main(driver, runtime=rt)
+
+
+def test_instance_death_reroutes_and_blacklists():
+    """Hard kill (fault injection): the in-flight future escalates, the
+    RetryPolicy blacklists the dead instance and the retry completes on the
+    survivor."""
+    rt = two_node_rt(control_interval=10.0)
+    rt.register_agent(AgentSpec(
+        name="w",
+        methods={"run": emulated(FixedLatency(0.5), lambda x: x * 2)},
+        directives=Directives(max_retries=1, max_instances=2,
+                              resources={"CPU": 1})), instances=2)
+
+    def driver():
+        r = current_runtime()
+        f = r.stub("w").run(21)
+        r.kernel.sleep(0.1)             # future is RUNNING now
+        victim = f.meta.executor
+        r.kill_instance(victim, hard=True)
+        return f.value(), victim, f.meta.executor, f.meta.attempt
+
+    v, victim, executor, attempt = deployment.main(driver, runtime=rt)
+    assert v == 42
+    assert executor != victim and attempt == 1
+    assert victim in rt.blacklist
+    assert not rt.instance(victim).alive
+
+
+def test_instance_death_without_retries_fails_inflight():
+    rt = two_node_rt()
+    rt.register_agent(AgentSpec(
+        name="w",
+        methods={"run": emulated(FixedLatency(0.5), lambda x: x)},
+        directives=Directives(max_instances=2, resources={"CPU": 1})),
+        instances=2)
+
+    def driver():
+        r = current_runtime()
+        f = r.stub("w").run(1)
+        r.kernel.sleep(0.1)
+        r.kill_instance(f.meta.executor, hard=True)
+        with pytest.raises(InstanceDied):
+            f.value()
+        return True
+
+    assert deployment.main(driver, runtime=rt)
+
+
+def test_hard_kill_requeues_queued_futures():
+    """Queued (not yet started) futures survive a hard kill without
+    consuming any retry budget."""
+    rt = two_node_rt()
+    rt.register_agent(AgentSpec(
+        name="w",
+        methods={"run": emulated(FixedLatency(0.3), lambda x: x)},
+        directives=Directives(max_instances=2, resources={"CPU": 1})),
+        instances=2)
+    insts = rt.instances_of_type("w")
+
+    def driver():
+        r = current_runtime()
+        sid = get_context()[0]
+        r.router.pin(sid, "w", insts[0])
+        futs = [r.stub("w").run(i) for i in range(4)]   # 1 running, 3 queued
+        r.kernel.sleep(0.05)
+        r.router.unpin(sid, "w")
+        r.kill_instance(insts[0], hard=True)
+        # the queued three re-route and complete; only the running one died
+        vals = []
+        for f in futs[1:]:
+            vals.append(f.value())
+        return vals, [f.meta.attempt for f in futs[1:]]
+
+    vals, attempts = deployment.main(driver, runtime=rt)
+    assert vals == [1, 2, 3]
+    assert attempts == [0, 0, 0]
+
+
+# -------------------------------------------------------------- cancellation
+def echo_rt(latency=1.0, instances=1):
+    rt = two_node_rt()
+    rt.register_agent(AgentSpec(
+        name="e",
+        methods={"run": emulated(FixedLatency(latency), lambda x: x)},
+        directives=Directives(max_instances=4, resources={"CPU": 1})),
+        instances=instances)
+    return rt
+
+
+def test_cancel_queued_future():
+    rt = echo_rt()
+
+    def driver():
+        r = current_runtime()
+        f1 = r.stub("e").run(1)
+        f2 = r.stub("e").run(2)         # queued behind f1
+        r.kernel.sleep(0.1)
+        assert r.cancel_future(f2, "user abandoned")
+        v1 = f1.value()
+        with pytest.raises(FutureCancelled, match="user abandoned"):
+            f2.value()
+        return v1, f2.state
+
+    v1, state = deployment.main(driver, runtime=rt)
+    assert v1 == 1 and state == FutureState.CANCELLED
+    inst = rt.instance(rt.instances_of_type("e")[0])
+    assert inst.metrics.cancelled == 1
+    assert inst.metrics.completed == 1  # f2 never executed
+
+
+def test_cancel_running_future_discards_completion():
+    rt = echo_rt()
+
+    def driver():
+        r = current_runtime()
+        f = r.stub("e").run(5)
+        r.kernel.sleep(0.1)
+        assert f.state == FutureState.RUNNING
+        r.cancel_future(f)
+        r.kernel.sleep(2.0)             # past the service-completion event
+        assert f.state == FutureState.CANCELLED
+        with pytest.raises(FutureCancelled):
+            f.value()
+        return True
+
+    assert deployment.main(driver, runtime=rt)
+
+
+def test_cancel_propagates_to_dependents():
+    rt = echo_rt()
+
+    def driver():
+        r = current_runtime()
+        f1 = r.stub("e").run(1)
+        f2 = r.stub("e").run(f1)        # parked on f1
+        r.kernel.sleep(0.1)
+        r.cancel_future(f1)
+        with pytest.raises(FutureCancelled):
+            f2.value()                  # unblocked, observes the cancellation
+        return True
+
+    assert deployment.main(driver, runtime=rt)
+
+
+def test_cancel_session_sweeps_unresolved_futures():
+    rt = echo_rt()
+    sid = rt.sessions.new_session().session_id
+    out = {}
+
+    def driver():
+        r = current_runtime()
+        futs = [r.stub("e").run(i) for i in range(3)]
+        r.kernel.sleep(0.1)
+        out["n"] = r.cancel_session(get_context()[0])
+        for f in futs:
+            with pytest.raises(FutureCancelled):
+                f.value()
+        return True
+
+    rt.start()
+    rt.submit_request(driver, session=sid)
+    rt.run()
+    assert out["n"] == 3
+
+
+def test_complete_async_ignores_cancelled_future():
+    """Regression (satellite): a future cancelled while in flight on an
+    engine must NOT be materialized by the late async completion."""
+    rt = echo_rt()
+
+    def driver():
+        r = current_runtime()
+        f = r.stub("e").run(9)
+        r.kernel.sleep(0.1)
+        assert f.state == FutureState.RUNNING
+        ctrl = r.controller_of(f.meta.executor)
+        r.cancel_future(f)
+        # the engine's pump thread reports a result after the cancellation
+        ctrl.complete_async(f, value="zombie result")
+        r.kernel.sleep(0.5)
+        assert f.state == FutureState.CANCELLED
+        with pytest.raises(FutureCancelled):
+            f.value()
+        return True
+
+    assert deployment.main(driver, runtime=rt)
+
+
+def test_cancelled_future_counts_as_resolved_dependency():
+    """``available`` includes CANCELLED so dependency scans don't hang."""
+    rt = echo_rt()
+    from repro.core.future import Future, FutureMetadata
+    f = Future(rt, FutureMetadata())
+    assert not f.available
+    assert f.cancel(0.0)
+    assert f.available
+    assert not f.cancel(1.0)            # idempotent
+    assert not f.reset_for_retry(1.0)   # cancellation is terminal
+
+
+def test_no_live_instance_failure_unparks_dependents():
+    """When the last replica dies and a drained future cannot be
+    re-dispatched, its parked dependents must observe the failure instead
+    of staying parked forever."""
+    rt = two_node_rt(control_interval=10.0)
+    rt.register_agent(AgentSpec(
+        name="a",
+        methods={"run": emulated(FixedLatency(0.5), lambda x: x)},
+        directives=Directives(max_instances=1, resources={"CPU": 1})),
+        instances=1)
+    rt.register_agent(AgentSpec(
+        name="b",
+        methods={"run": emulated(FixedLatency(0.05), lambda x: x)},
+        directives=Directives(max_instances=1, resources={"CPU": 1})),
+        instances=1)
+
+    def driver():
+        r = current_runtime()
+        f1 = r.stub("a").run(1)         # running on the lone 'a' replica
+        f1b = r.stub("a").run(2)        # queued behind it
+        f2 = r.stub("b").run(f1b)       # parked on f1b at 'b''s controller
+        r.kernel.sleep(0.1)
+        r.kill_instance(f1.meta.executor, hard=True)
+        # drain re-dispatches f1b, but no live 'a' remains -> it fails,
+        # and the failure must flow through to f2
+        with pytest.raises(RuntimeError, match="no live instance"):
+            f2.value()
+        return True
+
+    assert deployment.main(driver, runtime=rt)
+
+
+def test_zombie_composite_writes_dropped_after_hard_kill():
+    """A hard-killed *composite* keeps executing on its driver thread
+    (threads cannot be killed).  Its post-rollback writes must be dropped —
+    otherwise the retry double-applies and exactly-once breaks."""
+    rt = two_node_rt(control_interval=10.0)
+    log = ManagedList("log")
+
+    def slow_workflow(x):
+        log.append(f"{x}:first")
+        current_runtime().kernel.sleep(1.0)
+        log.append(f"{x}:second")       # the zombie reaches this too
+        return log.snapshot()
+
+    rt.register_agent(AgentSpec(
+        name="comp",
+        methods={"run": slow_workflow},
+        directives=Directives(max_retries=1, max_instances=2,
+                              uses_managed_state=True,
+                              resources={"CPU": 1})), instances=2)
+    sid = rt.sessions.new_session().session_id
+    out = {}
+
+    def driver():
+        r = current_runtime()
+        f = r.stub("comp").run("a")
+        r.kernel.sleep(0.2)             # composite is mid-sleep now
+        r.kill_instance(f.meta.executor, hard=True)
+        out["val"] = f.value()          # the retry's clean result
+        r.kernel.sleep(2.0)             # let the zombie thread finish too
+
+    rt.start()
+    rt.submit_request(driver, session=sid)
+    rt.run()
+    # exactly one clean execution's worth of writes — the killed attempt's
+    # first append was rolled back, its zombie second append was dropped
+    assert out["val"] == ["a:first", "a:second"]
+    assert rt.state_store.load(sid, "comp", "log", "n0",
+                               default=[]) == ["a:first", "a:second"]
+
+
+def test_stale_completion_during_retry_window_is_discarded():
+    """``reset_for_retry`` closes the run-id fence immediately: a zombie
+    completion captured under the superseded attempt must not materialize
+    the future while it sits PENDING awaiting re-dispatch."""
+    rt = echo_rt()
+
+    def driver():
+        r = current_runtime()
+        f = r.stub("e").run(9)
+        r.kernel.sleep(0.1)
+        assert f.state == FutureState.RUNNING
+        ctrl = r.controller_of(f.meta.executor)
+        old_run = f._run_id
+        # what every real reset path does before superseding an attempt
+        ctrl.detach_running(f)
+        assert f.reset_for_retry(r.kernel.now())    # superseded attempt
+        assert f._run_id == old_run + 1
+        ctrl.complete_async(f, value="zombie", expect_run=old_run)
+        r.kernel.sleep(0.2)
+        assert f.state == FutureState.PENDING       # fence held
+        ctrl.submit(f)                              # genuine re-dispatch
+        return f.value()
+
+    assert deployment.main(driver, runtime=rt) == 9
+
+
+# -------------------------------------------------------------- future table
+def test_future_table_stays_bounded():
+    """Satellite: resolved futures (and their node-store mirrors) are
+    retired once the table outgrows its threshold."""
+    rt = two_node_rt(future_gc_threshold=32)
+    rt.register_agent(AgentSpec(
+        name="e",
+        methods={"run": emulated(FixedLatency(0.001), lambda x: x)},
+        directives=Directives(resources={"CPU": 1})), instances=1)
+
+    def driver():
+        for i in range(300):
+            rt.stub("e").run(i).value()
+        return True
+
+    assert deployment.main(driver, runtime=rt)
+    assert len(rt.futures) <= 64
+    assert rt.futures.retired >= 200
+    mirrors = sum(len(s.keys("future:")) for s in rt.stores.all_stores())
+    assert mirrors <= 64
+
+
+def test_future_table_sweep_backs_off_when_nothing_collectable():
+    """A burst of still-pending futures must not make every add O(n): after
+    a fruitless sweep the trigger backs off geometrically, and collapses
+    back to the threshold once futures resolve."""
+    from repro.core.future import Future, FutureMetadata, FutureTable
+    rt = two_node_rt()
+    table = FutureTable(gc_threshold=4)
+    futs = [Future(rt, FutureMetadata()) for _ in range(10)]
+    for f in futs:
+        table.add(f)
+    assert table.needs_sweep()
+    assert table.sweep() == []          # nothing resolved yet
+    assert not table.needs_sweep()      # backed off past 10 live entries
+    for f in futs:
+        f.materialize(1, 0.0)
+    assert table.sweep() and len(table) == 0
+    assert not table.needs_sweep()      # floor collapsed to the threshold
+
+
+def test_future_table_gc_disabled_keeps_everything():
+    rt = two_node_rt(future_gc_threshold=0)
+    rt.register_agent(AgentSpec(
+        name="e",
+        methods={"run": emulated(FixedLatency(0.001), lambda x: x)},
+        directives=Directives(resources={"CPU": 1})), instances=1)
+
+    def driver():
+        for i in range(50):
+            rt.stub("e").run(i).value()
+        return True
+
+    assert deployment.main(driver, runtime=rt)
+    assert len(rt.futures) == 50
+
+
+# ----------------------------------------------------------------- telemetry
+def test_trace_marks_retried_stage():
+    rt = two_node_rt()
+    _stateful_agent(rt, fail_attempts=1)
+    rid = {}
+
+    def driver():
+        rid["r"] = get_context()[1]
+        return rt.stub("stateful").run(1).value()
+
+    deployment.main(driver, runtime=rt)
+    rec = rt.telemetry.trace(rid["r"])
+    txt = format_trace(rec)
+    assert "retry#1" in txt
+
+
+def test_retry_counters_surface_in_cluster_view():
+    rt = two_node_rt()
+    _stateful_agent(rt, fail_attempts=1)
+
+    def driver():
+        return rt.stub("stateful").run(1).value()
+
+    deployment.main(driver, runtime=rt)
+    view = rt.global_controller.collect_view()
+    iid = rt.instances_of_type("stateful")[0]
+    assert view.instances[iid].retries == 1
+    assert view.instances[iid].cancelled == 0

@@ -1,0 +1,92 @@
+"""SimKernel unit tests: the ``wait_event`` timeout machinery the retry
+backoff and future timeouts lean on (satellite of ISSUE 3).
+
+Two previously-untested behaviours of the deterministic clock:
+ * a timeout fires at exactly ``now + timeout`` in virtual time and returns
+   False without the event being set;
+ * a normal wakeup (``notify``) cancels the pending timeout handle, so the
+   timeout event neither fires later nor keeps the simulation alive.
+"""
+
+import threading
+
+import pytest
+
+from repro.core import SimKernel
+
+
+def test_wait_event_timeout_fires_at_deadline():
+    k = SimKernel()
+    out = {}
+
+    def driver():
+        evt = threading.Event()
+        t0 = k.now()
+        ok = k.wait_event(evt, timeout=2.0)
+        out["ok"] = ok
+        out["elapsed"] = k.now() - t0
+        out["set"] = evt.is_set()
+
+    k.spawn_driver(driver)
+    end = k.run()
+    assert out["ok"] is False
+    assert out["elapsed"] == pytest.approx(2.0)
+    assert out["set"] is False
+    assert end == pytest.approx(2.0)
+
+
+def test_wait_event_normal_wakeup_cancels_timeout_handle():
+    k = SimKernel()
+    out = {}
+    evt = threading.Event()
+    k.schedule(0.5, lambda: k.notify(evt))
+
+    def driver():
+        ok = k.wait_event(evt, timeout=50.0)
+        out["ok"] = ok
+        out["woke_at"] = k.now()
+
+    k.spawn_driver(driver)
+    end = k.run()
+    assert out["ok"] is True
+    assert out["woke_at"] == pytest.approx(0.5)
+    # the cancelled timeout must not keep virtual time alive to t=50
+    assert end == pytest.approx(0.5)
+    assert k._np_count == 0             # its liveness contribution released
+
+
+def test_wait_event_already_set_returns_immediately():
+    k = SimKernel()
+    out = {}
+    evt = threading.Event()
+    evt.set()
+
+    def driver():
+        out["ok"] = k.wait_event(evt, timeout=10.0)
+        out["t"] = k.now()
+
+    k.spawn_driver(driver)
+    end = k.run()
+    assert out["ok"] is True
+    assert out["t"] == 0.0 and end == 0.0
+
+
+def test_wait_event_multiple_waiters_single_notify():
+    """All drivers blocked on one event wake (serialized, deterministic)."""
+    k = SimKernel()
+    woke = []
+    evt = threading.Event()
+    k.schedule(1.0, lambda: k.notify(evt))
+
+    def make_driver(i):
+        def driver():
+            k.wait_event(evt, timeout=30.0)
+            woke.append((i, k.now()))
+        return driver
+
+    for i in range(3):
+        k.spawn_driver(make_driver(i))
+    end = k.run()
+    assert sorted(i for i, _ in woke) == [0, 1, 2]
+    assert all(t == pytest.approx(1.0) for _, t in woke)
+    assert end == pytest.approx(1.0)
