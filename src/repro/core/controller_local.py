@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import random
 import threading
+from contextlib import contextmanager
 from typing import Any, Dict, List, Optional
 
 from .executor import AgentInstance, EmulatedMethod, EngineBackedMethod
@@ -50,9 +51,27 @@ class ComponentController:
         self._lock = threading.RLock()
         # futures parked here waiting on dependencies: fid -> set of dep fids
         self._parked: Dict[str, set] = {}
+        # metrics-mirror write coalescing: inside a ``_metrics_batch`` block
+        # (one per externally-triggered pump iteration) publishes only mark
+        # the mirror dirty; one ``hset_many`` lands at batch exit.  Depth is
+        # per-thread (nesting == call-stack), the dirty flag is shared —
+        # a racing flush publishes the freshest state either way.
+        self._pub_tls = threading.local()
+        self._pub_dirty = False
         self._publish_metrics()
         # consume policy/commands written to the node store asynchronously
         self.store.subscribe(f"cmd:{instance.instance_id}", self._on_command)
+
+    @contextmanager
+    def _metrics_batch(self):
+        depth = getattr(self._pub_tls, "depth", 0)
+        self._pub_tls.depth = depth + 1
+        try:
+            yield
+        finally:
+            self._pub_tls.depth = depth
+            if depth == 0 and self._pub_dirty:
+                self._flush_metrics()
 
     # ------------------------------------------------------------ submission
     def submit(self, fut: Future) -> None:
@@ -61,18 +80,21 @@ class ComponentController:
             # instance died between routing and arrival: re-route
             self.runtime.dispatch(fut)
             return
-        fut.meta.executor = self.inst.instance_id
+        # executor reassignment goes through the table so its by-executor
+        # index stays exact
+        self.runtime.futures.set_executor(fut, self.inst.instance_id)
         fut.meta.scheduled_at = self.kernel.now()
         fut._set_state(FutureState.SCHEDULED)
         pending = set(fut.unresolved_deps(self.runtime.futures))
-        with self._lock:
-            if pending:
-                self._parked[fut.fid] = pending
-                for dep in pending:
-                    self.runtime.register_dep_consumer(dep, self)
-            else:
-                self._enqueue(fut)
-        self._maybe_dispatch()
+        with self._metrics_batch():
+            with self._lock:
+                if pending:
+                    self._parked[fut.fid] = pending
+                    for dep in pending:
+                        self.runtime.register_dep_consumer(dep, self)
+                else:
+                    self._enqueue(fut)
+            self._maybe_dispatch()
 
     def on_dep_ready(self, dep_fid: str) -> None:
         """Push-based readiness: a producer transferred a dependency value."""
@@ -85,11 +107,12 @@ class ComponentController:
                     fut = self.runtime.futures.get(fid)
                     if fut is not None:
                         ready.append(fut)
-        for fut in ready:
-            with self._lock:
-                self._enqueue(fut)
-        if ready:
-            self._maybe_dispatch()
+        with self._metrics_batch():
+            for fut in ready:
+                with self._lock:
+                    self._enqueue(fut)
+            if ready:
+                self._maybe_dispatch()
 
     def _enqueue(self, fut: Future) -> None:
         self.inst.enqueue(fut)
@@ -249,6 +272,14 @@ class ComponentController:
     def _complete(self, fut: Future, value: Any = None,
                   error: Optional[BaseException] = None,
                   expect_run: Optional[int] = None) -> None:
+        # one coalesced metrics write per completion, not one per intermediate
+        # publish point (dequeue, failure bookkeeping, re-dispatch)
+        with self._metrics_batch():
+            self._complete_inner(fut, value, error, expect_run)
+
+    def _complete_inner(self, fut: Future, value: Any = None,
+                        error: Optional[BaseException] = None,
+                        expect_run: Optional[int] = None) -> None:
         now = self.kernel.now()
         with self._lock:
             if fut in self.inst.running:
@@ -386,10 +417,11 @@ class ComponentController:
         # a running attempt may have written managed state already
         self.runtime.state_store.rollback_epoch((fut.fid, fut.meta.attempt))
         self.inst.metrics.cancelled += 1
-        self._push_consumers(fut)
-        self.runtime.telemetry.on_future_done(fut, self.inst, now)
-        self._publish_metrics()
-        self._maybe_dispatch()
+        with self._metrics_batch():
+            self._push_consumers(fut)
+            self.runtime.telemetry.on_future_done(fut, self.inst, now)
+            self._publish_metrics()
+            self._maybe_dispatch()
         return True
 
     # ------------------------------------------------------------- migration
@@ -453,8 +485,9 @@ class ComponentController:
         if parked and pending:
             for dep in pending:
                 self.runtime.register_dep_consumer(dep, dst_ctrl)
-        # Step 4: notify creator that the executor changed (metadata update).
-        fut.meta.executor = dst_instance_id
+        # Step 4: notify creator that the executor changed (metadata update,
+        # routed through the table to keep the by-executor index exact).
+        self.runtime.futures.set_executor(fut, dst_instance_id)
         self.runtime.telemetry.on_migration(fut, self.inst.instance_id,
                                             dst_instance_id, now)
         # Step 5: transfer session state; cost modelled as a delay on activation.
@@ -544,36 +577,46 @@ class ComponentController:
         replica's sessions by transcript replay.
         """
         self.inst.alive = False
-        with self._lock:
-            pending = list(self.inst.queue)
-            parked = [self.runtime.futures.get(fid)
-                      for fid in list(self._parked)]
-        # drain queued AND parked work; fall back to re-routing through the
-        # runtime when no explicit drain target was given
-        for f in pending + [p for p in parked if p is not None]:
-            if drain_to and self.migrate_out(f, drain_to):
-                continue
+        with self._metrics_batch():
             with self._lock:
-                dequeued = self.inst.remove_queued(f)
-                if f.fid in self._parked:
-                    self._parked.pop(f.fid)
-                    dequeued = True
-            if dequeued:
-                self.runtime.dispatch(f)
-        if hard:
-            with self._lock:
-                running = list(self.inst.running)
-            err = InstanceDied(f"instance {self.inst.instance_id} died")
-            for f in running:
-                if isinstance(self.inst.methods.get(f.meta.method),
-                              EngineBackedMethod):
-                    continue    # failed by the backend's on_replica_killed
-                self._complete(f, error=err)
-        self._publish_metrics()
+                pending = list(self.inst.queue)
+                parked = [self.runtime.futures.get(fid)
+                          for fid in list(self._parked)]
+            # drain queued AND parked work; fall back to re-routing through
+            # the runtime when no explicit drain target was given
+            for f in pending + [p for p in parked if p is not None]:
+                if drain_to and self.migrate_out(f, drain_to):
+                    continue
+                with self._lock:
+                    dequeued = self.inst.remove_queued(f)
+                    if f.fid in self._parked:
+                        self._parked.pop(f.fid)
+                        dequeued = True
+                if dequeued:
+                    self.runtime.dispatch(f)
+            if hard:
+                with self._lock:
+                    running = list(self.inst.running)
+                err = InstanceDied(f"instance {self.inst.instance_id} died")
+                for f in running:
+                    if isinstance(self.inst.methods.get(f.meta.method),
+                                  EngineBackedMethod):
+                        continue   # failed by the backend's on_replica_killed
+                    self._complete(f, error=err)
+            self._publish_metrics()
 
     # -------------------------------------------------------------- metrics
     def _publish_metrics(self) -> None:
+        """Publish the metrics mirror — or, inside a ``_metrics_batch``
+        block, mark it dirty for one coalesced write at batch exit."""
+        if getattr(self._pub_tls, "depth", 0) > 0:
+            self._pub_dirty = True
+        else:
+            self._flush_metrics()
+
+    def _flush_metrics(self) -> None:
         m = self.inst.metrics
+        self._pub_dirty = False
         self.store.hset_many(f"metrics:{self.inst.instance_id}", {
             "agent_type": self.inst.agent_type,
             "node": self.inst.node_id,

@@ -93,6 +93,7 @@ class Future:
     __slots__ = (
         "fid", "meta", "_state", "_value", "_error", "_ready_evt",
         "_runtime", "_lock", "args", "kwargs", "_run_id",
+        "_table", "_live_indexed",
     )
 
     def __init__(self, runtime: Any, meta: FutureMetadata,
@@ -112,6 +113,12 @@ class Future:
         # are stale (the attempt was preempted, retried, or its instance
         # died) and must not resolve the future.
         self._run_id = 0
+        # the FutureTable tracking this future's liveness (set by add());
+        # _live_indexed — mutated only under the table's lock — records
+        # whether this future currently contributes to the table's
+        # per-session live counters and secondary indexes
+        self._table: Optional["FutureTable"] = None
+        self._live_indexed = False
 
     # ------------------------------------------------------------ public API
     @property
@@ -154,6 +161,7 @@ class Future:
             self._value = value
             self._state = FutureState.READY
             self.meta.ready_at = now
+        self._notify_resolved()
         self._runtime.kernel.notify(self._ready_evt)
 
     def fail(self, error: BaseException, now: float) -> None:
@@ -163,6 +171,7 @@ class Future:
             self._error = error
             self._state = FutureState.FAILED
             self.meta.ready_at = now
+        self._notify_resolved()
         self._runtime.kernel.notify(self._ready_evt)
 
     def cancel(self, now: float, reason: str = "cancelled") -> bool:
@@ -181,6 +190,7 @@ class Future:
                 f"cancelled: {reason}")
             self._state = FutureState.CANCELLED
             self.meta.ready_at = now
+        self._notify_resolved()
         self._runtime.kernel.notify(self._ready_evt)
         return True
 
@@ -194,6 +204,7 @@ class Future:
         with self._lock:
             if self._state in (FutureState.READY, FutureState.CANCELLED):
                 return False
+            revived = self._state == FutureState.FAILED
             self._error = None
             self._state = FutureState.PENDING
             self.meta.attempt += 1
@@ -208,7 +219,21 @@ class Future:
                 # the future had terminally failed (its waiters already woke
                 # and observed the error); new waiters need a fresh event
                 self._ready_evt = threading.Event()
+        if revived:
+            self._notify_revived()
         return True
+
+    # liveness notifications keep the FutureTable's per-session counters and
+    # secondary indexes exact at every state transition — called with the
+    # future's own lock RELEASED (lock order: future lock before table lock,
+    # never interleaved)
+    def _notify_resolved(self) -> None:
+        if self._table is not None:
+            self._table.on_resolved(self)
+
+    def _notify_revived(self) -> None:
+        if self._table is not None:
+            self._table.on_revived(self)
 
     def unresolved_deps(self, table: "FutureTable") -> List[str]:
         out = []
@@ -237,6 +262,15 @@ class FutureTable:
     invisible to the runtime — it just keeps long-running deployments
     (the 130K-future scale of ``fig10_control_loop``) memory-flat.  Callers
     holding the ``Future`` object keep full access to its value.
+
+    The table is *indexed*: per-session live-future counters plus by-session
+    / by-executor / by-agent-type secondary indexes, maintained at future
+    state transitions (materialize/fail/cancel/reset_for_retry notify the
+    table; GC and explicit removal reconcile through the same per-future
+    ``_live_indexed`` flag, so tombstoned epochs, run-id-fenced completions
+    and retry re-arms all keep the counters exact).  This is what lets the
+    global controller answer "which sessions still have unresolved work" in
+    O(1) per session instead of an O(N) snapshot per control round.
     """
 
     def __init__(self, gc_threshold: int = 4096) -> None:
@@ -249,18 +283,142 @@ class FutureTable:
         # of still-pending futures), back off geometrically so future
         # creation stays amortized O(1) instead of O(n) per add
         self._sweep_floor = 0
+        # secondary indexes (all under _lock):
+        self._by_session: Dict[str, Dict[str, Future]] = {}   # all registered
+        self._live_by_session: Dict[str, int] = {}            # live counters
+        self._live_by_executor: Dict[str, Dict[str, Future]] = {}
+        self._live_by_type: Dict[str, Dict[str, Future]] = {}
+        # sessions whose liveness flipped (0 <-> >0) since the last drain;
+        # the global controller re-filters stale waiting lists from this
+        self._dirty_sessions: set = set()
 
+    # ------------------------------------------------------- index internals
+    def _index_live_locked(self, f: Future) -> None:
+        if f._live_indexed:
+            return
+        f._live_indexed = True
+        sid = f.meta.session_id
+        if sid:
+            before = self._live_by_session.get(sid, 0)
+            self._live_by_session[sid] = before + 1
+            if before == 0:
+                self._dirty_sessions.add(sid)
+        if f.meta.executor:
+            self._live_by_executor.setdefault(f.meta.executor, {})[f.fid] = f
+        if f.meta.agent_type:
+            self._live_by_type.setdefault(f.meta.agent_type, {})[f.fid] = f
+
+    def _unindex_live_locked(self, f: Future) -> None:
+        if not f._live_indexed:
+            return
+        f._live_indexed = False
+        sid = f.meta.session_id
+        if sid:
+            after = self._live_by_session.get(sid, 1) - 1
+            if after <= 0:
+                self._live_by_session.pop(sid, None)
+                self._dirty_sessions.add(sid)
+            else:
+                self._live_by_session[sid] = after
+        for index, key in ((self._live_by_executor, f.meta.executor),
+                           (self._live_by_type, f.meta.agent_type)):
+            bucket = index.get(key)
+            if bucket is not None:
+                bucket.pop(f.fid, None)
+                if not bucket:
+                    index.pop(key, None)
+
+    def on_resolved(self, f: Future) -> None:
+        """A registered future reached a terminal state."""
+        with self._lock:
+            self._unindex_live_locked(f)
+
+    def on_revived(self, f: Future) -> None:
+        """A FAILED future was re-armed (``reset_for_retry``)."""
+        with self._lock:
+            if f.fid in self._futures and not f.available:
+                self._index_live_locked(f)
+
+    def set_executor(self, f: Future, instance_id: str) -> None:
+        """Re-home ``f``'s executor, keeping the by-executor index exact.
+        All executor reassignment (submit, migration, reroute) goes through
+        here."""
+        with self._lock:
+            if f._live_indexed and f.meta.executor != instance_id:
+                bucket = self._live_by_executor.get(f.meta.executor)
+                if bucket is not None:
+                    bucket.pop(f.fid, None)
+                    if not bucket:
+                        self._live_by_executor.pop(f.meta.executor, None)
+                f.meta.executor = instance_id
+                if instance_id:
+                    self._live_by_executor.setdefault(
+                        instance_id, {})[f.fid] = f
+            else:
+                f.meta.executor = instance_id
+
+    # ------------------------------------------------------------ index API
+    def live_count(self, session_id: str) -> int:
+        """Unresolved futures of ``session_id`` — O(1)."""
+        with self._lock:
+            return self._live_by_session.get(session_id, 0)
+
+    def live_sessions(self) -> set:
+        """Sessions with at least one unresolved future — O(live sessions)."""
+        with self._lock:
+            return set(self._live_by_session)
+
+    def drain_dirty_sessions(self) -> set:
+        """Sessions whose liveness flipped since the last drain (single
+        consumer: the global controller's incremental view maintenance)."""
+        with self._lock:
+            out = self._dirty_sessions
+            self._dirty_sessions = set()
+            return out
+
+    def futures_of_session(self, session_id: str) -> List[Future]:
+        """Every registered (not yet GC'd) future of the session."""
+        with self._lock:
+            return list(self._by_session.get(session_id, {}).values())
+
+    def live_of_executor(self, instance_id: str) -> List[Future]:
+        with self._lock:
+            return list(self._live_by_executor.get(instance_id, {}).values())
+
+    def live_of_type(self, agent_type: str) -> List[Future]:
+        with self._lock:
+            return list(self._live_by_type.get(agent_type, {}).values())
+
+    # -------------------------------------------------------------- registry
     def add(self, f: Future) -> None:
+        f._table = self
         with self._lock:
             self._futures[f.fid] = f
+            sid = f.meta.session_id
+            if sid:
+                self._by_session.setdefault(sid, {})[f.fid] = f
+            if not f.available:
+                self._index_live_locked(f)
 
     def get(self, fid: str) -> Optional[Future]:
         with self._lock:
             return self._futures.get(fid)
 
+    def _forget_locked(self, f: Future) -> None:
+        self._unindex_live_locked(f)
+        sid = f.meta.session_id
+        if sid:
+            bucket = self._by_session.get(sid)
+            if bucket is not None:
+                bucket.pop(f.fid, None)
+                if not bucket:
+                    self._by_session.pop(sid, None)
+
     def remove(self, fid: str) -> None:
         with self._lock:
-            self._futures.pop(fid, None)
+            f = self._futures.pop(fid, None)
+            if f is not None:
+                self._forget_locked(f)
 
     def __len__(self) -> int:
         with self._lock:
@@ -278,12 +436,19 @@ class FutureTable:
                                             self._sweep_floor)
 
     def sweep(self) -> List[Future]:
-        """Retire resolved futures; returns them (for mirror cleanup)."""
+        """Retire resolved futures; returns them (for mirror cleanup).
+
+        Retirement never touches the live counters directly: resolution
+        already decremented them (``on_resolved``), and ``_forget_locked``
+        only reconciles a future whose resolution raced the sweep — so a
+        completed-then-GC'd future decrements its session exactly once.
+        """
         with self._lock:
             dead = [f for f in self._futures.values()
                     if f.state in TERMINAL_STATES]
             for f in dead:
                 del self._futures[f.fid]
+                self._forget_locked(f)
             self.retired += len(dead)
             # next sweep only once the table doubles past what survived —
             # collapses back to gc_threshold as soon as futures resolve

@@ -80,6 +80,19 @@ class ClusterView:
     escalated: List[Dict[str, Any]] = field(default_factory=list)
     # instances the runtime will no longer route to (dead replicas)
     blacklisted: set = field(default_factory=set)
+    # --- delta-maintenance internals (incremental view collection) ---
+    # raw (unpruned) waiting_sessions per instance as last read from its
+    # mirror, plus the reverse index session -> instances naming it; kept so
+    # a session whose liveness flips can re-filter exactly the affected
+    # instances instead of rescanning every mirror
+    _raw_waiting: Dict[str, List[str]] = field(default_factory=dict,
+                                               repr=False, compare=False)
+    _waiting_index: Dict[str, set] = field(default_factory=dict,
+                                           repr=False, compare=False)
+    # which node's store currently homes each future mirror — a stale-copy
+    # delete from a previous home must not evict the fresh entry
+    _future_home: Dict[str, str] = field(default_factory=dict,
+                                         repr=False, compare=False)
 
     def instances_of(self, agent_type: str) -> List[InstanceView]:
         return [self.instances[i] for i in self.by_type.get(agent_type, [])
@@ -88,6 +101,93 @@ class ClusterView:
     def idle_instances(self, agent_type: str) -> List[InstanceView]:
         return [iv for iv in self.instances_of(agent_type)
                 if not iv.busy and iv.qsize == 0]
+
+    # ------------------------------------------------------------- delta API
+    # The global controller maintains ONE long-lived ClusterView and patches
+    # it with node-store deltas each round (per-round cost scales with churn,
+    # not population).  These are the only mutators it uses; a periodic full
+    # rebuild is the drift-correction escape hatch.
+
+    def upsert_instance(self, iid: str, m: Dict[str, Any], default_node: str,
+                        is_live) -> InstanceView:
+        """Patch (or create) the view of instance ``iid`` from its metrics
+        mirror ``m``.  ``is_live(session_id)`` prunes the waiting list."""
+        raw = list(m.get("waiting_sessions", []))
+        for s in self._raw_waiting.get(iid, ()):
+            ids = self._waiting_index.get(s)
+            if ids is not None:
+                ids.discard(iid)
+                if not ids:
+                    self._waiting_index.pop(s, None)
+        self._raw_waiting[iid] = raw
+        for s in raw:
+            self._waiting_index.setdefault(s, set()).add(iid)
+        iv = InstanceView(
+            instance_id=iid,
+            agent_type=m.get("agent_type", ""),
+            node=m.get("node", default_node),
+            qsize=int(m.get("qsize", 0)),
+            busy=bool(m.get("busy", False)),
+            busy_until=float(m.get("busy_until", 0.0)),
+            ema_service=float(m.get("ema_service", 0.0)),
+            completed=int(m.get("completed", 0)),
+            failed=int(m.get("failed", 0)),
+            alive=bool(m.get("alive", True)),
+            waiting_sessions=[s for s in raw if is_live(s)],
+            inflight=int(m.get("inflight", 0)),
+            retries=int(m.get("retries", 0)),
+            cancelled=int(m.get("cancelled", 0)),
+        )
+        old = self.instances.get(iid)
+        self.instances[iid] = iv
+        if old is None:
+            self.by_type.setdefault(iv.agent_type, []).append(iid)
+        elif old.agent_type != iv.agent_type:   # defensive: never in practice
+            peers = self.by_type.get(old.agent_type, [])
+            if iid in peers:
+                peers.remove(iid)
+            self.by_type.setdefault(iv.agent_type, []).append(iid)
+        return iv
+
+    def evict_instance(self, iid: str) -> None:
+        iv = self.instances.pop(iid, None)
+        for s in self._raw_waiting.pop(iid, ()):
+            ids = self._waiting_index.get(s)
+            if ids is not None:
+                ids.discard(iid)
+                if not ids:
+                    self._waiting_index.pop(s, None)
+        if iv is not None:
+            peers = self.by_type.get(iv.agent_type, [])
+            if iid in peers:
+                peers.remove(iid)
+            if not peers:
+                self.by_type.pop(iv.agent_type, None)
+
+    def upsert_future_mirror(self, fid: str, h: Dict[str, Any],
+                             node: str) -> None:
+        self.futures[fid] = h
+        self._future_home[fid] = node
+
+    def evict_future_mirror(self, fid: str, node: str) -> None:
+        """Drop the mirror iff ``node`` is its current home: the delete of a
+        stale copy on a previous home (mirror re-homed by migration or an
+        escalated reroute) must not shadow the fresh upsert."""
+        if self._future_home.get(fid) == node:
+            self.futures.pop(fid, None)
+            self._future_home.pop(fid, None)
+
+    def refresh_waiting(self, sessions, is_live) -> None:
+        """Re-filter the waiting lists of every instance naming one of
+        ``sessions`` (their liveness flipped since the last round)."""
+        stale = set()
+        for sid in sessions:
+            stale |= self._waiting_index.get(sid, set())
+        for iid in stale:
+            iv = self.instances.get(iid)
+            if iv is not None:
+                iv.waiting_sessions = [
+                    s for s in self._raw_waiting.get(iid, []) if is_live(s)]
 
 
 # ------------------------------------------------------------------ actions

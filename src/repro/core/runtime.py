@@ -334,9 +334,12 @@ class NalarRuntime:
         threshold, keeping long-running deployments memory-flat."""
         self.futures.add(fut)
         if self.futures.needs_sweep():
+            scrub: Dict[str, List[str]] = {}
             for f in self.futures.sweep():
                 for node in f.meta.mirror_nodes:
-                    self.stores.get(node).delete(f"future:{f.fid}")
+                    scrub.setdefault(node, []).append(f"future:{f.fid}")
+            for node, keys in scrub.items():
+                self.stores.get(node).delete_many(keys)
 
     def dispatch(self, fut: Future) -> None:
         self.mirror_future(fut)
@@ -378,10 +381,17 @@ class NalarRuntime:
             self.kernel.schedule(delay, lambda: ctrl.on_dep_ready(dep_fid))
 
     def mirror_future(self, fut: Future) -> None:
-        """Write the metadata mirror into the executor/creator node store."""
+        """Write the metadata mirror into the executor/creator node store.
+
+        The mirror is single-homed: re-homing (migration, escalated reroute)
+        scrubs the copy from every previous node so exactly one store holds
+        each future's metadata — the incremental ClusterView would otherwise
+        have to arbitrate between divergent stale copies."""
         node = self.node_of_instance(fut.meta.executor or fut.meta.creator)
-        if node not in fut.meta.mirror_nodes:
-            fut.meta.mirror_nodes.append(node)
+        for prev in fut.meta.mirror_nodes:
+            if prev != node:
+                self.stores.get(prev).delete(f"future:{fut.fid}")
+        fut.meta.mirror_nodes = [node]
         self.stores.get(node).hset_many(f"future:{fut.fid}", {
             "state": fut.state.value,
             "agent_type": fut.meta.agent_type,
@@ -398,8 +408,9 @@ class NalarRuntime:
         sess = self.sessions.get(session_id)
         if sess is None:
             return
-        for fut in self.futures.snapshot():
-            if fut.meta.session_id == session_id and not fut.available:
+        # by-session index: O(session's futures), not O(table)
+        for fut in self.futures.futures_of_session(session_id):
+            if not fut.available:
                 fut.meta.priority = sess.priority_for(fut.meta.agent_type)
 
     # ------------------------------------------------------- fault handling
@@ -514,8 +525,8 @@ class NalarRuntime:
         """Cancel every unresolved future of a session (user abandoned it).
         Returns the number of futures cancelled."""
         n = 0
-        for fut in self.futures.snapshot():
-            if fut.meta.session_id == session_id and not fut.available:
+        for fut in self.futures.futures_of_session(session_id):
+            if not fut.available:
                 n += bool(self.cancel_future(fut, reason))
         return n
 

@@ -1,0 +1,360 @@
+"""Incremental view collection: delta scans, persistent ClusterView,
+indexed FutureTable, and batched publication (the Fig. 10 control plane).
+
+The centerpiece is a property-style equivalence test: after any randomized
+interleaving of future creation / completion / failure / retry / cancel / GC
+and instance kill / provision, N rounds of delta collection must leave the
+persistent ClusterView identical to a from-scratch rebuild.
+"""
+
+import random
+
+import pytest
+
+from repro.core import (AgentSpec, Directives, FixedLatency, NalarRuntime,
+                        SRTFSchedule, default_policies, emulated)
+from repro.core.policy import ActionSink
+from repro.core.session import clear_context, set_context
+
+
+# ---------------------------------------------------------------- helpers
+def make_runtime(seed=0, gc_threshold=24):
+    rt = NalarRuntime(
+        simulate=True,
+        nodes={"n0": {"CPU": 8}, "n1": {"CPU": 8}},
+        policy=default_policies(),
+        control_interval=1e9,          # rounds driven manually
+        future_gc_threshold=gc_threshold,
+        seed=seed)
+
+    fail_always = object()
+    fail_once_seen = set()
+
+    def work_fn(x):
+        if x is fail_always:
+            raise RuntimeError("permanent failure")
+        if isinstance(x, tuple) and x[0] == "flaky" and x not in fail_once_seen:
+            fail_once_seen.add(x)
+            raise RuntimeError("transient failure")
+        return x
+
+    for name in ("work", "tool"):
+        rt.register_agent(AgentSpec(
+            name=name,
+            methods={"run": emulated(FixedLatency(0.05), work_fn)},
+            directives=Directives(max_instances=4, min_instances=1,
+                                  max_retries=2, retry_backoff=0.01,
+                                  resources={"CPU": 1})), instances=2)
+    return rt, fail_always
+
+
+def call(rt, sid, agent, arg):
+    rid = rt.sessions.new_request(sid)
+    set_context(sid, rid, f"driver:{rid}")
+    try:
+        return rt.stub(agent).run(arg)
+    finally:
+        clear_context()
+
+
+def assert_views_equal(dv, fv):
+    assert dv.instances == fv.instances
+    norm = lambda bt: {k: sorted(v) for k, v in bt.items() if v}  # noqa: E731
+    assert norm(dv.by_type) == norm(fv.by_type)
+    assert dv.futures == fv.futures
+    assert dv.session_priority == fv.session_priority
+    assert dv.kv_residency == fv.kv_residency
+    assert dv.blacklisted == fv.blacklisted
+
+
+def assert_indexes_consistent(rt):
+    """The table's counters/indexes must equal a brute-force recount."""
+    live, by_exec, by_type = {}, {}, {}
+    for f in rt.futures.snapshot():
+        if f.available:
+            continue
+        if f.meta.session_id:
+            live[f.meta.session_id] = live.get(f.meta.session_id, 0) + 1
+        if f.meta.executor:
+            by_exec.setdefault(f.meta.executor, set()).add(f.fid)
+        if f.meta.agent_type:
+            by_type.setdefault(f.meta.agent_type, set()).add(f.fid)
+    table = rt.futures
+    assert table.live_sessions() == set(live)
+    for sid, n in live.items():
+        assert table.live_count(sid) == n
+    with table._lock:
+        exec_keys = set(table._live_by_executor)
+        type_keys = set(table._live_by_type)
+    assert exec_keys == set(by_exec)
+    assert type_keys == set(by_type)
+    for iid, fids in by_exec.items():
+        assert {f.fid for f in table.live_of_executor(iid)} == fids
+    for at, fids in by_type.items():
+        assert {f.fid for f in table.live_of_type(at)} == fids
+
+
+# ------------------------------------------------- equivalence (tentpole)
+@pytest.mark.parametrize("seed", range(5))
+def test_delta_view_equals_full_rebuild_under_random_interleavings(seed):
+    rt, fail_always = make_runtime(seed=seed)
+    gc = rt.global_controller
+    gc.full_rebuild_interval = 0       # delta-only after bootstrap: any
+    # drift the escape hatch would mask must fail this test instead
+    rng = random.Random(seed)
+    sessions = [rt.sessions.new_session().session_id for _ in range(6)]
+    created = []
+    t = [0.0]
+
+    def advance():
+        t[0] += rng.uniform(0.01, 0.3)
+        rt.kernel.run(max_time=t[0])
+
+    def op_call():
+        agent = rng.choice(("work", "tool"))
+        roll = rng.random()
+        if roll < 0.15:
+            arg = fail_always
+        elif roll < 0.4:
+            arg = ("flaky", rng.randrange(1000))
+        else:
+            arg = rng.randrange(1000)
+        created.append(call(rt, rng.choice(sessions), agent, arg))
+
+    def op_cancel():
+        live = [f for f in created if not f.available]
+        if live:
+            rt.cancel_future(rng.choice(live))
+
+    def op_cancel_session():
+        rt.cancel_session(rng.choice(sessions))
+
+    def op_kill():
+        iids = rt.instances_of_type(rng.choice(("work", "tool")))
+        if iids:
+            rt.kill_instance(rng.choice(iids), hard=rng.random() < 0.3)
+
+    def op_provision():
+        rt.provision_instance(rng.choice(("work", "tool")),
+                              rng.choice(("n0", "n1")))
+
+    ops = [op_call] * 6 + [op_cancel, op_cancel_session, op_kill,
+                           op_provision]
+    gc.run_once()                       # bootstrap (full rebuild)
+    for step in range(40):
+        rng.choice(ops)()
+        advance()
+        if rng.random() < 0.5:
+            gc.run_once()               # delta round
+        if step % 10 == 9:
+            dv = gc.collect_view()              # delta
+            fv = gc.collect_view(full=True)     # from-scratch rebuild
+            assert_views_equal(dv, fv)
+            assert_indexes_consistent(rt)
+    t[0] += 50.0
+    rt.kernel.run(max_time=t[0])        # quiesce
+    dv = gc.collect_view()
+    fv = gc.collect_view(full=True)
+    assert_views_equal(dv, fv)
+    assert_indexes_consistent(rt)
+    assert gc.delta_rounds > 0          # the delta path actually ran
+    rt.shutdown()
+
+
+def test_periodic_full_rebuild_escape_hatch():
+    rt, _ = make_runtime()
+    gc = rt.global_controller
+    gc.full_rebuild_interval = 3
+    for _ in range(8):
+        gc.run_once()
+    # round 1 bootstraps, then every 3 delta rounds a rebuild fires
+    assert gc.rebuild_rounds >= 2
+    assert gc.delta_rounds >= 4
+    rt.shutdown()
+
+
+# ------------------------------------------- live counters (satellite 3)
+def test_completed_then_gcd_future_decrements_session_exactly_once():
+    """Regression: GC retirement must not decrement a session's live
+    counter again — resolution already did."""
+    rt, _ = make_runtime(gc_threshold=4)
+    sid = rt.sessions.new_session().session_id
+
+    futs = [call(rt, sid, "work", i) for i in range(3)]
+    assert rt.futures.live_count(sid) == 3
+    rt.kernel.run(max_time=10.0)
+    assert all(f.available for f in futs)
+    assert rt.futures.live_count(sid) == 0
+
+    # overflow the table so the resolved futures are GC'd
+    other = rt.sessions.new_session().session_id
+    keep = [call(rt, other, "work", 100 + i) for i in range(6)]
+    assert rt.futures.retired >= 3
+    assert rt.futures.live_count(sid) == 0         # not decremented again
+
+    # the counter still tracks new work for the same session exactly
+    f = call(rt, sid, "work", 7)
+    assert rt.futures.live_count(sid) == 1
+    rt.kernel.run(max_time=20.0)
+    assert rt.futures.live_count(sid) == 0
+    assert f.available and all(k.available for k in keep)
+    rt.shutdown()
+
+
+def test_collect_view_waiting_pruned_via_counters_without_mirror_change():
+    """A session that goes dead between rounds is pruned from the persistent
+    view's waiting lists even when the instance mirror itself never
+    republishes (the dirty-session refresh path)."""
+    rt, _ = make_runtime()
+    gc = rt.global_controller
+    iid = rt.instances_of_type("work")[0]
+    store = rt.stores.get(rt.instance(iid).node_id)
+    sid = rt.sessions.new_session().session_id
+    f = call(rt, sid, "work", 1)
+    gc.run_once()                                   # bootstrap
+
+    # forge a stale mirror claiming the session still waits here, scan it
+    # into the view, then resolve the session WITHOUT touching the mirror
+    store.hset(f"metrics:{iid}", "waiting_sessions", [sid])
+    view = gc.collect_view()
+    assert sid in view.instances[iid].waiting_sessions
+    rt.kernel.run(max_time=10.0)
+    assert f.available and rt.futures.live_count(sid) == 0
+    # simulate "no republish": overwrite the mirror's waiting claim again
+    store.hset(f"metrics:{iid}", "waiting_sessions", [sid])
+    view = gc.collect_view()
+    assert sid not in view.instances[iid].waiting_sessions
+    # ...and a revived session resurfaces from the same raw mirror data
+    call(rt, sid, "work", 2)
+    view = gc.collect_view()
+    assert sid in view.instances[iid].waiting_sessions
+    rt.kernel.run(max_time=20.0)
+    rt.shutdown()
+
+
+# --------------------------------------------- batched publication (IV)
+def test_metrics_publishes_coalesce_inside_batch():
+    rt, _ = make_runtime()
+    iid = rt.instances_of_type("work")[0]
+    ctrl = rt.controller_of(iid)
+    store = rt.stores.get(ctrl.inst.node_id)
+    before = store.write_ops
+    with ctrl._metrics_batch():
+        ctrl._publish_metrics()
+        ctrl._publish_metrics()
+        ctrl._publish_metrics()
+    assert store.write_ops == before + 1
+    ctrl._publish_metrics()                 # unbatched: writes through
+    assert store.write_ops == before + 2
+    rt.shutdown()
+
+
+def test_completion_coalesces_metric_writes():
+    """One completion event = one metrics-mirror write (dequeue + completion
+    + re-dispatch bookkeeping all fold into the batch)."""
+    rt, _ = make_runtime()
+    sid = rt.sessions.new_session().session_id
+    f = call(rt, sid, "work", 1)
+    rt.kernel.run(max_time=0.04)            # dispatched, not yet complete
+    iid = f.meta.executor
+    store = rt.stores.get(rt.instance(iid).node_id)
+    before = store.write_ops
+    rt.kernel.run(max_time=10.0)            # completion fires
+    assert f.available
+    writes = store.write_ops - before
+    # completion flush + future-mirror upkeep; never the 3+ metric writes
+    # of the unbatched path
+    assert writes <= 3
+    rt.shutdown()
+
+
+def test_apply_batches_command_writes_per_destination():
+    rt, _ = make_runtime()
+    gc = rt.global_controller
+    iids = rt.instances_of_type("work")
+    src, dst = iids[0], iids[1]
+    store = rt.stores.get(rt.instance(src).node_id)
+    key = f"cmd:{src}"
+    v0 = store.version(key)
+    got = []
+    store.subscribe(key, lambda fld, val: got.append(fld))
+    sink = ActionSink()
+    sink.migrate("sA", src, dst)
+    sink.migrate("sB", src, dst)
+    gc.apply(sink)
+    # two commands, ONE store write; both fields delivered to the consumer
+    assert store.version(key) == v0 + 1
+    assert sorted(got) == ["mig:sA", "mig:sB"]
+    rt.shutdown()
+
+
+def test_apply_flushes_commands_before_direct_actions():
+    """Ordering barrier: a migrate emitted before a kill must land on the
+    command key before the kill executes — batching must not reorder a
+    policy's action sequence."""
+    rt, _ = make_runtime()
+    gc = rt.global_controller
+    iids = rt.instances_of_type("work")
+    src, dst = iids[0], iids[1]
+    store = rt.stores.get(rt.instance(src).node_id)
+    order = []
+    store.subscribe(f"cmd:{src}", lambda fld, val: order.append(
+        ("cmd", rt.instance(src).alive)))
+    sink = ActionSink()
+    sink.migrate("sA", src, dst)
+    sink.kill(src)
+    gc.apply(sink)
+    # the command arrived while the instance was still alive
+    assert order == [("cmd", True)]
+    rt.shutdown()
+
+
+def test_apply_batches_schedule_installs():
+    rt, _ = make_runtime()
+    gc = rt.global_controller
+    sink = ActionSink()
+    sink.install_schedule("work", SRTFSchedule())
+    gc.apply(sink)
+    for iid in rt.instances_of_type("work"):
+        ctrl = rt.controller_of(iid)
+        assert isinstance(ctrl.schedule_policy, SRTFSchedule)
+    rt.shutdown()
+
+
+# --------------------------------------------------- future-table indexes
+def test_future_table_secondary_indexes_follow_execution():
+    rt, _ = make_runtime()
+    sid = rt.sessions.new_session().session_id
+    f = call(rt, sid, "work", 42)
+    assert {x.fid for x in rt.futures.live_of_type("work")} == {f.fid}
+    rt.kernel.run(max_time=0.04)            # routed: executor assigned
+    assert f.meta.executor
+    assert {x.fid for x in rt.futures.live_of_executor(f.meta.executor)} \
+        == {f.fid}
+    rt.kernel.run(max_time=10.0)            # resolved: indexes emptied
+    assert f.available
+    assert rt.futures.live_of_type("work") == []
+    assert rt.futures.live_of_executor(f.meta.executor) == []
+    assert rt.futures.futures_of_session(sid) != []   # registry keeps it
+    rt.shutdown()
+
+
+def test_mirror_single_homing():
+    """Re-homing a future's mirror scrubs the copy on the previous node —
+    the incremental view never has to arbitrate between stale duplicates."""
+    rt, _ = make_runtime()
+    sid = rt.sessions.new_session().session_id
+    f = call(rt, sid, "work", 1)
+    rt.mirror_future(f)
+    homes = lambda: [s.node_id for s in rt.stores.all_stores()  # noqa: E731
+                     if s.hgetall(f"future:{f.fid}")]
+    assert len(homes()) == 1
+    # force a re-home: pretend the executor moved to the other node
+    other = next(i for i in rt.instances_of_type("work")
+                 if rt.instance(i).node_id != homes()[0])
+    rt.futures.set_executor(f, other)
+    rt.mirror_future(f)
+    assert homes() == [rt.instance(other).node_id]
+    assert f.meta.mirror_nodes == [rt.instance(other).node_id]
+    rt.kernel.run(max_time=10.0)
+    rt.shutdown()

@@ -61,3 +61,98 @@ def test_cluster_directory():
     assert a is b
     c.get("n1")
     assert sorted(c.nodes()) == ["n0", "n1"]
+
+
+# ------------------------------------------------------------- delta scans
+def test_scan_changed_bootstrap_returns_existing_keys():
+    s = NodeStore("n0")
+    s.hset("future:f1", "state", "pending")
+    s.hset("future:f2", "state", "pending")
+    changed, deleted, cur = s.scan_changed("future:", 0)
+    assert sorted(changed) == ["future:f1", "future:f2"]
+    assert deleted == []
+    # nothing moved since: empty delta, cursor stable
+    changed, deleted, cur2 = s.scan_changed("future:", cur)
+    assert changed == [] and deleted == [] and cur2 == cur
+
+
+def test_scan_changed_coalesces_repeated_writes():
+    s = NodeStore("n0")
+    _, _, cur = s.scan_changed("future:", 0)
+    for _ in range(10):
+        s.hset("future:f1", "state", "running")
+    changed, deleted, cur = s.scan_changed("future:", cur)
+    assert changed == ["future:f1"] and deleted == []
+
+
+def test_scan_changed_reports_deletions_once():
+    s = NodeStore("n0")
+    s.hset("future:f1", "state", "pending")
+    _, _, cur = s.scan_changed("future:", 0)
+    s.delete("future:f1")
+    changed, deleted, cur = s.scan_changed("future:", cur)
+    assert changed == [] and deleted == ["future:f1"]
+    changed, deleted, cur = s.scan_changed("future:", cur)
+    assert changed == [] and deleted == []
+
+
+def test_scan_changed_rebirth_after_delete():
+    """delete + re-create between scans reads as a change, not a delete."""
+    s = NodeStore("n0")
+    s.hset("future:f1", "state", "pending")
+    _, _, cur = s.scan_changed("future:", 0)
+    s.delete("future:f1")
+    s.hset("future:f1", "state", "running")
+    changed, deleted, _ = s.scan_changed("future:", cur)
+    assert changed == ["future:f1"] and deleted == []
+
+
+def test_scan_changed_only_matching_prefix():
+    s = NodeStore("n0")
+    _, _, cur = s.scan_changed("future:", 0)
+    s.hset("metrics:a", "q", 1)
+    s.hset("future:f1", "state", "pending")
+    changed, _, _ = s.scan_changed("future:", cur)
+    assert changed == ["future:f1"]
+
+
+def test_scan_changed_stale_cursor_not_replayed_after_ack():
+    """Single-consumer contract: scanning at cursor C acknowledges (and
+    compacts) every delta at or below C."""
+    s = NodeStore("n0")
+    s.hset("future:f1", "state", "pending")
+    _, _, cur = s.scan_changed("future:", 0)
+    s.scan_changed("future:", cur)           # ack
+    changed, _, _ = s.scan_changed("future:", 0)   # rewound cursor
+    assert changed == []                      # journal already compacted
+
+
+def test_keys_backed_by_index_and_snapshot():
+    s = NodeStore("n0")
+    s.hset("metrics:a", "q", 1)
+    s.hset("other:x", "q", 1)
+    # unindexed prefix: snapshot + filter path
+    assert sorted(s.keys("metrics:")) == ["metrics:a"]
+    s.scan_changed("metrics:", 0)             # registers the index
+    s.hset("metrics:b", "q", 2)
+    assert sorted(s.keys("metrics:")) == ["metrics:a", "metrics:b"]
+    s.delete("metrics:a")
+    assert s.keys("metrics:") == ["metrics:b"]
+    assert sorted(s.keys("")) == ["metrics:b", "other:x"]
+
+
+def test_hgetall_many_and_delete_many():
+    s = NodeStore("n0")
+    for i in range(5):
+        s.hset(f"future:f{i}", "state", i)
+    got = s.hgetall_many([f"future:f{i}" for i in range(5)] + ["future:nope"])
+    assert len(got) == 5 and got["future:f3"] == {"state": 3}
+    s.delete_many(["future:f0", "future:f1"])
+    assert sorted(s.keys("future:")) == ["future:f2", "future:f3", "future:f4"]
+
+
+def test_cursor_tracks_mutations():
+    s = NodeStore("n0")
+    c0 = s.cursor()
+    s.hset("k", "f", 1)
+    assert s.cursor() == c0 + 1
