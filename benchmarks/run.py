@@ -19,7 +19,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from . import (failure_injection, fig9_financial, fig9_router,  # noqa: E402
                fig9_swe, fig10_control_loop, pool_routing, sec62_policies,
-               table4_two_level)
+               sustained_rps, table4_two_level)
 
 BENCHES = {
     "fig9a_financial": fig9_financial,
@@ -32,6 +32,9 @@ BENCHES = {
     "pool_routing": pool_routing,
     # replica killed mid-run: goodput/p95 with the retry ladder on vs off
     "failure_injection": failure_injection,
+    # open-loop stepped-RPS load: chunked-vs-monolithic prefill TTFT and
+    # bounded-vs-unbounded admission goodput (the abstract's 80-RPS claim)
+    "sustained_rps": sustained_rps,
 }
 
 
@@ -70,6 +73,9 @@ def main() -> None:
     if "fig10_control_loop" in all_rows:
         write_control_loop_record(all_rows["fig10_control_loop"],
                                   full=args.full)
+    if "sustained_rps" in all_rows:
+        sustained_rps.write_record(all_rows["sustained_rps"],
+                                   "full" if args.full else "quick")
     print(f"done,benches,{len(all_rows)}")
 
 

@@ -1,0 +1,385 @@
+"""Open-loop sustained-load benchmark — real ``EnginePool``, wall-clock.
+
+The abstract's headline serving claim is that NALAR "sustains 80 RPS where
+baselines fail": the baseline failure mode is a data plane that (a) runs
+monolithic full-prompt prefill, stalling every active decode slot for the
+whole prefill, and (b) accepts unbounded queue growth, so past saturation
+every request waits behind a growing queue until it times out.  This
+benchmark drives a real two-replica ``EnginePool`` with open-loop Poisson
+arrivals (arrivals never wait for completions — the honest way to measure
+collapse) and measures both remedies separately:
+
+* **prefill experiment** — mixed long-prompt/decode load at a fixed arrival
+  rate, chunked prefill (``prefill_chunk`` tokens per step, piggybacked on
+  the batched decode) vs the legacy monolithic bucket prefill.  The claim
+  checked: chunked prefill strictly improves p99 TTFT — a long prompt no
+  longer freezes the batch for its full prefill, so the tail (short
+  requests that arrive during a long admission) collapses.
+
+* **admission experiment** — a stepped arrival-rate ladder over a bounded
+  (``max_queue`` + retry ladder + router shedding) vs unbounded admission
+  config.  Goodput is completed-in-deadline requests per second of wall
+  clock.  The claims checked: bounded admission still sustains goodput at
+  (and beyond) the offered rate where the unbounded baseline collapses,
+  and the unbounded collapse point is recorded.
+
+Numbers are wall-clock on reduced CPU models, so the absolute RPS is far
+below the paper's A100 figures — the *shape* (stall-free TTFT tail, and
+goodput that saturates instead of collapsing) is the reproduced claim.
+
+    PYTHONPATH=src python -m benchmarks.sustained_rps            # quick
+    PYTHONPATH=src python benchmarks/sustained_rps.py --smoke    # CI budget
+    PYTHONPATH=src python -m benchmarks.run --only sustained_rps
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import random
+import sys
+import time
+from typing import Dict, List, Optional
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.workloads.router import build_pool_runtime  # noqa: E402
+
+
+def _pct(sorted_vals: List[float], p: float) -> float:
+    if not sorted_vals:
+        return -1.0
+    idx = min(len(sorted_vals) - 1,
+              int(round(p / 100.0 * (len(sorted_vals) - 1))))
+    return sorted_vals[idx]
+
+
+def _warm_compile(pool, *, long_words: int, max_seq: int) -> None:
+    """Compile each replica's chunk/decode/prefill shapes up front so JIT
+    time never pollutes the latency comparison."""
+    from repro.serving import SamplingParams
+    for iid in pool.instance_ids:
+        engine = pool.bridge_of(iid).engine
+        for n in (8, long_words):
+            sid = f"warmup:{iid}:{n}"
+            engine.generate(list(range(1, n + 1)), session_id=sid,
+                            sampling=SamplingParams(max_new_tokens=2))
+            engine.pool.release(sid)
+            if engine.kv_registry is not None:
+                engine.kv_registry.release(sid)
+
+
+def run_condition(*, system: str, prefill_chunk: int, max_queue: int,
+                  max_retries: int, rps: float, duration: float,
+                  long_frac: float = 0.0, long_words: int = 840,
+                  short_words: int = 8, out_short: int = 8, out_long: int = 3,
+                  max_seq: int = 1024, replicas: int = 2, max_batch: int = 4,
+                  timeout_s: float = 10.0, seed: int = 0) -> Dict:
+    """One open-loop run; returns goodput + TTFT/E2E distributions."""
+    records: List[Dict[str, float]] = []    # engine-side per-request stamps
+
+    def decode(req):
+        records.append({
+            "ttft": req.first_token_at - req.submitted_wall,
+            "engine_e2e": req.finished_at - req.submitted_wall,
+            "prompt": int(len(req.prompt)),
+            "generated": len(req.generated),
+        })
+        return len(req.generated)
+
+    rt = build_pool_runtime(
+        replicas=replicas, max_batch=max_batch, max_seq=max_seq,
+        prefill_chunk=prefill_chunk, max_queue=max_queue,
+        max_retries=max_retries, retry_backoff=0.02,
+        control_interval=0.25, decode=decode, seed=seed)
+    pool = rt.engine_backends["llm"]
+    _warm_compile(pool, long_words=long_words, max_seq=max_seq)
+    n_warm = len(records)
+
+    rng = random.Random(seed)
+    word_rng = random.Random(seed + 1)
+
+    def mk_words(n: int) -> str:
+        return " ".join(f"w{word_rng.randrange(10_000)}" for _ in range(n))
+
+    plan = []                               # (arrival_t, words, out_tokens)
+    t, k = 0.0, 0
+    # deterministic long placement (every round(1/long_frac)-th arrival):
+    # the comparison needs the same long/short interleave in every system
+    long_every = max(1, round(1 / long_frac)) if long_frac > 0 else 0
+    while t < duration:
+        t += rng.expovariate(rps)
+        if long_every and k % long_every == long_every // 2:
+            plan.append((t, mk_words(long_words), out_long))
+            # interference probe: an interactive request landing right
+            # after every long admission.  This is the structural collision
+            # the TTFT comparison measures — a monolithic prefill stalls
+            # the probe for the whole prompt, chunked admits it next step.
+            plan.append((t + 0.03, mk_words(short_words), out_short))
+        else:
+            plan.append((t, mk_words(short_words), out_short))
+        k += 1
+    plan.sort(key=lambda p: p[0])
+
+    ok: List[str] = []
+    timeouts: List[str] = []
+    rejected: List[str] = []
+
+    def turn_driver(words: str, out_tok: int):
+        from repro.core.runtime import current_runtime
+        rt_ = current_runtime()
+        fut = rt_.stub("llm").generate(words, _hint={"out_tokens": out_tok})
+        try:
+            return fut.value(timeout=timeout_s)
+        except BaseException:
+            # deadline/shed: renounce the value so queued work is reclaimed
+            rt_.cancel_future(fut)
+            raise
+
+    def on_done(out, err):
+        if err is None:
+            ok.append("ok")
+        elif isinstance(err, TimeoutError):
+            timeouts.append("t")
+        else:
+            rejected.append(type(err).__name__)
+
+    t_begin = time.monotonic()
+    rt.start()
+    for arrival, words, out in plan:
+        rt.submit_request(turn_driver, words, out, delay=arrival,
+                          on_done=on_done)
+    time.sleep(plan[-1][0] + 0.3)           # let every arrival timer fire
+    rt.run()
+    elapsed = time.monotonic() - t_begin
+
+    records = records[n_warm:]
+    ttft = sorted(r["ttft"] for r in records if r["ttft"] >= 0)
+    # class split: the chunked-prefill claim is about the *interactive*
+    # (decode-heavy) class — the requests a monolithic prefill stalls.  The
+    # long class pays its own prefill either way (and pays more when it is
+    # chunked); both classes are recorded.
+    cut = max(short_words * 4, 32)
+    ttft_short = sorted(r["ttft"] for r in records
+                        if r["ttft"] >= 0 and r["prompt"] <= cut)
+    ttft_long = sorted(r["ttft"] for r in records
+                       if r["ttft"] >= 0 and r["prompt"] > cut)
+    tel = dict(rt.telemetry.summary())
+    pool_tel = pool.telemetry()
+    row = {
+        "bench": "sustained_rps",
+        "system": system,
+        "rps": rps,
+        "offered": len(plan) / duration,
+        "n": len(plan),
+        "completed": len(ok),
+        "timeouts": len(timeouts),
+        "rejected_failures": len(rejected),
+        "goodput_rps": len(ok) / max(elapsed, 1e-9),
+        "elapsed_s": elapsed,
+        "ttft_p50": _pct(ttft, 50), "ttft_p99": _pct(ttft, 99),
+        "ttft_short_p50": _pct(ttft_short, 50),
+        "ttft_short_p99": _pct(ttft_short, 99),
+        "ttft_long_p50": _pct(ttft_long, 50),
+        "ttft_long_p99": _pct(ttft_long, 99),
+        "e2e_p50": tel.get("p50", -1), "e2e_p95": tel.get("p95", -1),
+        "e2e_p99": tel.get("p99", -1),
+        "admission_rejects": sum(
+            r.get("admission_rejects", 0)
+            for r in pool_tel["replicas"].values()),
+        "prefill_chunk": prefill_chunk,
+        "max_queue": max_queue,
+    }
+    rt.shutdown()
+    return row
+
+
+# ------------------------------------------------------------ experiments
+def prefill_experiment(*, rps: float, duration: float, long_frac: float,
+                       long_words: int, seed: int = 0) -> List[Dict]:
+    """Chunked vs monolithic prefill under mixed long-prompt/decode load.
+
+    Single replica on purpose: with siblings available, least-ETA routing
+    steers interactive traffic around a stalled replica, masking the data-
+    plane property under test (the engine itself must not head-of-line
+    block its batch).
+    """
+    rows = []
+    for system, chunk in (("prefill_monolithic", 0),
+                          ("prefill_chunked", 64)):
+        row = run_condition(system=system, prefill_chunk=chunk, max_queue=0,
+                            max_retries=0, rps=rps, duration=duration,
+                            long_frac=long_frac, long_words=long_words,
+                            max_seq=2048, replicas=1, max_batch=4, seed=seed)
+        rows.append(row)
+    return rows
+
+
+def admission_experiment(*, ladder: List[float], duration: float,
+                         max_queue: int, out_short: int,
+                         timeout_s: float, seed: int = 0) -> List[Dict]:
+    """Bounded vs unbounded admission over a stepped arrival-rate ladder.
+
+    The bounded config sheds at the door (no retry budget): under
+    *sustained* overload, retrying a queue-full rejection just re-enters
+    the queue — unbounded queueing with extra steps — so the deadline-
+    aware policy is to fail excess fast and keep admitted work inside its
+    latency budget.  The retryable path through the ladder (backoff →
+    reroute to a below-watermark sibling) is for transient spikes and is
+    regression-tested in tests/test_engine_bridge.py.
+    """
+    rows = []
+    for system, mq in (("admission_unbounded", 0),
+                       ("admission_bounded", max_queue)):
+        for rps in ladder:
+            row = run_condition(
+                system=system, prefill_chunk=8, max_queue=mq,
+                max_retries=0, rps=rps, duration=duration,
+                long_frac=0.0, short_words=8, out_short=out_short,
+                max_seq=128, replicas=2, max_batch=2,
+                timeout_s=timeout_s, seed=seed)
+            rows.append(row)
+    return rows
+
+
+def _sustained(row: Dict) -> bool:
+    return row["goodput_rps"] >= 0.85 * row["offered"]
+
+
+def _collapsed(row: Dict) -> bool:
+    return row["goodput_rps"] < 0.5 * row["offered"]
+
+
+def analyze(rows: List[Dict]) -> Dict:
+    by = {}
+    for r in rows:
+        by.setdefault(r["system"], []).append(r)
+    out: Dict = {}
+    mono = by.get("prefill_monolithic", [None])[0]
+    chunk = by.get("prefill_chunked", [None])[0]
+    if mono and chunk:
+        # headline: p99 TTFT of the interactive (decode) class — the
+        # traffic a monolithic prefill head-of-line-blocks.  The long
+        # class is reported alongside: its own TTFT is *worse* chunked
+        # (it pays its prefill in interleaved chunks), which is the
+        # standard chunked-prefill trade.
+        out["p99_ttft_monolithic_s"] = round(mono["ttft_short_p99"], 4)
+        out["p99_ttft_chunked_s"] = round(chunk["ttft_short_p99"], 4)
+        out["p99_ttft_long_monolithic_s"] = round(mono["ttft_long_p99"], 4)
+        out["p99_ttft_long_chunked_s"] = round(chunk["ttft_long_p99"], 4)
+        out["chunked_improves_p99_ttft"] = bool(
+            0 <= chunk["ttft_short_p99"] < mono["ttft_short_p99"])
+    unb = sorted(by.get("admission_unbounded", []), key=lambda r: r["rps"])
+    bnd = sorted(by.get("admission_bounded", []), key=lambda r: r["rps"])
+    if unb and bnd:
+        sustained_b = [r["offered"] for r in bnd if _sustained(r)]
+        sustained_u = [r["offered"] for r in unb if _sustained(r)]
+        collapse = next((r for r in unb if _collapsed(r)), None)
+        out["bounded_max_sustained_rps"] = round(max(sustained_b), 2) \
+            if sustained_b else 0.0
+        out["unbounded_max_sustained_rps"] = round(max(sustained_u), 2) \
+            if sustained_u else 0.0
+        out["unbounded_collapse_rps"] = round(collapse["offered"], 2) \
+            if collapse else None
+        out["bounded_goodput_at_top_rps"] = round(bnd[-1]["goodput_rps"], 2)
+        out["unbounded_goodput_at_top_rps"] = round(unb[-1]["goodput_rps"], 2)
+        out["bounded_beats_unbounded_goodput"] = bool(
+            bnd[-1]["goodput_rps"] > unb[-1]["goodput_rps"])
+        if collapse is not None:
+            at = next((r for r in bnd
+                       if abs(r["rps"] - collapse["rps"]) < 1e-9), None)
+            if at is not None:
+                # at the offered rate where unbounded queueing collapsed,
+                # bounded admission is capacity-bound, not queue-bound:
+                # goodput stays at the engine's ceiling instead of sinking
+                out["bounded_goodput_at_unbounded_collapse"] = round(
+                    at["goodput_rps"], 2)
+                out["unbounded_goodput_at_collapse"] = round(
+                    collapse["goodput_rps"], 2)
+                out["bounded_sustains_at_unbounded_collapse"] = bool(
+                    at["goodput_rps"] > collapse["goodput_rps"]
+                    and at["timeouts"] == 0)
+    return out
+
+
+def run(quick: bool = True, smoke: bool = False) -> List[Dict]:
+    if smoke:
+        pre = dict(rps=3.0, duration=8.0, long_frac=0.1, long_words=1400)
+        adm = dict(ladder=[6.0, 60.0], duration=6.0, max_queue=3,
+                   out_short=16, timeout_s=5.0)
+    elif quick:
+        pre = dict(rps=3.0, duration=15.0, long_frac=0.1, long_words=1400)
+        adm = dict(ladder=[6.0, 12.0, 24.0, 48.0, 96.0], duration=6.0,
+                   max_queue=3, out_short=16, timeout_s=8.0)
+    else:
+        pre = dict(rps=3.0, duration=30.0, long_frac=0.1, long_words=1400)
+        adm = dict(ladder=[6.0, 12.0, 24.0, 48.0, 96.0, 192.0],
+                   duration=12.0, max_queue=3, out_short=16, timeout_s=10.0)
+    rows = prefill_experiment(**pre)
+    rows += admission_experiment(**adm)
+    return rows
+
+
+def derive(rows: List[Dict]) -> List[str]:
+    a = analyze(rows)
+    out = []
+    for k, v in a.items():
+        out.append(f"sustained,{k},{v}")
+    if "chunked_improves_p99_ttft" in a:
+        out.append("sustained,claim,chunked_prefill_improves_p99_ttft,"
+                   f"{int(bool(a['chunked_improves_p99_ttft']))}")
+    if "bounded_beats_unbounded_goodput" in a:
+        out.append("sustained,claim,bounded_admission_beats_unbounded,"
+                   f"{int(bool(a['bounded_beats_unbounded_goodput']))}")
+    return out
+
+
+def write_record(rows: List[Dict], mode: str) -> str:
+    """Machine-readable record at the repo root (the acceptance artifact:
+    chunked-vs-monolithic p99 TTFT + bounded-vs-unbounded goodput with the
+    unbounded collapse point)."""
+    payload = {
+        "bench": "sustained_rps",
+        "mode": mode,
+        "analysis": analyze(rows),
+        "rows": rows,
+    }
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_sustained_rps.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=str)
+        f.write("\n")
+    return path
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny CI run; asserts the paper-claim budget checks")
+    p.add_argument("--full", action="store_true")
+    args = p.parse_args()
+    rows = run(quick=not args.full, smoke=args.smoke)
+    for r in rows:
+        print({k: (round(v, 4) if isinstance(v, float) else v)
+               for k, v in r.items()})
+    a = analyze(rows)
+    for line in derive(rows):
+        print(line)
+    path = write_record(rows, "smoke" if args.smoke
+                        else ("full" if args.full else "quick"))
+    print(f"wrote {os.path.normpath(path)}")
+    if args.smoke:
+        # CI budget checks — regressions to monolithic-stall or unbounded-
+        # queueing behaviour fail the job
+        assert a.get("chunked_improves_p99_ttft"), (
+            "chunked prefill no longer improves p99 TTFT over monolithic: "
+            f"{a}")
+        assert a.get("bounded_beats_unbounded_goodput"), (
+            "bounded admission no longer beats unbounded queueing on "
+            f"goodput at the top arrival rate: {a}")
+        print("smoke budget checks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -617,7 +617,21 @@ class ComponentController:
     def _flush_metrics(self) -> None:
         m = self.inst.metrics
         self._pub_dirty = False
+        # engine-backed instances piggyback data-plane gauges (wait-queue
+        # depth / admission saturation) into the same mirror write, so the
+        # global controller's InstanceView sees backpressure building
+        # before the queue hard-rejects (duck-typed: core never imports
+        # serving)
+        extra: Dict[str, Any] = {}
+        backend = self.runtime.engine_backends.get(self.inst.agent_type)
+        if backend is not None and hasattr(backend, "instance_metrics"):
+            try:
+                extra = dict(backend.instance_metrics(
+                    self.inst.instance_id) or {})
+            except Exception:  # noqa: BLE001 — telemetry must never wedge
+                extra = {}
         self.store.hset_many(f"metrics:{self.inst.instance_id}", {
+            **extra,
             "agent_type": self.inst.agent_type,
             "node": self.inst.node_id,
             "qsize": self.inst.qsize(),

@@ -48,6 +48,13 @@ class InstanceView:
     # failure-handling telemetry (mirrors InstanceMetrics)
     retries: int = 0
     cancelled: int = 0
+    # data-plane backpressure (engine-backed instances only): wait-queue
+    # depth, depth as a fraction of the admission bound (0.0 = unbounded or
+    # empty, >= 1.0 = hard-rejecting), and rejections so far.  Policies use
+    # the saturation watermark to shed/reroute *before* collapse.
+    engine_queue: int = 0
+    engine_saturation: float = 0.0
+    engine_rejects: int = 0
 
     def eta(self, now: float) -> float:
         rem = max(0.0, self.busy_until - now) if self.busy else 0.0
@@ -137,6 +144,9 @@ class ClusterView:
             inflight=int(m.get("inflight", 0)),
             retries=int(m.get("retries", 0)),
             cancelled=int(m.get("cancelled", 0)),
+            engine_queue=int(m.get("engine_queue", 0)),
+            engine_saturation=float(m.get("engine_saturation", 0.0)),
+            engine_rejects=int(m.get("engine_rejects", 0)),
         )
         old = self.instances.get(iid)
         self.instances[iid] = iv
@@ -287,7 +297,11 @@ class LoadBalancePolicy(Policy):
             if len(ivs) < 2:
                 continue
             etas = [iv.eta(view.now) for iv in ivs]
-            weights = [1.0 / (0.05 + e) for e in etas]
+            # a replica whose admission queue is saturated is about to
+            # hard-reject: spray almost nothing its way until it drains
+            weights = [(1.0 / (0.05 + e))
+                       * (0.01 if iv.engine_saturation >= 1.0 else 1.0)
+                       for iv, e in zip(ivs, etas)]
             s = sum(weights)
             act.route_weighted(agent_type, [iv.instance_id for iv in ivs],
                                [w / s for w in weights])

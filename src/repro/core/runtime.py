@@ -76,6 +76,21 @@ class Router:
         # routing benchmark compares exactly this), or lets an explicit
         # KVAffinityPolicy own the decision through `route` pins instead.
         self.kv_affinity = True
+        # admission-control shedding: when an engine-backed instance's wait
+        # queue is above this saturation fraction and a less-saturated
+        # sibling exists, route there instead — even past a session pin or
+        # KV-affinity hit (paying a cold prefill beats queueing into
+        # collapse).  None disables shedding.
+        self.shed_watermark: Optional[float] = 0.75
+
+    def _saturation_fn(self, agent_type: str):
+        """Backend queue-saturation probe, if the agent is engine-backed."""
+        if self.shed_watermark is None:
+            return None
+        backend = self.rt.engine_backends.get(agent_type)
+        if backend is None or not hasattr(backend, "saturation_of"):
+            return None
+        return backend.saturation_of
 
     def pin(self, session_id: str, agent_type: str, instance: str) -> None:
         self._pins[(session_id, agent_type)] = instance
@@ -98,13 +113,31 @@ class Router:
         if not live:
             return None
         spec = self.rt.spec_of(at)
+        sat_of = self._saturation_fn(at)
+
+        def shed(inst: AgentInstance) -> bool:
+            """True when ``inst`` is past the watermark and a fresher
+            sibling exists: fall through to load-based routing."""
+            if sat_of is None:
+                return False
+            if sat_of(inst.instance_id) < self.shed_watermark:
+                return False
+            return any(sat_of(i.instance_id) < self.shed_watermark
+                       for i in live if i.instance_id != inst.instance_id)
+
         # 1. explicit/stateful pin
         pin = self._pins.get((sid, at))
         if pin is not None:
             inst = self.rt.instance(pin)
             if inst is not None and inst.alive:
-                return inst
-            self.unpin(sid, at)
+                # stateful sessions are never shed: they may not migrate
+                # (§5), and falling through would re-pin them elsewhere
+                if spec.directives.stateful or not shed(inst):
+                    return inst
+                # saturated: shed this call (keep the pin — follow-ups
+                # return home once the queue drains)
+            else:
+                self.unpin(sid, at)
         if spec.directives.stateful and sid:
             inst = min(live, key=lambda i: i.load_score(self.rt.kernel.now()))
             self.pin(sid, at, inst.instance_id)  # sticky forever (§5)
@@ -117,22 +150,34 @@ class Router:
             info = self.rt.kv_registry.lookup(sid)
             if info is not None:
                 inst = self.rt.instance(info.instance_id)
-                if inst is not None and inst.alive and inst.agent_type == at:
+                if (inst is not None and inst.alive
+                        and inst.agent_type == at and not shed(inst)):
                     return inst
         # 2b. managed-state locality: prefer the node holding session state
         if self.kv_affinity and spec.directives.uses_managed_state and sid:
             names = self.rt.state_store.session_state_names(sid, at)
             if names:
                 node = self.rt.state_store.placement_of(sid, at, names[0])
-                local = [i for i in live if i.node_id == node]
+                local = [i for i in live if i.node_id == node
+                         and not shed(i)]
                 if local:
                     return min(local, key=lambda i: i.load_score(self.rt.kernel.now()))
+        # shed saturated replicas from default/weighted selection while a
+        # below-watermark sibling exists (backpressure-aware routing)
+        if sat_of is not None:
+            fresh = [i for i in live
+                     if sat_of(i.instance_id) < self.shed_watermark]
+            if fresh:
+                live = fresh
         # 3. weighted table installed by the global policy
         wt = self._weights.get(at)
         if wt is not None:
             iids, cum = wt
+            allowed = {i.instance_id for i in live}
             valid = [(i, c) for i, c in zip(iids, cum)
-                     if self.rt.instance(i) is not None and self.rt.instance(i).alive]
+                     if self.rt.instance(i) is not None
+                     and self.rt.instance(i).alive
+                     and (i in allowed or not sat_of)]
             if valid:
                 r = self._rng.random() * valid[-1][1]
                 for iid, c in valid:

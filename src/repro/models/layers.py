@@ -315,6 +315,115 @@ def kv_cache_update(cache_k: jnp.ndarray, cache_v: jnp.ndarray,
     return ck, cv
 
 
+def kv_cache_update_chunk(cache_k: jnp.ndarray, cache_v: jnp.ndarray,
+                          k: jnp.ndarray, v: jnp.ndarray,
+                          pos: jnp.ndarray, valid: jnp.ndarray,
+                          window: Optional[int]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Write up to T tokens' k/v ([B,T,Hkv,Dh]) at per-sequence positions
+    ``pos .. pos+T-1`` (ring-rolled if windowed).  ``valid`` [B,T] masks the
+    tail: an invalid position re-writes the cache's existing value, so a
+    sequence advancing fewer than T tokens (a decode slot piggybacked on a
+    prefill chunk) leaves the rest of its row untouched."""
+    B, C = cache_k.shape[0], cache_k.shape[1]
+    T = k.shape[1]
+    pos = jnp.broadcast_to(pos, (B,))
+    positions = pos[:, None] + jnp.arange(T)[None, :]          # [B,T]
+    slot = positions % C if window is not None else jnp.minimum(positions,
+                                                                C - 1)
+    b = jnp.arange(B)[:, None]
+    m = valid[..., None, None]
+    ck = cache_k.at[b, slot].set(
+        jnp.where(m, k.astype(cache_k.dtype), cache_k[b, slot]))
+    cv = cache_v.at[b, slot].set(
+        jnp.where(m, v.astype(cache_v.dtype), cache_v[b, slot]))
+    return ck, cv
+
+
+def chunk_decode_attention(q: jnp.ndarray, cache_k: jnp.ndarray,
+                           cache_v: jnp.ndarray, positions: jnp.ndarray,
+                           cfg: ModelConfig) -> jnp.ndarray:
+    """T-token attention: q:[B,T,H,Dh] over a *non-ring* cache
+    [B,C,Hkv,Dh] whose chunk k/v has already been written.
+
+    ``positions`` [B,T] is the logical position of each query token; query
+    t attends cache entries at positions <= positions[:, t] (slot index ==
+    logical position without a sliding window), which gives causal
+    attention within the chunk and full attention over the cached prefix —
+    the chunked-prefill generalization of :func:`decode_attention` (T=1
+    reduces to it).  Windowed (ring) caches must use
+    :func:`chunk_decode_attention_windowed` instead: a chunk write can
+    overwrite ring slots that earlier in-chunk queries still need.
+    """
+    B, C = cache_k.shape[0], cache_k.shape[1]
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    scale = cfg.head_dim_ ** -0.5
+    k = repeat_kv(cache_k, n_rep)
+    v = repeat_kv(cache_v, n_rep)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    slots = jnp.arange(C)
+    p = positions[..., None]                                   # [B,T,1]
+    valid = slots[None, None, :] <= p
+    logits = jnp.where(valid[:, None], logits, -1e30)          # [B,H,T,C]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+
+
+def chunk_decode_attention_windowed(q: jnp.ndarray, cache_k: jnp.ndarray,
+                                    cache_v: jnp.ndarray, k_new: jnp.ndarray,
+                                    v_new: jnp.ndarray, pos: jnp.ndarray,
+                                    valid_len: jnp.ndarray,
+                                    positions: jnp.ndarray, cfg: ModelConfig,
+                                    window: int) -> jnp.ndarray:
+    """Chunked attention for ring (sliding-window) caches, computed
+    against the **pre-write** cache plus the chunk's own k/v.
+
+    Writing a whole chunk into a ring of size C before attending is wrong
+    for the earlier in-chunk queries: a later chunk token can land on the
+    ring slot of a position still inside an earlier query's window.  So
+    each query t (logical position ``positions[:, t]``) attends
+
+    * the pre-write cache, whose slot ``s`` holds the largest logical
+      position < pos congruent to ``s`` (mod C), masked to the query's
+      window, plus
+    * the chunk itself, causally (``t' <= t``) and window-masked, limited
+      to each sequence's ``valid`` length.
+
+    The ring write (:func:`kv_cache_update_chunk`) happens *after* this.
+    """
+    B, C = cache_k.shape[0], cache_k.shape[1]
+    T = k_new.shape[1]
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    scale = cfg.head_dim_ ** -0.5
+    pos = jnp.broadcast_to(pos, (B,))
+    p = positions[..., None]                                   # [B,T,1]
+    win = min(window, C)
+    # pre-write holder of ring slot s: largest position < pos with
+    # position % C == s (negative -> the slot was never written)
+    slots = jnp.arange(C)[None, :]
+    h_old = pos[:, None] - 1 - ((pos[:, None] - 1 - slots) % C)  # [B,C]
+    valid_old = (h_old[:, None, :] >= 0) & (h_old[:, None, :] > p - win)
+    k_c = repeat_kv(cache_k, n_rep)
+    v_c = repeat_kv(cache_v, n_rep)
+    log_c = jnp.einsum("bqhd,bkhd->bhqk", q, k_c,
+                       preferred_element_type=jnp.float32) * scale
+    log_c = jnp.where(valid_old[:, None], log_c, -1e30)
+    # in-chunk: causal, window-masked, clipped to the sequence's valid len
+    t_new = jnp.arange(T)
+    p_new = pos[:, None] + t_new[None, :]                      # [B,T]
+    valid_new = ((p_new[:, None, :] <= p) & (p_new[:, None, :] > p - win)
+                 & (t_new[None, None, :] < valid_len[:, None, None]))
+    k_n = repeat_kv(k_new, n_rep)
+    v_n = repeat_kv(v_new, n_rep)
+    log_n = jnp.einsum("bqhd,bkhd->bhqk", q, k_n,
+                       preferred_element_type=jnp.float32) * scale
+    log_n = jnp.where(valid_new[:, None], log_n, -1e30)
+    logits = jnp.concatenate([log_c, log_n], axis=-1)          # [B,H,T,C+T]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    vals = jnp.concatenate([v_c, v_n], axis=1)                 # [B,C+T,...]
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(vals.dtype), vals)
+
+
 def decode_attention(q: jnp.ndarray, cache_k: jnp.ndarray, cache_v: jnp.ndarray,
                      pos: jnp.ndarray, cfg: ModelConfig,
                      window: Optional[int] = None,

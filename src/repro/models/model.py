@@ -119,6 +119,12 @@ class Model:
     decode_step: Callable[[dict, jnp.ndarray, dict], Tuple[jnp.ndarray, dict]]
     init_cache: Callable[[int, int], dict]
     input_specs: Callable[[InputShape], Dict[str, Any]]
+    # decode_chunk(params, tokens [B,T], valid_len [B], cache) -> (logits
+    # [B,T,V], cache): T tokens in one forward, each sequence advancing by
+    # valid_len[b] <= T positions — the serving engine's chunked-prefill
+    # fast path.  None for families without a fused chunk step (encoder-
+    # decoder; recurrent families fall back to per-token masked decode).
+    decode_chunk: Optional[Callable[..., Tuple[jnp.ndarray, dict]]] = None
 
     def param_shapes(self) -> dict:
         return jax.eval_shape(self.init, jax.random.PRNGKey(0))
@@ -172,6 +178,9 @@ def build_model(cfg: ModelConfig, attention_impl: str = "xla",
                 moe_impl=moe_impl, **kw),
             decode_step=lambda params, tok, cache: transformer.decode_step(
                 params, cfg, tok, cache, attention_impl=attention_impl,
+                moe_impl=moe_impl),
+            decode_chunk=lambda params, toks, n, cache: transformer.decode_chunk(
+                params, cfg, toks, n, cache, attention_impl=attention_impl,
                 moe_impl=moe_impl),
             init_cache=functools.partial(transformer.init_cache, cfg),
             input_specs=lambda shape: _token_specs(shape, cfg),

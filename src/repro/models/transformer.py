@@ -182,3 +182,52 @@ def decode_step(params: dict, cfg: ModelConfig, token: jnp.ndarray,
     x = L.apply_norm(x, params["final_norm"], cfg)
     logits = L.unembed(x[:, 0], params["embed"], cfg)
     return logits, {"k": ks, "v": vs, "pos": pos + 1}
+
+
+def decode_chunk(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                 valid_len: jnp.ndarray, cache: dict,
+                 attention_impl: str = "xla",
+                 moe_impl: str = "einsum") -> Tuple[jnp.ndarray, dict]:
+    """T tokens ([B,T] int32) against the KV cache in one forward.
+
+    The chunked-prefill primitive: each sequence advances by
+    ``valid_len[b] <= T`` positions — a prefilling slot consumes a prompt
+    chunk while a decoding slot piggybacked in the same batch advances one
+    token (valid_len 1) and an idle slot none (valid_len 0; its cache row
+    and position are untouched).  Causal within the chunk, full attention
+    over the cached prefix.  Returns (logits [B,T,V], cache); callers read
+    row ``valid_len[b]-1`` for the next-token distribution.
+    """
+    B, T = tokens.shape
+    pos = jnp.broadcast_to(cache["pos"], (B,))
+    x = L.embed(tokens, params["embed"]).astype(cfg.jnp_dtype)
+    positions = pos[:, None] + jnp.arange(T)[None, :]          # [B,T]
+    valid = jnp.arange(T)[None, :] < valid_len[:, None]        # [B,T]
+    W = cfg.sliding_window
+
+    def step(carry, xs):
+        x = carry
+        layer_p, ck, cv = xs
+        h = L.apply_norm(x, layer_p["attn_norm"], cfg)
+        q, k, v = L.attention_qkv(h, layer_p["attn"], cfg, positions)
+        if W:
+            # ring caches: attend the pre-write cache + the chunk itself
+            # (a chunk write can clobber ring slots earlier in-chunk
+            # queries still need), then write
+            o = L.chunk_decode_attention_windowed(
+                q, ck, cv, k, v, pos, valid_len, positions, cfg, window=W)
+            ck, cv = L.kv_cache_update_chunk(ck, cv, k, v, pos, valid, W)
+        else:
+            ck, cv = L.kv_cache_update_chunk(ck, cv, k, v, pos, valid, W)
+            o = L.chunk_decode_attention(q, ck, cv, positions, cfg)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, layer_p["attn"]["wo"])
+        h = L.apply_norm(x, layer_p["mlp_norm"], cfg)
+        y, _aux = _ffn(h, layer_p, cfg, moe_impl)
+        x = x + y
+        return x, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(step, x, (params["layers"], cache["k"],
+                                         cache["v"]))
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    logits = L.unembed(x, params["embed"], cfg)                # [B,T,V]
+    return logits, {"k": ks, "v": vs, "pos": pos + valid_len}

@@ -1,4 +1,4 @@
-from .batching import Request, WaitQueue, bucket_len
+from .batching import EngineOverloaded, Request, WaitQueue, bucket_len
 from .bridge import (EngineBridge, EngineMethod, GenerationResult,
                      hash_tokenize, register_engine_agent)
 from .engine import EngineMetrics, InferenceEngine, get_slot, set_slot
@@ -6,7 +6,8 @@ from .kv_cache import PagedKVPool, SessionPages, StateCachePool
 from .pool import EnginePool, register_engine_pool
 from .sampler import SamplingParams, sample
 
-__all__ = ["EngineBridge", "EngineMethod", "EngineMetrics", "EnginePool",
+__all__ = ["EngineBridge", "EngineMethod", "EngineMetrics",
+           "EngineOverloaded", "EnginePool",
            "GenerationResult", "InferenceEngine", "PagedKVPool", "Request",
            "SamplingParams", "SessionPages", "StateCachePool", "WaitQueue",
            "bucket_len", "get_slot", "hash_tokenize",

@@ -2,12 +2,21 @@
 
 Admission: priority first, then FCFS (NALAR's local controllers can reorder
 by installing a different comparator — the same LocalSchedule idea applied
-to the engine's waiting queue).  Prompt lengths are padded to power-of-two
-buckets so prefill compiles a bounded set of shapes.
+to the engine's waiting queue).  The wait queue is a binary heap (O(log n)
+push/pop instead of the seed's O(n) scan) and can be *bounded*: a full
+queue rejects the submission with :class:`EngineOverloaded`, which the
+engine bridge propagates as a retryable failure into the runtime's retry
+ladder — backpressure instead of unbounded queue growth, the baseline
+failure mode the paper's serving claims are measured against.
+
+Prompt lengths are padded to power-of-two buckets so monolithic prefill
+compiles a bounded set of shapes (the chunked-prefill path feeds exact
+tokens through the decode step and needs no buckets).
 """
 
 from __future__ import annotations
 
+import heapq
 import itertools
 import threading
 from dataclasses import dataclass, field
@@ -18,6 +27,15 @@ import numpy as np
 from .sampler import SamplingParams
 
 _req_ids = itertools.count()
+
+
+class EngineOverloaded(RuntimeError):
+    """Admission rejected: the engine's bounded wait queue is at capacity.
+
+    Retryable by design — the component controller's retry ladder backs off
+    and re-submits, and on budget exhaustion the global RetryPolicy reroutes
+    the future to a less-loaded replica.
+    """
 
 
 @dataclass
@@ -37,6 +55,9 @@ class Request:
     # filled during execution
     generated: List[int] = field(default_factory=list)
     finished: bool = False
+    # wall-clock (time.monotonic) stamps taken by the engine itself, so TTFT
+    # is measured on one clock regardless of which kernel created the request
+    submitted_wall: float = -1.0
     first_token_at: float = -1.0
     finished_at: float = -1.0
     prefix_reused_tokens: int = 0
@@ -66,24 +87,53 @@ def bucket_len(n: int, minimum: int = 16) -> int:
 
 
 class WaitQueue:
-    def __init__(self) -> None:
+    """Heap-ordered admission queue, optionally bounded.
+
+    ``order_key(req)`` maps a request to a sort key (smaller pops first);
+    the key is evaluated at push time, so installing a new comparator
+    reorders future pushes only.  ``maxsize == 0`` means unbounded (the
+    seed behaviour); a bounded queue raises :class:`EngineOverloaded` on
+    overflow and counts the rejection.
+    """
+
+    def __init__(self, maxsize: int = 0) -> None:
         self._lock = threading.Lock()
-        self._items: List[Request] = []
+        self._heap: List[tuple] = []
+        self._seq = itertools.count()          # FIFO tie-break, stable heap
+        self.maxsize = int(maxsize)
+        self.rejected = 0
         self.order_key: Callable[[Request], Any] = (
             lambda r: (-r.priority, r.submitted_at))
 
     def push(self, req: Request) -> None:
         with self._lock:
-            self._items.append(req)
+            if self.maxsize and len(self._heap) >= self.maxsize:
+                self.rejected += 1
+                raise EngineOverloaded(
+                    f"engine wait queue full ({len(self._heap)}/"
+                    f"{self.maxsize}); shed or retry elsewhere")
+            heapq.heappush(self._heap, (self.order_key(req), next(self._seq),
+                                        req))
 
     def pop_next(self) -> Optional[Request]:
         with self._lock:
-            if not self._items:
+            if not self._heap:
                 return None
-            best = min(self._items, key=self.order_key)
-            self._items.remove(best)
-            return best
+            return heapq.heappop(self._heap)[2]
+
+    def clear(self) -> int:
+        with self._lock:
+            n = len(self._heap)
+            self._heap.clear()
+            return n
+
+    def saturation(self) -> float:
+        """Queue depth as a fraction of capacity (0.0 when unbounded)."""
+        with self._lock:
+            if not self.maxsize:
+                return 0.0
+            return len(self._heap) / float(self.maxsize)
 
     def __len__(self) -> int:
         with self._lock:
-            return len(self._items)
+            return len(self._heap)

@@ -27,6 +27,7 @@ here, keeping the core runtime importable without JAX.
 from __future__ import annotations
 
 import threading
+import time
 import zlib
 from collections import deque
 from dataclasses import dataclass, field, replace
@@ -146,6 +147,13 @@ class EngineBridge:
             self._pending = 0
             migs = list(self._migrate_pending.values())
             self._migrate_pending.clear()
+        try:
+            # drop queued/in-slot work and clear per-slot residue (pending
+            # prompts) so nothing of the dead attempts leaks into recycled
+            # slots if the engine is ever stepped again
+            self.engine.abort_all()
+        except Exception:  # noqa: BLE001 — engine may be the thing that died
+            pass
         for fut, ctrl in dead:
             ctrl.complete_async(fut, error=error)
         for mig in migs:
@@ -275,6 +283,10 @@ class EngineBridge:
         req = Request.make(prompt, session_id=sid,
                            sampling=sampling, priority=fut.meta.priority,
                            now=self.rt.kernel.now(), fallback_prompt=fallback)
+        # stamp the wall clock here, not in engine.submit: TTFT must count
+        # from when the bridge hands the request over, even if the engine
+        # is mid-step when the submission lands
+        req.submitted_wall = time.monotonic()
         # run-id fence: if the replica dies and the future is retried on a
         # sibling, a late completion from this engine must not resolve it
         run_id = fut._run_id
@@ -313,7 +325,18 @@ class EngineBridge:
                 raise RuntimeError("engine bridge is stopped")
             self._pending += 1
             self._inflight[req.request_id] = (fut, controller)
+        try:
+            # may raise EngineOverloaded: the bounded wait queue is full.
+            # The exception travels back through launch() into the retry
+            # ladder — a *retryable* failure (backoff locally, escalate to
+            # the RetryPolicy for a reroute) instead of unbounded queueing.
             self.engine.submit_async(req, on_done)
+        except BaseException:
+            with self._cv:
+                self._pending -= 1
+                self._inflight.pop(req.request_id, None)
+            raise
+        with self._cv:
             self._cv.notify_all()
 
     # ------------------------------------------------------------ pump loop
@@ -338,6 +361,24 @@ class EngineBridge:
         with self._cv:
             t["bridge_inflight"] = self._pending
         return t
+
+    # ------------------------------------------------- admission telemetry
+    def saturation_of(self, instance_id: str = "") -> float:
+        """Wait-queue saturation of the backing engine (Router shed hook)."""
+        return self.engine.saturation()
+
+    def instance_metrics(self, instance_id: str = "") -> Dict[str, Any]:
+        """Engine data-plane gauges merged into the controller's metrics
+        mirror each publish, so the queue-depth watermark reaches the
+        ``InstanceView`` the global policies act on (EngineMetrics →
+        bridge → view)."""
+        e = self.engine
+        return {
+            "engine_queue": len(e.queue),
+            "engine_active": int(e._active_mask.sum()),
+            "engine_saturation": e.saturation(),
+            "engine_rejects": e.queue.rejected,
+        }
 
 
 @dataclass
@@ -368,9 +409,18 @@ class EngineMethod(EngineBackedMethod):
                 " ".join(str(x) for x in a), vocab)
 
     def capacity(self) -> int:
+        e = self.bridge.engine
+        if e.max_queue:
+            # bounded admission: overshoot slots+queue so the engine's
+            # admission bound — not an invisible controller-side buffer —
+            # is what says no.  Overflow fails fast through the retry
+            # ladder (backoff / reroute / shed) instead of parking
+            # upstream until it times out, which is exactly the unbounded
+            # pathology the bound exists to prevent.
+            return e.max_batch * 2 + e.max_queue
         # keep the wait queue primed one batch deep so freed slots refill
         # without a controller round-trip
-        return self.bridge.engine.max_batch * 2
+        return e.max_batch * 2
 
     def launch(self, batch: List[Future], controller) -> None:
         for fut in batch:

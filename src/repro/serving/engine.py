@@ -7,10 +7,21 @@ cache pool, which is precisely the LMCache-hook integration of §4.3.2.
 
 Execution model:
   * ``max_batch`` slots share a stacked per-slot cache (model.init_cache);
-  * admission pulls from a priority wait-queue; a new request either
-    resumes its session's cache from the pool (prefix reuse — the paper's
-    motivating win for session stickiness/migration) or runs prefill;
-  * each ``step()`` runs one batched decode for every active slot;
+  * admission pulls from a bounded, heap-ordered priority wait queue; a new
+    request either resumes its session's cache from the pool (prefix reuse —
+    the paper's motivating win for session stickiness/migration) or starts a
+    **chunked prefill**: the prompt is admitted into a blank cache row and
+    consumed ``prefill_chunk`` tokens per step, piggybacked onto the same
+    batched decode the active slots run — a long prompt therefore never
+    head-of-line-blocks the batch the way the legacy monolithic (left-padded
+    bucket) prefill does, and no pad token ever enters the KV cache;
+  * each ``step()`` runs one batched step: every decoding slot advances one
+    token while prefilling slots consume up to a chunk of prompt (masked
+    sub-steps over the shared jitted decode fn);
+  * a bounded wait queue (``max_queue``) rejects overflow with
+    ``EngineOverloaded`` — backpressure the bridge turns into a retryable
+    failure instead of unbounded queue growth — and exports a saturation
+    watermark so routers/policies shed load before collapse;
   * finished sessions write their cache back to the pool so follow-up
     requests in the same session skip recomputation.
 """
@@ -19,7 +30,8 @@ from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass, field
+import zlib
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -28,9 +40,15 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..models.model import Model
-from .batching import Request, WaitQueue, bucket_len
+from .batching import EngineOverloaded, Request, WaitQueue, bucket_len
 from .kv_cache import PagedKVPool, StateCachePool
 from .sampler import SamplingParams, sample
+
+# model families whose decode step, run token-by-token from a blank cache
+# row, is exactly prefill (causal attention / recurrent state).  Encoder-
+# decoder ("audio") models compute cross-attention memory only at prefill
+# and must keep the monolithic path.
+_CHUNKABLE_FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm")
 
 
 @dataclass
@@ -43,6 +61,7 @@ class EngineMetrics:
     prefix_hits: int = 0
     tokens_generated: int = 0
     prefill_tokens: int = 0
+    admission_rejects: int = 0
 
 
 def _cache_slot_axis(key: str) -> int:
@@ -86,7 +105,10 @@ class InferenceEngine:
     def __init__(self, model: Model, params: dict, *, max_batch: int = 8,
                  max_seq: int = 512, instance_id: str = "engine:0",
                  kv_registry=None, pool_pages: int = 0,
-                 page_size: int = 64, rng_seed: int = 0) -> None:
+                 page_size: int = 64, rng_seed: int = 0,
+                 prefill_chunk: int = 8, max_queue: int = 0,
+                 queue_watermark: float = 0.75,
+                 finished_cap: int = 8192) -> None:
         self.model = model
         self.cfg: ModelConfig = model.cfg
         self.params = params
@@ -95,14 +117,32 @@ class InferenceEngine:
         self.instance_id = instance_id
         self.kv_registry = kv_registry
         self.metrics = EngineMetrics()
-        self.queue = WaitQueue()
-        self._rng = jax.random.PRNGKey(rng_seed)
+        # prompt tokens consumed per slot per step while prefilling;
+        # 0 = legacy monolithic bucket prefill at admission
+        self.prefill_chunk = int(prefill_chunk)
+        self.max_queue = int(max_queue)
+        # saturation fraction above which routers should shed new sessions
+        # to a sibling replica (surfaced via telemetry(); advisory only)
+        self.queue_watermark = queue_watermark
+        self.finished_cap = int(finished_cap)
+        self.queue = WaitQueue(maxsize=self.max_queue)
+        self._rng = jax.random.PRNGKey(rng_seed)     # base of request streams
         self._lock = threading.RLock()
+        # completion plumbing has its own lock: submissions and drains must
+        # never serialize behind a long step (a monolithic prefill used to
+        # block submit_async for its whole duration)
+        self._done_lock = threading.Lock()
 
         # per-slot state
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.cache = model.init_cache(max_batch, max_seq)
         self._active_mask = np.zeros(max_batch, bool)
+        # slot -> prompt tokens not yet consumed (resumed suffixes and
+        # chunked prefills); always cleared when the slot is vacated
+        self._pending_prompt: Dict[int, List[int]] = {}
+        # request_id -> private PRNG stream (stochastic sampling only)
+        self._req_rng: Dict[str, jax.Array] = {}
+        self._blank_row_cache: Optional[dict] = None
 
         # session cache pool (paged KV for attention families, O(1) state
         # for ssm/hybrid) + NALAR hint hook
@@ -117,7 +157,25 @@ class InferenceEngine:
         if kv_registry is not None:
             kv_registry.register_hook(instance_id, self.pool.on_hint)
 
-        self._decode_fn = jax.jit(model.decode_step)
+        def _masked_decode(params, tokens, cache, mask):
+            # one batched decode where only masked-in slots advance: the
+            # cache (and pos) of a masked-out slot is untouched, so prompt
+            # chunks and single decode tokens share one compiled step
+            logits, new = model.decode_step(params, tokens, cache)
+            out = {}
+            for k in new:
+                ax = _cache_slot_axis(k)
+                shp = [1] * new[k].ndim
+                shp[ax] = new[k].shape[ax]
+                out[k] = jnp.where(mask.reshape(shp), new[k], cache[k])
+            return logits, out
+
+        self._masked_decode = jax.jit(_masked_decode)
+        # fused chunk step (transformer families): a whole prompt chunk is
+        # one forward instead of prefill_chunk sequential decodes.  Two
+        # compiled shapes only: T=1 (decode-only steps) and T=prefill_chunk.
+        self._decode_chunk = (jax.jit(model.decode_chunk)
+                              if model.decode_chunk is not None else None)
         self._prefill_cache: Dict[int, Callable] = {}
 
         # async completion plumbing (NALAR bridge): request_id -> callback,
@@ -128,7 +186,15 @@ class InferenceEngine:
 
     # ----------------------------------------------------------- submission
     def submit(self, req: Request) -> str:
-        self.queue.push(req)
+        """Queue ``req``.  Raises :class:`EngineOverloaded` when the bounded
+        wait queue is at capacity (backpressure — callers retry or shed)."""
+        if req.submitted_wall < 0:
+            req.submitted_wall = time.monotonic()
+        try:
+            self.queue.push(req)
+        except EngineOverloaded:
+            self.metrics.admission_rejects += 1
+            raise
         return req.request_id
 
     def submit_async(self, req: Request,
@@ -136,20 +202,26 @@ class InferenceEngine:
         """Queue ``req``; ``on_done(req)`` fires from ``drain_completions``
         after the request finishes (the NALAR future-resolution hook)."""
         if on_done is not None:
-            with self._lock:
+            with self._done_lock:
                 self._callbacks[req.request_id] = on_done
-        return self.submit(req)
+        try:
+            return self.submit(req)
+        except BaseException:
+            if on_done is not None:     # rejected: no completion will fire
+                with self._done_lock:
+                    self._callbacks.pop(req.request_id, None)
+            raise
 
     def poll_finished(self) -> List[Request]:
         """Requests finished since the last poll/drain (no callbacks fired)."""
-        with self._lock:
+        with self._done_lock:
             out, self._finished = self._finished, []
         return out
 
     def drain_completions(self) -> int:
         """Fire completion callbacks for finished requests.  Called by the
         bridge pump thread after each step(), outside the engine lock."""
-        with self._lock:
+        with self._done_lock:
             done, self._finished = self._finished, []
             cbs = [(r, self._callbacks.pop(r.request_id, None)) for r in done]
         for req, cb in cbs:
@@ -178,11 +250,32 @@ class InferenceEngine:
         return req
 
     # ------------------------------------------------------------ admission
-    def _prefill(self, req: Request):
+    def saturation(self) -> float:
+        """Wait-queue depth as a fraction of capacity (0.0 if unbounded)."""
+        return self.queue.saturation()
+
+    def overloaded(self) -> bool:
+        """Above the shed watermark: routers should prefer a sibling."""
+        return bool(self.max_queue) and self.saturation() >= self.queue_watermark
+
+    def _prefill(self, req: Request, align: str = "left"):
+        """Monolithic bucketed prefill (legacy path + migration replay).
+
+        ``align="right"`` places the prompt at the start of the bucket:
+        under causal attention the trailing pads never contaminate the
+        first ``len(prompt)`` cache positions, so callers that only need
+        the cache (``warm_session``) get an exact-token prefix.  The
+        left-aligned default keeps the final position's logits real, at
+        the cost of pad positions entering the cache (the legacy
+        exposure chunked prefill removes).
+        """
         S = len(req.prompt)
         bucket = min(bucket_len(S), self.max_seq)
         toks = np.zeros((1, bucket), np.int32)
-        toks[0, -S:] = req.prompt      # left-pad so last position is real
+        if align == "right":
+            toks[0, :S] = req.prompt
+        else:
+            toks[0, -S:] = req.prompt      # left-pad so last position is real
         batch = {"tokens": jnp.asarray(toks)}
         for k, v in req.extras.items():
             batch[k] = jnp.asarray(v[None] if v.ndim == 2 else v)
@@ -223,14 +316,54 @@ class InferenceEngine:
                 row[key] = jnp.zeros(shp, self.cache[key].dtype)
         return row, tokens
 
+    def _blank_row(self) -> dict:
+        """Zeroed single-slot cache row for chunked-prefill admission
+        (recurrent families accumulate state unconditionally, so a recycled
+        slot must never start from its previous occupant's row)."""
+        if self._blank_row_cache is None:
+            row = {}
+            for k, v in self.cache.items():
+                ax = _cache_slot_axis(k)
+                shp = tuple(s for i, s in enumerate(v.shape) if i != ax)
+                row[k] = jnp.zeros(shp, v.dtype)
+            self._blank_row_cache = row
+        return self._blank_row_cache
+
+    def _chunked_for(self, req: Request) -> bool:
+        if self.prefill_chunk <= 0 or req.extras:
+            return False
+        return self.cfg.family in _CHUNKABLE_FAMILIES
+
+    def _request_key(self, req: Request) -> jax.Array:
+        sp = req.sampling
+        salt = (sp.seed if sp.seed is not None
+                else zlib.crc32(req.request_id.encode()))
+        return jax.random.fold_in(self._rng, int(salt) & 0x7FFFFFFF)
+
+    def _sample_slot(self, req: Request, logits, row: int,
+                     greedy: np.ndarray) -> int:
+        """Sample one token for ``row`` with the request's *own* params,
+        exactly once.  Greedy requests take the batch argmax and burn no
+        RNG; stochastic requests draw from their private per-request
+        stream, so batch composition never perturbs a request's samples."""
+        sp = req.sampling
+        if sp.temperature <= 0.0:
+            return int(greedy[row])
+        key = self._req_rng.get(req.request_id)
+        if key is None:
+            key = self._request_key(req)
+        key, sub = jax.random.split(key)
+        self._req_rng[req.request_id] = key
+        return int(np.asarray(sample(logits[row:row + 1], sp, sub))[0])
+
     def _admit(self) -> None:
-        now = time.monotonic()
         for slot in range(self.max_batch):
             if self._active_mask[slot]:
                 continue
             req = self.queue.pop_next()
             if req is None:
                 return
+            now = time.monotonic()
             resumed = None
             if req.session_id:
                 resumed = self._try_resume(req)
@@ -238,29 +371,59 @@ class InferenceEngine:
                 # SSM/hybrid: resumed state + run prompt incrementally is
                 # equivalent to prefill; simplest correct path: prefill anyway
                 resumed = None
+            if resumed is not None:
+                _row, cached = resumed
+                if cached + len(req.prompt) > self.max_seq - 1:
+                    # the resumed suffix would run past the slot's cache
+                    # capacity mid-prompt; rebuild the (bounded) full
+                    # context cold instead of overflowing the ring
+                    resumed = None
             if resumed is None and req.fallback_prompt is not None:
                 # The caller sent only a continuation suffix expecting a warm
                 # session cache, but the cache is cold (evicted or migrated):
                 # rebuild the full context in one prefill instead.
                 req.prompt = req.fallback_prompt
+            if len(req.prompt) > self.max_seq - 1:
+                req.prompt = req.prompt[-(self.max_seq - 1):]
             if resumed is not None:
                 row_cache, tokens = resumed
                 req.prefix_reused_tokens = tokens
                 self.metrics.prefix_hits += 1
                 # feed the prompt as additional decode steps (short suffix)
                 self.cache = set_slot(self.cache, slot, row_cache)
-                self.slots[slot] = req
-                self._active_mask[slot] = True
-                self._pending_prompt = getattr(self, "_pending_prompt", {})
-                self._pending_prompt[slot] = list(req.prompt)
+                self._pending_prompt[slot] = [int(t) for t in req.prompt]
+            elif self._chunked_for(req):
+                # chunked prefill: blank row now, prompt consumed by step()
+                # in prefill_chunk-sized pieces piggybacked on decode
+                self.cache = set_slot(self.cache, slot, self._blank_row())
+                self._pending_prompt[slot] = [int(t) for t in req.prompt]
+                self.metrics.prefills += 1
+                self.metrics.prefill_tokens += len(req.prompt)
             else:
                 logits, row_cache = self._prefill(req)
-                tok = int(np.asarray(sample(logits, req.sampling, self._next_rng()))[0])
+                greedy = np.asarray(jnp.argmax(logits, axis=-1))
+                tok = self._sample_slot(req, logits, 0, greedy)
                 req.generated.append(tok)
-                req.first_token_at = now
+                # TTFT: the first token exists *now*, after the prefill
+                # compute — not at admission time
+                req.first_token_at = time.monotonic()
                 self.cache = set_slot(self.cache, slot, row_cache)
-                self.slots[slot] = req
-                self._active_mask[slot] = True
+                self.metrics.tokens_generated += 1
+                if (len(req.generated) >= req.sampling.max_new_tokens
+                        or tok == req.sampling.eos_token):
+                    # stop conditions apply to the admission-sampled token
+                    # too: a max_new_tokens=1 (or instant-eos) request must
+                    # not decode a second token
+                    self.slots[slot] = req
+                    self._active_mask[slot] = True
+                    self._finish_slot(slot, time.monotonic())
+                    if self.kv_registry is not None:
+                        self.kv_registry.touch(req.session_id,
+                                               self.instance_id,
+                                               len(req.prompt), now)
+                    continue
+            self.slots[slot] = req
+            self._active_mask[slot] = True
             if self.kv_registry is not None:
                 self.kv_registry.touch(req.session_id, self.instance_id,
                                        len(req.prompt), now)
@@ -286,9 +449,19 @@ class InferenceEngine:
         toks = toks[-(self.max_seq - 1):]       # respect the context budget
         req = Request.make(toks, session_id=session_id)
         now = time.monotonic()
+        W = self.cfg.sliding_window
+        bucket = min(bucket_len(len(toks)), self.max_seq)
         with self._lock:
-            _logits, row_cache = self._prefill(req)
-            tokens = int(np.asarray(row_cache["pos"]).reshape(-1)[0])
+            if isinstance(self.pool, PagedKVPool) and (not W or bucket <= W):
+                # right-aligned prefill: under causal attention the trailing
+                # pads never touch the first len(toks) positions, so the
+                # stored prefix is exact — no pad K/V enters the session
+                # cache (the legacy left-pad exposure)
+                _logits, row_cache = self._prefill(req, align="right")
+                tokens = len(toks)
+            else:
+                _logits, row_cache = self._prefill(req)
+                tokens = int(np.asarray(row_cache["pos"]).reshape(-1)[0])
             if isinstance(self.pool, PagedKVPool):
                 if tokens > self.max_seq:
                     return 0
@@ -304,56 +477,151 @@ class InferenceEngine:
         return tokens
 
     # ----------------------------------------------------------------- step
-    def _next_rng(self) -> jax.Array:
-        self._rng, sub = jax.random.split(self._rng)
-        return sub
-
     def step(self) -> int:
-        """Admit + one batched decode step.  Returns #active sequences."""
+        """Admit + one piggybacked batched step.
+
+        Every decoding slot advances one token; prefilling slots consume up
+        to ``prefill_chunk`` prompt tokens via masked sub-steps against the
+        same compiled decode fn.  Returns #active sequences.
+        """
         with self._lock:
             self._admit()
             active = [i for i in range(self.max_batch) if self._active_mask[i]]
             if not active:
                 self.metrics.queued = len(self.queue)
                 return 0
-            tokens = np.zeros((self.max_batch,), np.int32)
-            pending = getattr(self, "_pending_prompt", {})
-            for i in active:
-                req = self.slots[i]
-                if i in pending and pending[i]:
-                    tokens[i] = pending[i].pop(0)
-                    if not pending[i]:
-                        del pending[i]
-                else:
-                    tokens[i] = req.generated[-1] if req.generated else 0
-            logits, self.cache = self._decode_fn(self.params,
-                                                 jnp.asarray(tokens),
-                                                 self.cache)
-            self.metrics.decode_steps += 1
-            sampled = sample(logits, SamplingParams(), self._next_rng())
+            pending = self._pending_prompt
+            prefilling = any(pending.get(i) for i in active)
+            budget = max(1, self.prefill_chunk) if prefilling else 1
+            if self._decode_chunk is not None:
+                sampled = self._step_fused(active, budget)
+            else:
+                sampled = self._step_masked(active, budget)
+            pos_arr = np.asarray(self.cache["pos"])
             now = time.monotonic()
             for i in active:
                 req = self.slots[i]
-                if i in pending:     # still consuming a resumed prompt
+                if req is None:
                     continue
-                tok = int(np.asarray(sampled)[i])
-                if req.sampling.temperature > 0:
-                    tok = int(np.asarray(sample(
-                        logits[i:i + 1], req.sampling, self._next_rng()))[0])
-                if req.generated and req.first_token_at < 0:
-                    req.first_token_at = now
-                req.generated.append(tok)
-                self.metrics.tokens_generated += 1
-                done = (len(req.generated) >= req.sampling.max_new_tokens
-                        or tok == req.sampling.eos_token)
-                pos_i = int(np.asarray(self.cache["pos"])[i])
-                if pos_i >= self.max_seq - 1:
+                done = False
+                if i in sampled:
+                    tok = req.generated[-1]
+                    done = (len(req.generated) >= req.sampling.max_new_tokens
+                            or tok == req.sampling.eos_token)
+                if pos_arr[i] >= self.max_seq - 1:
                     done = True
                 if done:
                     self._finish_slot(i, now)
             self.metrics.queued = len(self.queue)
             self.metrics.active = int(self._active_mask.sum())
             return len(active)
+
+    def _step_fused(self, active: List[int], budget: int) -> set:
+        """One fused chunk forward: prefilling slots consume up to
+        ``budget`` prompt tokens, decoding slots advance one, idle slots
+        none.  The chunk width is sized to the actual need and rounded up
+        to a power of two, so a short prompt never pays a full-width chunk
+        step and the compiled-shape set stays logarithmic.  Returns the
+        slots that produced a token."""
+        pending = self._pending_prompt
+        need = 1
+        for i in active:
+            q = pending.get(i)
+            if q:
+                need = max(need, min(len(q), budget))
+        # next power of two, clipped to the chunk budget (need <= budget,
+        # so T >= need always holds and the chunk is consumed in full)
+        T = min(1 << (need - 1).bit_length(), budget)
+        toks = np.zeros((self.max_batch, T), np.int32)
+        valid = np.zeros((self.max_batch,), np.int32)
+        for i in active:
+            q = pending.get(i)
+            if q:
+                n = min(len(q), T)
+                toks[i, :n] = q[:n]
+                del q[:n]
+                valid[i] = n
+                if not q:
+                    pending.pop(i, None)
+            else:
+                req = self.slots[i]
+                toks[i, 0] = req.generated[-1] if req.generated else 0
+                valid[i] = 1
+        logits, self.cache = self._decode_chunk(
+            self.params, jnp.asarray(toks), jnp.asarray(valid), self.cache)
+        self.metrics.decode_steps += 1
+        ready = [i for i in active if valid[i] and i not in pending]
+        if not ready:
+            return set()
+        # next-token distribution sits at each slot's last valid row
+        rows = jnp.take_along_axis(
+            logits, jnp.asarray(np.maximum(valid - 1, 0))[:, None, None],
+            axis=1)[:, 0]                                        # [B,V]
+        greedy = np.asarray(jnp.argmax(rows, axis=-1))
+        sampled: set = set()
+        for i in ready:
+            req = self.slots[i]
+            tok = self._sample_slot(req, rows, i, greedy)
+            req.generated.append(tok)
+            if req.first_token_at < 0:
+                # stamp after the sampled token exists (consistent between
+                # prefill and prefix-reuse paths)
+                req.first_token_at = time.monotonic()
+            self.metrics.tokens_generated += 1
+            sampled.add(i)
+        return sampled
+
+    def _step_masked(self, active: List[int], budget: int) -> set:
+        """Per-token fallback for families without a fused chunk step:
+        up to ``budget`` masked sub-steps over the shared decode fn, where
+        only prompt-consuming slots advance after the first."""
+        pending = self._pending_prompt
+        sampled: set = set()
+        for j in range(budget):
+            toks = np.zeros((self.max_batch,), np.int32)
+            mask = np.zeros((self.max_batch,), bool)
+            for i in active:
+                q = pending.get(i)
+                if q:
+                    toks[i] = q.pop(0)
+                    mask[i] = True
+                    if not q:
+                        pending.pop(i, None)
+                elif j == 0 and i not in sampled:
+                    req = self.slots[i]
+                    toks[i] = req.generated[-1] if req.generated else 0
+                    mask[i] = True
+            if not mask.any():
+                break
+            logits, self.cache = self._masked_decode(
+                self.params, jnp.asarray(toks), self.cache,
+                jnp.asarray(mask))
+            self.metrics.decode_steps += 1
+            ready = [i for i in active
+                     if mask[i] and i not in pending and i not in sampled]
+            if not ready:
+                continue
+            greedy = np.asarray(jnp.argmax(logits, axis=-1))
+            for i in ready:
+                req = self.slots[i]
+                tok = self._sample_slot(req, logits, i, greedy)
+                req.generated.append(tok)
+                if req.first_token_at < 0:
+                    req.first_token_at = time.monotonic()
+                self.metrics.tokens_generated += 1
+                sampled.add(i)
+        return sampled
+
+    def _vacate_slot(self, slot: int) -> None:
+        """Free a batch slot and every per-slot residue (pending prompt,
+        request PRNG stream) so a recycled slot can never inherit a previous
+        request's unconsumed prompt tokens."""
+        req = self.slots[slot]
+        self.slots[slot] = None
+        self._active_mask[slot] = False
+        self._pending_prompt.pop(slot, None)
+        if req is not None:
+            self._req_rng.pop(req.request_id, None)
 
     def _finish_slot(self, slot: int, now: float) -> None:
         req = self.slots[slot]
@@ -376,11 +644,56 @@ class InferenceEngine:
             if self.kv_registry is not None:
                 self.kv_registry.touch(req.session_id, self.instance_id,
                                        tokens, now)
-        self.slots[slot] = None
-        self._active_mask[slot] = False
-        self._finished.append(req)
-        if len(self._finished) > 8192:   # sync callers never drain; bound it
-            del self._finished[:4096]
+        self._vacate_slot(slot)
+        with self._done_lock:
+            self._finished.append(req)
+            if len(self._finished) > self.finished_cap:
+                self._trim_finished()
+
+    def _trim_finished(self) -> None:
+        """Bound the finished list without losing async completions.
+
+        Sync callers never drain, so the list must stay bounded — but a
+        request with a registered callback still owes its caller a
+        completion: evicting it would strand a NALAR future forever.
+        Fire-or-keep: evict oldest callback-less requests first; callback-
+        bearing requests survive until ``drain_completions``.  Only under a
+        pathological flood (callbacks registered but never drained) does
+        the hard cap evict them too, dropping the orphaned callback entry
+        with the request so the callback table cannot leak.
+
+        Caller holds ``_done_lock``.
+        """
+        cut = len(self._finished) - self.finished_cap // 2
+        kept: List[Request] = []
+        for idx, r in enumerate(self._finished):
+            if idx < cut and r.request_id not in self._callbacks:
+                continue
+            kept.append(r)
+        overflow = len(kept) - 2 * self.finished_cap
+        if overflow > 0:
+            for r in kept[:overflow]:
+                self._callbacks.pop(r.request_id, None)
+            kept = kept[overflow:]
+        self._finished = kept
+
+    def abort_all(self) -> int:
+        """Clear the wait queue and vacate every slot (replica death /
+        bridge ``fail_inflight``): results will never be delivered, and a
+        recycled slot must not inherit a dead request's pending prompt.
+        Returns the number of requests dropped."""
+        with self._lock:
+            n = self.queue.clear()
+            for slot in range(self.max_batch):
+                if self.slots[slot] is not None:
+                    n += 1
+                    self._vacate_slot(slot)
+            self._pending_prompt.clear()
+            with self._done_lock:
+                self._callbacks.clear()
+            self.metrics.queued = 0
+            self.metrics.active = 0
+            return n
 
     # ------------------------------------------------------------ telemetry
     def run_until_idle(self, max_steps: int = 100_000) -> None:
@@ -396,9 +709,13 @@ class InferenceEngine:
 
     def telemetry(self) -> Dict[str, Any]:
         m = self.metrics
-        return {"queued": m.queued, "active": m.active,
+        return {"queued": len(self.queue), "active": m.active,
                 "completed": m.completed, "decode_steps": m.decode_steps,
                 "prefills": m.prefills, "prefill_tokens": m.prefill_tokens,
                 "prefix_hits": m.prefix_hits,
                 "tokens_generated": m.tokens_generated,
+                "queue_limit": self.max_queue,
+                "queue_saturation": self.saturation(),
+                "admission_rejects": self.queue.rejected,
+                "prefill_chunk": self.prefill_chunk,
                 "slot_sessions": self.slot_sessions()}

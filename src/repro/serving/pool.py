@@ -294,6 +294,16 @@ class EnginePool:
         return 1
 
     # ------------------------------------------------------------- telemetry
+    def saturation_of(self, instance_id: str) -> float:
+        """Wait-queue saturation of one replica (Router shed hook)."""
+        bridge = self.bridge_of(instance_id)
+        return bridge.engine.saturation() if bridge is not None else 0.0
+
+    def instance_metrics(self, instance_id: str) -> Dict[str, Any]:
+        """Per-replica engine gauges for the controller's metrics mirror."""
+        bridge = self.bridge_of(instance_id)
+        return bridge.instance_metrics(instance_id) if bridge else {}
+
     def telemetry(self) -> Dict[str, Any]:
         out: Dict[str, Any] = {"pool": self.name, "stats": dict(self.stats),
                                "replicas": {}}

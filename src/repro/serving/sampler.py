@@ -3,6 +3,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -14,6 +15,11 @@ class SamplingParams:
     top_k: int = 0                # 0 = disabled
     max_new_tokens: int = 32
     eos_token: int = -1           # -1 = never stop early
+    # Seeds this request's private PRNG stream (temperature > 0).  None
+    # derives a stream from the request id; either way draws are independent
+    # of batch composition, so a request's sample sequence is reproducible
+    # no matter what it happens to be batched with.
+    seed: Optional[int] = None
 
 
 def sample(logits: jnp.ndarray, params: SamplingParams,

@@ -118,7 +118,9 @@ def build_pool_runtime(*, replicas: int = 3, arch: str = "qwen3_0_6b",
                        kv_affinity: bool = True, policy=None,
                        control_interval: float = 0.25,
                        heterogeneous: bool = False,
-                       seed: int = 0) -> NalarRuntime:
+                       prefill_chunk: int = 8, max_queue: int = 0,
+                       max_retries: int = 0, retry_backoff: float = 0.05,
+                       decode=None, seed: int = 0) -> NalarRuntime:
     """One ``llm`` agent type backed by an ``EnginePool`` of real replicas.
 
     This is the pooled topology of the migration/routing benchmarks: N
@@ -131,6 +133,13 @@ def build_pool_runtime(*, replicas: int = 3, arch: str = "qwen3_0_6b",
     and pays a full-context prefill per turn.  ``heterogeneous=True`` halves
     the last replica's batch width (a deliberately weaker engine) to show
     policies handling non-uniform capacity.
+
+    Data-plane knobs (the sustained-RPS benchmark sweeps these):
+    ``prefill_chunk`` — prompt tokens consumed per slot per engine step
+    (0 = legacy monolithic bucket prefill); ``max_queue`` — per-replica
+    admission bound (0 = unbounded queueing, the baseline collapse mode);
+    ``max_retries``/``retry_backoff`` — retry-ladder budget so admission
+    rejections back off and reroute instead of failing the request.
     """
     import jax
 
@@ -154,11 +163,16 @@ def build_pool_runtime(*, replicas: int = 3, arch: str = "qwen3_0_6b",
         if heterogeneous and i == replicas - 1:
             mb = max(1, max_batch // 2)
         engines.append(InferenceEngine(model, params, max_batch=mb,
-                                       max_seq=max_seq))
+                                       max_seq=max_seq,
+                                       prefill_chunk=prefill_chunk,
+                                       max_queue=max_queue))
     register_engine_pool(
         rt, "llm", engines,
         sampling=SamplingParams(max_new_tokens=max_new_tokens),
-        resources={"GPU": 1})
+        decode=decode, resources={"GPU": 1})
+    if max_retries:
+        rt.apply_directives("llm", {"max_retries": max_retries,
+                                    "retry_backoff": retry_backoff})
     return rt
 
 

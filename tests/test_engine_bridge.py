@@ -9,6 +9,8 @@ Covers the tentpole contract:
    virtual time; engine agents are rejected on a SimKernel runtime).
 """
 
+import time
+
 import jax
 import numpy as np
 import pytest
@@ -18,8 +20,9 @@ from repro.core import (AgentSpec, Directives, FixedLatency, NalarRuntime,
                         deployment, emulated)
 from repro.core.runtime import current_runtime
 from repro.models import build_model
-from repro.serving import (GenerationResult, InferenceEngine, SamplingParams,
-                           register_engine_agent)
+from repro.serving import (EngineOverloaded, GenerationResult,
+                           InferenceEngine, Request, SamplingParams,
+                           register_engine_agent, register_engine_pool)
 
 
 @pytest.fixture(scope="module")
@@ -188,6 +191,124 @@ def test_encode_failure_fails_only_that_future(model_setup):
     out, errs = deployment.main(fanout, runtime=rt)
     assert len(out) == 2 and all(isinstance(o, GenerationResult) for o in out)
     assert errs == ["unencodable input"]
+    rt.shutdown()
+
+
+def test_queue_full_fails_future_as_retryable_error(model_setup):
+    """Admission control: a full bounded wait queue rejects the submission
+    and the future fails with EngineOverloaded (retryable) instead of the
+    request queueing unboundedly.  With no retry budget the failure is
+    surfaced to the caller as-is."""
+    cfg, model, params = model_setup
+    rt = NalarRuntime(simulate=False)
+    engine = InferenceEngine(model, params, max_batch=1, max_seq=64,
+                             max_queue=1)
+    register_engine_agent(rt, "llm", engine,
+                          sampling=SamplingParams(max_new_tokens=2))
+    iid = rt.instances_of_type("llm")[0]
+    rt.router.shed_watermark = None      # single replica: nothing to shed to
+    # fill the bounded queue directly so the next bridge submission rejects
+    engine.queue.push(Request.make([1, 2, 3]))
+
+    def driver():
+        return current_runtime().stub("llm").generate("over capacity") \
+            .value(timeout=60)
+
+    with pytest.raises(EngineOverloaded):
+        deployment.main(driver, runtime=rt)
+    assert engine.queue.rejected >= 1
+    assert rt.controller_of(iid).inst.metrics.failed == 1
+    rt.shutdown()
+
+
+def test_queue_full_retry_ladder_reroutes_to_sibling(model_setup):
+    """The full ladder: queue-full on the pinned replica -> retryable
+    failure -> in-place retry (still full) -> budget exhausted -> escalate
+    -> global RetryPolicy reroutes the future to the surviving sibling,
+    which completes it."""
+    cfg, model, params = model_setup
+    rt = NalarRuntime(simulate=False)
+    eng_a = InferenceEngine(model, params, max_batch=1, max_seq=64,
+                            max_queue=1)
+    eng_b = InferenceEngine(model, params, max_batch=2, max_seq=64)
+    register_engine_pool(rt, "llm", [eng_a, eng_b],
+                         sampling=SamplingParams(max_new_tokens=2))
+    rt.apply_directives("llm", {"max_retries": 1, "retry_backoff": 0.01})
+    iid_a, iid_b = rt.instances_of_type("llm")
+    rt.router.shed_watermark = None      # force the ladder, not the shed
+    # saturate A's queue with a request that will never drain during the
+    # test (the pump only steps while bridge work is pending)
+    eng_a.queue.push(Request.make(list(range(8)),
+                                  sampling=SamplingParams(max_new_tokens=60)))
+    sid = rt.sessions.new_session(0.0, 0.0).session_id
+    rt.router.pin(sid, "llm", iid_a)     # route the call at the full replica
+    out, errs = [], []
+
+    def driver():
+        return current_runtime().stub("llm").generate("needs a reroute") \
+            .value(timeout=120)
+
+    rt.start()
+    rt.submit_request(driver, session=sid,
+                      on_done=lambda o, e: (out.append(o), errs.append(e)))
+    rt.run()
+    assert errs == [None]
+    assert isinstance(out[0], GenerationResult)
+    assert out[0].engine_id == iid_b     # rerouted off the saturated replica
+    assert eng_a.queue.rejected >= 2     # first attempt + in-place retry
+    assert eng_b.metrics.completed >= 1
+    rt.shutdown()
+
+
+def test_router_sheds_from_saturated_replica(model_setup):
+    """Backpressure before collapse: with the shed watermark active the
+    Router routes a new call away from the saturated replica instead of
+    letting it hit the full queue at all."""
+    cfg, model, params = model_setup
+    rt = NalarRuntime(simulate=False)
+    eng_a = InferenceEngine(model, params, max_batch=1, max_seq=64,
+                            max_queue=1)
+    eng_b = InferenceEngine(model, params, max_batch=2, max_seq=64)
+    register_engine_pool(rt, "llm", [eng_a, eng_b],
+                         sampling=SamplingParams(max_new_tokens=2))
+    iid_a, iid_b = rt.instances_of_type("llm")
+    eng_a.queue.push(Request.make([1, 2, 3]))    # A at 1/1: saturated
+    assert eng_a.saturation() >= rt.router.shed_watermark
+    sid = rt.sessions.new_session(0.0, 0.0).session_id
+    rt.router.pin(sid, "llm", iid_a)
+
+    def driver():
+        return current_runtime().stub("llm").generate("shed me") \
+            .value(timeout=60)
+
+    rt.start()
+    res = {}
+    rt.submit_request(driver, session=sid,
+                      on_done=lambda o, e: res.update(out=o, err=e))
+    rt.run()
+    assert res["err"] is None
+    assert res["out"].engine_id == iid_b     # pin overridden by the shed
+    assert eng_a.queue.rejected == 0         # never even hit the full queue
+    rt.shutdown()
+
+
+def test_engine_metrics_reach_instance_view(model_setup):
+    """EngineMetrics -> bridge -> metrics mirror -> InstanceView: the
+    global controller's view carries the data-plane queue watermark."""
+    cfg, model, params = model_setup
+    rt = NalarRuntime(simulate=False)
+    engine = InferenceEngine(model, params, max_batch=2, max_seq=64,
+                             max_queue=4)
+    register_engine_agent(rt, "llm", engine,
+                          sampling=SamplingParams(max_new_tokens=2))
+    iid = rt.instances_of_type("llm")[0]
+    for i in range(3):
+        engine.queue.push(Request.make([i + 1]))
+    rt.controller_of(iid)._publish_metrics()
+    view = rt.global_controller.collect_view(full=True)
+    iv = view.instances[iid]
+    assert iv.engine_queue == 3
+    assert iv.engine_saturation == pytest.approx(0.75)
     rt.shutdown()
 
 

@@ -1,5 +1,6 @@
-"""Serving engine integration: continuous batching, paged KV pool, prefix
-reuse, NALAR KV-registry hints, session migration between engines."""
+"""Serving engine integration: continuous batching, chunked prefill,
+admission control, paged KV pool, prefix reuse, NALAR KV-registry hints,
+session migration between engines."""
 
 import jax
 import jax.numpy as jnp
@@ -9,8 +10,9 @@ import pytest
 from repro.configs import get_smoke_config
 from repro.core import KVRegistry
 from repro.models import build_model
-from repro.serving import (InferenceEngine, PagedKVPool, Request,
-                           SamplingParams, StateCachePool)
+from repro.serving import (EngineOverloaded, InferenceEngine, PagedKVPool,
+                           Request, SamplingParams, StateCachePool,
+                           WaitQueue)
 
 
 @pytest.fixture(scope="module")
@@ -161,6 +163,253 @@ def test_priority_admission_order(dense_setup):
     eng.submit(hi)
     eng.run_until_idle()
     assert hi.finished_at <= lo.finished_at    # high priority admitted first
+
+
+# ------------------------------------------------------- chunked prefill
+def test_chunked_prefill_matches_monolithic(dense_setup):
+    """Chunked prefill (prompt fed through masked decode sub-steps) must
+    produce the same greedy generation AND the same session KV cache as the
+    legacy monolithic prefill.  The prompt length is an exact bucket so the
+    monolithic path has no pad tokens — on any other length its left-padded
+    bucket leaks pad K/V into attention, which is exactly what the chunked
+    path removes."""
+    cfg, model, params = dense_setup
+    prompt = list(range(1, 17))          # == minimum bucket, no padding
+    mono = make_engine(model, params, prefill_chunk=0)
+    r_mono = mono.generate(prompt, session_id="m",
+                           sampling=SamplingParams(max_new_tokens=4))
+    chunk = make_engine(model, params, prefill_chunk=4)
+    r_chunk = chunk.generate(prompt, session_id="c",
+                             sampling=SamplingParams(max_new_tokens=4))
+    assert r_chunk.generated == r_mono.generated
+    km, vm, tm = mono.pool.gather_contiguous("m", mono.max_seq)
+    kc, vc, tc = chunk.pool.gather_contiguous("c", chunk.max_seq)
+    # the final sampled token is returned but never fed back into the cache
+    assert tm == tc == len(prompt) + 4 - 1
+    np.testing.assert_allclose(np.asarray(kc[:, :tc]), np.asarray(km[:, :tm]),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(vc[:, :tc]), np.asarray(vm[:, :tm]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_windowed_chunked_prefill_matches_per_token():
+    """Sliding-window regression: a fused chunk write can clobber ring
+    slots that earlier in-chunk queries still need, so windowed chunk
+    attention must run against the pre-write cache + the chunk itself.
+    Ground truth is the per-token masked-decode path (exact ring
+    semantics), with a prompt longer than the window and not bucket-sized
+    so the divergence cannot hide."""
+    cfg = get_smoke_config("starcoder2_15b")     # dense + sliding window
+    assert cfg.sliding_window
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    prompt = [int(t) for t in
+              np.random.default_rng(3).integers(1, cfg.vocab_size, 100)]
+    sp = SamplingParams(max_new_tokens=6)
+    fused = InferenceEngine(model, params, max_batch=2, max_seq=128,
+                            prefill_chunk=8)
+    assert fused._decode_chunk is not None
+    r_fused = fused.generate(prompt, sampling=sp)
+    per_tok = InferenceEngine(model, params, max_batch=2, max_seq=128,
+                              prefill_chunk=8)
+    per_tok._decode_chunk = None                 # masked per-token fallback
+    r_tok = per_tok.generate(prompt, sampling=sp)
+    assert r_fused.generated == r_tok.generated
+
+
+def test_chunked_prefill_interleaves_decode(dense_setup):
+    """A long prompt admitted mid-decode must not stall the active slot:
+    with chunk size C, the decoding request keeps producing one token per
+    step while the newcomer's prompt is consumed C tokens per step."""
+    cfg, model, params = dense_setup
+    eng = make_engine(model, params, max_batch=2, prefill_chunk=8)
+    a = Request.make(list(range(4)), sampling=SamplingParams(max_new_tokens=40))
+    eng.submit(a)
+    eng.step()                           # admit a; consume its short prompt
+    while len(a.generated) < 2:
+        eng.step()
+    tokens_before = len(a.generated)
+    long_prompt = list(range(60))        # needs ceil(60/8) = 8 chunked steps
+    b = Request.make(long_prompt, sampling=SamplingParams(max_new_tokens=2))
+    eng.submit(b)
+    for _ in range(4):
+        eng.step()
+    # a advanced one token per step even while b's prompt was in flight
+    assert len(a.generated) >= tokens_before + 4
+    eng.run_until_idle()
+    assert a.finished and b.finished
+
+
+# ---------------------------------------------------- admission control
+def test_wait_queue_heap_order_and_bound():
+    mk = lambda pri, t: Request.make([1], priority=pri, now=t)
+    q = WaitQueue(maxsize=3)
+    r_lo, r_hi, r_mid = mk(0.0, 0.0), mk(5.0, 1.0), mk(1.0, 2.0)
+    for r in (r_lo, r_hi, r_mid):
+        q.push(r)
+    with pytest.raises(EngineOverloaded):
+        q.push(mk(9.0, 3.0))
+    assert q.rejected == 1 and q.saturation() == 1.0
+    assert [q.pop_next() for _ in range(3)] == [r_hi, r_mid, r_lo]
+    assert q.pop_next() is None and q.saturation() == 0.0
+
+
+def test_engine_bounded_queue_rejects(dense_setup):
+    cfg, model, params = dense_setup
+    eng = make_engine(model, params, max_queue=2)
+    eng.submit(Request.make([1, 2], sampling=SamplingParams(max_new_tokens=2)))
+    eng.submit(Request.make([3, 4], sampling=SamplingParams(max_new_tokens=2)))
+    with pytest.raises(EngineOverloaded):
+        eng.submit(Request.make([5, 6]))
+    assert eng.telemetry()["admission_rejects"] == 1
+    assert eng.telemetry()["queue_saturation"] == 1.0
+    eng.run_until_idle()                 # the admitted two still complete
+    assert eng.metrics.completed == 2
+
+
+def test_rejected_async_submit_leaves_no_callback(dense_setup):
+    """A queue-full submit_async must not leave an orphaned callback entry
+    (the completion it waits for will never come)."""
+    cfg, model, params = dense_setup
+    eng = make_engine(model, params, max_queue=1)
+    eng.submit(Request.make([1]))
+    fired = []
+    with pytest.raises(EngineOverloaded):
+        eng.submit_async(Request.make([2]), on_done=fired.append)
+    assert not eng._callbacks
+
+
+# --------------------------------------------------- completion delivery
+def test_finished_bound_never_drops_pending_callbacks(dense_setup):
+    """Regression (dropped completions): bounding the finished list used to
+    delete the oldest entries even when their async callers still awaited a
+    callback — the NALAR future hung forever.  Fire-or-keep: callback-
+    bearing requests survive the trim; callback-less ones are evicted."""
+    cfg, model, params = dense_setup
+    eng = make_engine(model, params, finished_cap=6)
+    fired = []
+    awaited = Request.make(list(range(4)),
+                           sampling=SamplingParams(max_new_tokens=2))
+    eng.submit_async(awaited, on_done=fired.append)
+    eng.run_until_idle()
+    # sync traffic overflows the finished list well past the cap
+    for i in range(10):
+        eng.generate([i + 1, i + 2],
+                     sampling=SamplingParams(max_new_tokens=2))
+    assert len(eng._finished) <= 2 * eng.finished_cap
+    assert eng.drain_completions() >= 1
+    assert fired == [awaited]            # the awaited completion survived
+    assert not eng._callbacks
+
+
+# ----------------------------------------------------------- TTFT stamps
+def test_ttft_stamped_when_first_token_exists(dense_setup):
+    """Regression (TTFT accounting): the prefill path used to stamp
+    first_token_at at admission time; the resumed path stamped it one step
+    late — so a one-token resumed request never got a stamp at all."""
+    cfg, model, params = dense_setup
+    eng = make_engine(model, params)
+    r1 = eng.generate(list(range(8)), session_id="t",
+                      sampling=SamplingParams(max_new_tokens=4))
+    assert r1.submitted_wall <= r1.first_token_at <= r1.finished_at
+    # resumed follow-up generating exactly ONE token: pre-fix this path
+    # finished with first_token_at == -1
+    r2 = eng.generate(list(range(8, 12)), session_id="t",
+                      sampling=SamplingParams(max_new_tokens=1))
+    assert r2.prefix_reused_tokens > 0
+    assert r2.first_token_at > 0
+    assert r2.submitted_wall <= r2.first_token_at <= r2.finished_at
+
+
+# ----------------------------------------------------- per-request sampling
+def test_stochastic_sampling_independent_of_batch_composition(dense_setup):
+    """Regression (per-request sampling): a stochastic request's samples
+    must come from its own PRNG stream — batching it with other requests
+    (which used to burn draws from a shared stream) must not change its
+    output."""
+    cfg, model, params = dense_setup
+    sp = SamplingParams(temperature=0.7, top_k=8, max_new_tokens=5, seed=123)
+    prompt = list(range(2, 12))
+
+    eng_solo = make_engine(model, params, max_batch=1)
+    solo = eng_solo.generate(prompt, sampling=sp).generated
+
+    eng_batch = make_engine(model, params, max_batch=4)
+    rng = np.random.default_rng(7)
+    others = [Request.make(rng.integers(0, cfg.vocab_size, size=6),
+                           sampling=SamplingParams(temperature=0.9,
+                                                   max_new_tokens=5))
+              for _ in range(3)]
+    target = Request.make(prompt, sampling=sp)
+    for r in others[:2] + [target] + others[2:]:
+        eng_batch.submit(r)
+    eng_batch.run_until_idle()
+    assert target.generated == solo
+
+
+def test_custom_eos_token_stops_generation(dense_setup):
+    """Each slot is sampled with its own SamplingParams: a request whose
+    eos_token equals its first greedy token stops after one token while a
+    default-params batch-mate keeps generating."""
+    cfg, model, params = dense_setup
+    prompt = list(range(3, 9))
+    probe = make_engine(model, params).generate(
+        prompt, sampling=SamplingParams(max_new_tokens=1))
+    eos = probe.generated[0]
+    eng = make_engine(model, params)
+    stopper = Request.make(prompt, sampling=SamplingParams(
+        max_new_tokens=8, eos_token=eos))
+    friend = Request.make(list(range(20, 26)),
+                          sampling=SamplingParams(max_new_tokens=8))
+    eng.submit(stopper)
+    eng.submit(friend)
+    eng.run_until_idle()
+    assert stopper.generated == [eos]
+    assert len(friend.generated) == 8
+
+
+# ------------------------------------------------- pending-prompt hygiene
+def test_vacated_slot_clears_pending_prompt(dense_setup):
+    """A recycled slot must never inherit a previous request's unconsumed
+    prompt tokens: abort mid-prefill, then verify a fresh request on the
+    same slot generates exactly what it generates on a fresh engine."""
+    cfg, model, params = dense_setup
+    eng = make_engine(model, params, max_batch=1, prefill_chunk=4)
+    long_req = Request.make(list(range(40)),
+                            sampling=SamplingParams(max_new_tokens=2))
+    eng.submit(long_req)
+    eng.step()                           # prompt partially consumed
+    assert eng._pending_prompt           # mid-prefill
+    eng.abort_all()
+    assert not eng._pending_prompt and eng.slots == [None]
+    fresh_prompt = list(range(50, 58))
+    r = eng.generate(fresh_prompt, sampling=SamplingParams(max_new_tokens=3))
+    ref = make_engine(model, params, max_batch=1, prefill_chunk=4).generate(
+        fresh_prompt, sampling=SamplingParams(max_new_tokens=3))
+    assert r.generated == ref.generated
+    assert not eng._pending_prompt
+
+
+def test_resumed_suffix_capped_against_cache_capacity(dense_setup):
+    """A warm suffix that would overflow the slot cache mid-prompt is not
+    resumed: admission falls back to a (bounded) cold rebuild instead of
+    running past the ring."""
+    cfg, model, params = dense_setup
+    eng = make_engine(model, params, max_seq=96)
+    r1 = eng.generate(list(range(40)), session_id="cap",
+                      sampling=SamplingParams(max_new_tokens=8))
+    assert r1.finished
+    hits_before = eng.metrics.prefix_hits
+    suffix = list(range(40, 90))         # 47 cached + 50 > 95: cannot resume
+    full = list(range(90))               # bounded cold rebuild still fits
+    r2 = Request.make(suffix, session_id="cap", fallback_prompt=full,
+                      sampling=SamplingParams(max_new_tokens=4))
+    eng.submit(r2)
+    eng.run_until_idle()
+    assert r2.finished and len(r2.generated) == 4
+    assert r2.prefix_reused_tokens == 0            # resume was refused
+    assert eng.metrics.prefix_hits == hits_before
+    assert not eng._pending_prompt
 
 
 def test_paged_kernel_reads_engine_pool(dense_setup):
