@@ -23,6 +23,14 @@ collapse) and measures both remedies separately:
   (and beyond) the offered rate where the unbounded baseline collapses,
   and the unbounded collapse point is recorded.
 
+* **prefix-sharing experiment** (``--prefix``) — a fleet of single-turn
+  sessions that all open with the same system prompt, run with the
+  cross-session KV prefix index on vs off.  The claims checked: prefill
+  tokens drop by >= 50% (each replica pays the shared preamble once, every
+  later admission prefills only its unique user suffix) and the generated
+  outputs are identical token-for-token — sharing is an optimization, not
+  an approximation.  Writes ``BENCH_prefix_sharing.json``.
+
 Numbers are wall-clock on reduced CPU models, so the absolute RPS is far
 below the paper's A100 figures — the *shape* (stall-free TTFT tail, and
 goodput that saturates instead of collapsing) is the reproduced claim.
@@ -195,7 +203,89 @@ def run_condition(*, system: str, prefill_chunk: int, max_queue: int,
     return row
 
 
+def _prefix_condition(*, prefix_sharing: bool, n_requests: int,
+                      sys_words: int, user_words: int, replicas: int,
+                      max_seq: int, seed: int) -> Dict:
+    """Closed-loop run of ``n_requests`` single-turn sessions sharing one
+    system prompt; returns prefill-token cost, hit stats, TTFT, and the
+    per-session generated tokens (the equivalence evidence)."""
+    records: List[Dict] = []
+
+    def decode(req):
+        records.append({
+            "sid": req.session_id,
+            "generated": [int(t) for t in req.generated],
+            "ttft": req.first_token_at - req.submitted_wall,
+        })
+        return len(req.generated)
+
+    rt = build_pool_runtime(
+        replicas=replicas, max_batch=2, max_seq=max_seq,
+        prefill_chunk=64, max_queue=0, max_retries=0,
+        prefix_sharing=prefix_sharing, decode=decode, seed=seed)
+    pool = rt.engine_backends["llm"]
+    engines = [pool.bridge_of(i).engine for i in pool.instance_ids]
+    _warm_compile(pool, long_words=sys_words + user_words, max_seq=max_seq)
+
+    word_rng = random.Random(seed + 1)
+    sys_prompt = " ".join(f"s{word_rng.randrange(10_000)}"
+                          for _ in range(sys_words))
+    prompts = [(f"user:{i}",
+                sys_prompt + " " + " ".join(f"u{i}w{j}"
+                                            for j in range(user_words)))
+               for i in range(n_requests)]
+
+    pt0 = sum(e.metrics.prefill_tokens for e in engines)
+
+    def turn(text: str):
+        from repro.core.runtime import current_runtime
+        return current_runtime().stub("llm").generate(text).value(timeout=120)
+
+    from repro.core import deployment
+    t0 = time.monotonic()
+    for sid, text in prompts:
+        deployment.main(turn, text, runtime=rt, session=sid)
+    elapsed = time.monotonic() - t0
+
+    prefill_tokens = sum(e.metrics.prefill_tokens for e in engines) - pt0
+    hits = sum(e.metrics.shared_prefix_hits for e in engines)
+    hit_tokens = sum(e.metrics.shared_prefix_tokens for e in engines)
+    cow = sum(e.pool.stats.get("cow_copies", 0) for e in engines
+              if hasattr(e.pool, "stats"))
+    ttft = sorted(r["ttft"] for r in records if r["ttft"] >= 0)
+    row = {
+        "bench": "sustained_rps",
+        "system": "prefix_sharing_on" if prefix_sharing
+                  else "prefix_sharing_off",
+        "n": n_requests,
+        "sys_tokens": sys_words,
+        "prefill_tokens": int(prefill_tokens),
+        "prefix_hits": int(hits),
+        "prefix_hit_tokens": int(hit_tokens),
+        "cow_copies": int(cow),
+        "ttft_p50": _pct(ttft, 50), "ttft_p99": _pct(ttft, 99),
+        "elapsed_s": elapsed,
+        "outputs": {r["sid"]: r["generated"] for r in records},
+    }
+    rt.shutdown()
+    return row
+
+
 # ------------------------------------------------------------ experiments
+def prefix_experiment(*, n_requests: int, sys_words: int, user_words: int,
+                      replicas: int = 2, max_seq: int = 512,
+                      seed: int = 0) -> List[Dict]:
+    """Shared-system-prompt fleet, prefix index off vs on (same prompts,
+    same weights, same routing) — the ROADMAP item 1 evidence."""
+    rows = []
+    for sharing in (False, True):
+        rows.append(_prefix_condition(
+            prefix_sharing=sharing, n_requests=n_requests,
+            sys_words=sys_words, user_words=user_words,
+            replicas=replicas, max_seq=max_seq, seed=seed))
+    return rows
+
+
 def prefill_experiment(*, rps: float, duration: float, long_frac: float,
                        long_words: int, seed: int = 0) -> List[Dict]:
     """Chunked vs monolithic prefill under mixed long-prompt/decode load.
@@ -270,6 +360,23 @@ def analyze(rows: List[Dict]) -> Dict:
         out["p99_ttft_long_chunked_s"] = round(chunk["ttft_long_p99"], 4)
         out["chunked_improves_p99_ttft"] = bool(
             0 <= chunk["ttft_short_p99"] < mono["ttft_short_p99"])
+    p_off = by.get("prefix_sharing_off", [None])[0]
+    p_on = by.get("prefix_sharing_on", [None])[0]
+    if p_off and p_on:
+        out["prefix_prefill_tokens_off"] = p_off["prefill_tokens"]
+        out["prefix_prefill_tokens_on"] = p_on["prefill_tokens"]
+        out["prefix_savings_frac"] = round(
+            1.0 - p_on["prefill_tokens"] / max(1, p_off["prefill_tokens"]), 4)
+        out["prefix_hit_rate"] = round(
+            p_on["prefix_hits"] / max(1, p_on["n"]), 4)
+        out["prefix_hit_tokens"] = p_on["prefix_hit_tokens"]
+        out["prefix_p99_ttft_off_s"] = round(p_off["ttft_p99"], 4)
+        out["prefix_p99_ttft_on_s"] = round(p_on["ttft_p99"], 4)
+        # the equivalence claim: sharing changes cost, never tokens
+        out["prefix_outputs_identical"] = bool(
+            p_off["outputs"] == p_on["outputs"])
+        out["prefix_meets_50pct_savings"] = bool(
+            out["prefix_savings_frac"] >= 0.5)
     unb = sorted(by.get("admission_unbounded", []), key=lambda r: r["rps"])
     bnd = sorted(by.get("admission_bounded", []), key=lambda r: r["rps"])
     if unb and bnd:
@@ -332,21 +439,28 @@ def derive(rows: List[Dict]) -> List[str]:
     if "bounded_beats_unbounded_goodput" in a:
         out.append("sustained,claim,bounded_admission_beats_unbounded,"
                    f"{int(bool(a['bounded_beats_unbounded_goodput']))}")
+    if "prefix_outputs_identical" in a:
+        out.append("sustained,claim,prefix_sharing_saves_half_the_prefill,"
+                   f"{int(bool(a['prefix_meets_50pct_savings']))}")
+        out.append("sustained,claim,prefix_sharing_outputs_identical,"
+                   f"{int(bool(a['prefix_outputs_identical']))}")
     return out
 
 
-def write_record(rows: List[Dict], mode: str) -> str:
+def write_record(rows: List[Dict], mode: str,
+                 name: str = "BENCH_sustained_rps.json") -> str:
     """Machine-readable record at the repo root (the acceptance artifact:
     chunked-vs-monolithic p99 TTFT + bounded-vs-unbounded goodput with the
-    unbounded collapse point)."""
+    unbounded collapse point; ``--prefix`` writes the prefix-sharing
+    savings/equivalence record instead)."""
     payload = {
         "bench": "sustained_rps",
         "mode": mode,
         "analysis": analyze(rows),
-        "rows": rows,
+        "rows": [{k: v for k, v in r.items() if k != "outputs"}
+                 for r in rows],
     }
-    path = os.path.join(os.path.dirname(__file__), "..",
-                        "BENCH_sustained_rps.json")
+    path = os.path.join(os.path.dirname(__file__), "..", name)
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, default=str)
         f.write("\n")
@@ -358,18 +472,42 @@ def main() -> None:
     p.add_argument("--smoke", action="store_true",
                    help="tiny CI run; asserts the paper-claim budget checks")
     p.add_argument("--full", action="store_true")
+    p.add_argument("--prefix", action="store_true",
+                   help="run only the shared-system-prompt prefix-sharing "
+                        "experiment (writes BENCH_prefix_sharing.json)")
     args = p.parse_args()
-    rows = run(quick=not args.full, smoke=args.smoke)
+    if args.prefix:
+        if args.smoke:
+            rows = prefix_experiment(n_requests=8, sys_words=96,
+                                     user_words=6, max_seq=256)
+        else:
+            rows = prefix_experiment(n_requests=24, sys_words=320,
+                                     user_words=8, max_seq=512)
+    else:
+        rows = run(quick=not args.full, smoke=args.smoke)
     for r in rows:
         print({k: (round(v, 4) if isinstance(v, float) else v)
-               for k, v in r.items()})
+               for k, v in r.items() if k != "outputs"})
     a = analyze(rows)
     for line in derive(rows):
         print(line)
-    path = write_record(rows, "smoke" if args.smoke
-                        else ("full" if args.full else "quick"))
+    mode = "smoke" if args.smoke else ("full" if args.full else "quick")
+    name = "BENCH_prefix_sharing.json" if args.prefix \
+        else "BENCH_sustained_rps.json"
+    path = write_record(rows, mode, name=name)
     print(f"wrote {os.path.normpath(path)}")
-    if args.smoke:
+    if args.prefix and args.smoke:
+        # CI budget checks — the prefix index must actually hit on a
+        # shared-prompt fleet, and must never change what gets generated
+        assert a.get("prefix_hit_rate", 0) > 0, (
+            f"no prefix hits on a shared-system-prompt workload: {a}")
+        assert a.get("prefix_outputs_identical"), (
+            f"prefix sharing changed generated tokens (equivalence drift): "
+            f"{a}")
+        assert a.get("prefix_savings_frac", 0) > 0, (
+            f"prefix sharing saved no prefill tokens: {a}")
+        print("prefix-sharing smoke budget checks passed")
+    elif args.smoke:
         # CI budget checks — regressions to monolithic-stall or unbounded-
         # queueing behaviour fail the job
         assert a.get("chunked_improves_p99_ttft"), (

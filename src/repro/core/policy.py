@@ -55,6 +55,12 @@ class InstanceView:
     engine_queue: int = 0
     engine_saturation: float = 0.0
     engine_rejects: int = 0
+    # cross-session prefix-cache effectiveness on this replica: admissions
+    # that found a shared prefix resident, and the prefill tokens those hits
+    # skipped.  KV-affinity-style policies read these to judge how much
+    # prefix residency a replica actually converts into saved prefill.
+    engine_prefix_hits: int = 0
+    engine_prefix_tokens: int = 0
 
     def eta(self, now: float) -> float:
         rem = max(0.0, self.busy_until - now) if self.busy else 0.0
@@ -147,6 +153,8 @@ class ClusterView:
             engine_queue=int(m.get("engine_queue", 0)),
             engine_saturation=float(m.get("engine_saturation", 0.0)),
             engine_rejects=int(m.get("engine_rejects", 0)),
+            engine_prefix_hits=int(m.get("engine_shared_prefix_hits", 0)),
+            engine_prefix_tokens=int(m.get("engine_shared_prefix_tokens", 0)),
         )
         old = self.instances.get(iid)
         self.instances[iid] = iv
@@ -479,7 +487,15 @@ class KVAffinityPolicy(Policy):
                 siblings = [iv for iv in view.instances_of(home.agent_type)
                             if iv.instance_id != iid]
                 if siblings:
-                    best = min(siblings, key=lambda iv: iv.eta(view.now))
+                    # prefix-residency tiebreak: among equally loaded
+                    # siblings, prefer the replica that has demonstrably
+                    # converted resident prefixes into skipped prefill —
+                    # its index likely already holds this session's shared
+                    # preamble, making the post-migration rebuild cheaper
+                    best = min(siblings,
+                               key=lambda iv: (iv.eta(view.now),
+                                               -iv.engine_prefix_tokens,
+                                               iv.instance_id))
                     if (home.eta(view.now) - best.eta(view.now)
                             > self.imbalance_eta):
                         act.migrate(sid, iid, best.instance_id)

@@ -296,6 +296,7 @@ class EngineBridge:
                 self._pending -= 1
                 self._inflight.pop(r.request_id, None)
                 self._cv.notify_all()
+            value = err = None
             try:
                 # decode FIRST: if make_value raises, the attempt failed and
                 # its tokens must never reach the transcript — a retry would
@@ -312,13 +313,24 @@ class EngineBridge:
                     # state migration.
                     self.transcript.extend(sid, new_tokens + list(r.generated),
                                            max_tokens=self.engine.max_seq)
-                controller.complete_async(fut, value=value,
-                                          expect_run=run_id)
+            except BaseException as e:  # noqa: BLE001 — fault reporting (§5)
+                err = e
+            # deactivate the session BEFORE resolving the future: a caller
+            # that migrates the session the moment ``value()`` returns must
+            # see it idle, not spuriously deferred behind a request that has
+            # already finished.  The transcript is final at this point, so a
+            # queued same-session call submitted here reads correct history.
+            if sid:
+                self._advance_session(sid)
+            try:
+                if err is None:
+                    controller.complete_async(fut, value=value,
+                                              expect_run=run_id)
+                else:
+                    controller.complete_async(fut, error=err,
+                                              expect_run=run_id)
             except BaseException as e:  # noqa: BLE001 — fault reporting (§5)
                 controller.complete_async(fut, error=e, expect_run=run_id)
-            finally:
-                if sid:
-                    self._advance_session(sid)
 
         with self._cv:
             if self._stop:
@@ -378,6 +390,8 @@ class EngineBridge:
             "engine_active": int(e._active_mask.sum()),
             "engine_saturation": e.saturation(),
             "engine_rejects": e.queue.rejected,
+            "engine_shared_prefix_hits": e.metrics.shared_prefix_hits,
+            "engine_shared_prefix_tokens": e.metrics.shared_prefix_tokens,
         }
 
 

@@ -59,6 +59,10 @@ class EngineMetrics:
     decode_steps: int = 0
     prefills: int = 0
     prefix_hits: int = 0
+    # cross-session sharing: cold sessions admitted onto another session's
+    # indexed prefix pages (suffix-only prefill)
+    shared_prefix_hits: int = 0
+    shared_prefix_tokens: int = 0
     tokens_generated: int = 0
     prefill_tokens: int = 0
     admission_rejects: int = 0
@@ -108,7 +112,8 @@ class InferenceEngine:
                  page_size: int = 64, rng_seed: int = 0,
                  prefill_chunk: int = 8, max_queue: int = 0,
                  queue_watermark: float = 0.75,
-                 finished_cap: int = 8192) -> None:
+                 finished_cap: int = 8192,
+                 prefix_sharing: bool = True) -> None:
         self.model = model
         self.cfg: ModelConfig = model.cfg
         self.params = params
@@ -156,6 +161,24 @@ class InferenceEngine:
                                     page_size=page_size)
         if kv_registry is not None:
             kv_registry.register_hook(instance_id, self.pool.on_hint)
+
+        # cross-session prefix sharing: admission/warm_session consult the
+        # pool's radix index before prefilling.  Valid only when a cache
+        # position maps 1:1 to a token prefix position — paged pools,
+        # causal-chunkable families, no sliding-window ring wraparound.
+        self.prefix_sharing = bool(prefix_sharing)
+        W = self.cfg.sliding_window
+        self._prefix_share_ok = (
+            self.prefix_sharing
+            and isinstance(self.pool, PagedKVPool)
+            and self.cfg.family in _CHUNKABLE_FAMILIES
+            and (not W or self.max_seq <= W))
+        # slot -> token ids whose K/V occupy the slot's cache positions so
+        # far (None = unknown provenance, the finish write stays opaque)
+        self._slot_tokens: Dict[int, Optional[List[int]]] = {}
+        # lazily jitted batch-1 fns for suffix-only warm extension
+        self._extend_chunk: Optional[Callable] = None
+        self._extend_step: Optional[Callable] = None
 
         def _masked_decode(params, tokens, cache, mask):
             # one batched decode where only masked-in slots advance: the
@@ -329,6 +352,18 @@ class InferenceEngine:
             self._blank_row_cache = row
         return self._blank_row_cache
 
+    def _resumed_slot_tokens(self, req: Request,
+                             tokens: int) -> Optional[List[int]]:
+        """Token provenance of a resumed slot: the pool session's ids, when
+        they exactly describe the restored cache positions."""
+        if not self._prefix_share_ok:
+            return None
+        sp = self.pool.session(req.session_id)
+        if (sp is not None and sp.tokens == tokens
+                and len(sp.token_ids) == sp.tokens):
+            return list(sp.token_ids)
+        return None
+
     def _chunked_for(self, req: Request) -> bool:
         if self.prefill_chunk <= 0 or req.extras:
             return False
@@ -385,6 +420,23 @@ class InferenceEngine:
                 req.prompt = req.fallback_prompt
             if len(req.prompt) > self.max_seq - 1:
                 req.prompt = req.prompt[-(self.max_seq - 1):]
+            if (resumed is None and req.session_id and not req.extras
+                    and self._prefix_share_ok and len(req.prompt) > 1):
+                # cold session: another session may have indexed this
+                # prompt's prefix.  Adopt the shared pages and feed only
+                # the novel suffix (keep >= 1 token so the final position's
+                # logits are computed by a real forward).
+                ids = [int(t) for t in req.prompt]
+                matched = self.pool.acquire_prefix(req.session_id, ids[:-1],
+                                                   now=now)
+                if matched > 0:
+                    resumed = self._try_resume(req)
+                    if resumed is None:    # defensive: capacity race
+                        self.pool.release(req.session_id)
+                    else:
+                        self.metrics.shared_prefix_hits += 1
+                        self.metrics.shared_prefix_tokens += matched
+                        req.prompt = req.prompt[matched:]
             if resumed is not None:
                 row_cache, tokens = resumed
                 req.prefix_reused_tokens = tokens
@@ -392,11 +444,13 @@ class InferenceEngine:
                 # feed the prompt as additional decode steps (short suffix)
                 self.cache = set_slot(self.cache, slot, row_cache)
                 self._pending_prompt[slot] = [int(t) for t in req.prompt]
+                self._slot_tokens[slot] = self._resumed_slot_tokens(req, tokens)
             elif self._chunked_for(req):
                 # chunked prefill: blank row now, prompt consumed by step()
                 # in prefill_chunk-sized pieces piggybacked on decode
                 self.cache = set_slot(self.cache, slot, self._blank_row())
                 self._pending_prompt[slot] = [int(t) for t in req.prompt]
+                self._slot_tokens[slot] = [] if self._prefix_share_ok else None
                 self.metrics.prefills += 1
                 self.metrics.prefill_tokens += len(req.prompt)
             else:
@@ -408,6 +462,15 @@ class InferenceEngine:
                 # compute — not at admission time
                 req.first_token_at = time.monotonic()
                 self.cache = set_slot(self.cache, slot, row_cache)
+                if self._prefix_share_ok and not req.extras:
+                    # left-aligned bucket prefill: pad token 0's K/V enters
+                    # the leading positions and is part of the provenance
+                    S = len(req.prompt)
+                    bucket = min(bucket_len(S), self.max_seq)
+                    self._slot_tokens[slot] = ([0] * (bucket - S)
+                                               + [int(t) for t in req.prompt])
+                else:
+                    self._slot_tokens[slot] = None
                 self.metrics.tokens_generated += 1
                 if (len(req.generated) >= req.sampling.max_new_tokens
                         or tok == req.sampling.eos_token):
@@ -452,6 +515,13 @@ class InferenceEngine:
         W = self.cfg.sliding_window
         bucket = min(bucket_len(len(toks)), self.max_seq)
         with self._lock:
+            if self._prefix_share_ok:
+                # resident-prefix fast path: pages covering a prefix of the
+                # transcript (this session's own, or another session's via
+                # the index) make the replay partial or entirely redundant
+                warmed = self._warm_from_resident(session_id, toks, now)
+                if warmed:
+                    return warmed
             if isinstance(self.pool, PagedKVPool) and (not W or bucket <= W):
                 # right-aligned prefill: under causal attention the trailing
                 # pads never touch the first len(toks) positions, so the
@@ -459,21 +529,121 @@ class InferenceEngine:
                 # cache (the legacy left-pad exposure)
                 _logits, row_cache = self._prefill(req, align="right")
                 tokens = len(toks)
+                ids = toks if self._prefix_share_ok else None
             else:
                 _logits, row_cache = self._prefill(req)
                 tokens = int(np.asarray(row_cache["pos"]).reshape(-1)[0])
+                ids = None
             if isinstance(self.pool, PagedKVPool):
                 if tokens > self.max_seq:
                     return 0
                 k = row_cache["k"][:, 0, :tokens]
                 v = row_cache["v"][:, 0, :tokens]
-                if not self.pool.write_session(session_id, k, v, tokens, now):
+                if not self.pool.write_session(session_id, k, v, tokens, now,
+                                               token_ids=ids):
                     return 0
             else:
                 self.pool.store(session_id, row_cache, tokens)
             if self.kv_registry is not None:
                 self.kv_registry.touch(session_id, self.instance_id,
                                        tokens, now)
+        return tokens
+
+    def _warm_from_resident(self, session_id: str, toks: List[int],
+                            now: float) -> int:
+        """Warm a session from pages already resident in the pool.
+
+        Full coverage (the session's own pages after a page-ship import, or
+        a shared prefix acquired from the index) costs *zero* prefill
+        steps; partial coverage prefills only the missing suffix through
+        batch-1 decode (``_extend_session``).  Returns tokens cached, or 0
+        to make the caller fall back to the full transcript replay."""
+        pool = self.pool
+        sp = pool.session(session_id)
+        resident = 0
+        if sp is not None and sp.pages:
+            if len(sp.token_ids) != sp.tokens:
+                return 0    # opaque contents: cannot trust the prefix
+            n = min(sp.tokens, len(toks))
+            if sp.token_ids[:n] != toks[:n]:
+                return 0    # diverged: full replay reconciles via COW
+            if sp.tokens >= len(toks):
+                if self.kv_registry is not None:
+                    self.kv_registry.touch(session_id, self.instance_id,
+                                           sp.tokens, now)
+                return sp.tokens
+            resident = sp.tokens
+        else:
+            resident = pool.acquire_prefix(session_id, toks, now=now)
+            if resident >= len(toks):
+                if self.kv_registry is not None:
+                    self.kv_registry.touch(session_id, self.instance_id,
+                                           resident, now)
+                return resident
+        if resident <= 0:
+            return 0
+        tokens = self._extend_session(session_id, toks, resident, now)
+        if tokens and self.kv_registry is not None:
+            self.kv_registry.touch(session_id, self.instance_id, tokens, now)
+        return tokens
+
+    def _extend_session(self, session_id: str, toks: List[int],
+                        resident: int, now: float) -> int:
+        """Suffix-only warm: feed ``toks[resident:]`` through batch-1
+        decode on top of the session's resident cache and write the
+        extended cache back.  The honest migration/warm cost becomes the
+        novel suffix, not the whole transcript."""
+        suffix = toks[resident:]
+        C = self.cache["k"].shape[2]
+        if resident + len(suffix) > min(C, self.max_seq):
+            return 0
+        got = self.pool.gather_contiguous(session_id, self.max_seq)
+        if got is None:
+            return 0
+        k, v, cached = got
+        if cached != resident:
+            return 0
+        pad = C - k.shape[1]
+        if pad < 0:
+            return 0
+        row: Dict[str, Any] = {
+            "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))[:, None],
+            "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))[:, None],
+            "pos": jnp.asarray([resident], jnp.int32),
+        }
+        for key in self.cache:
+            if key not in row:
+                ax = _cache_slot_axis(key)
+                shp = list(self.cache[key].shape)
+                shp[ax] = 1
+                row[key] = jnp.zeros(shp, self.cache[key].dtype)
+        if self.model.decode_chunk is not None:
+            if self._extend_chunk is None:
+                self._extend_chunk = jax.jit(self.model.decode_chunk)
+            T = max(1, self.prefill_chunk or 8)
+            i = 0
+            while i < len(suffix):
+                n = min(T, len(suffix) - i)
+                tk = np.zeros((1, T), np.int32)
+                tk[0, :n] = suffix[i:i + n]
+                _logits, row = self._extend_chunk(
+                    self.params, jnp.asarray(tk),
+                    jnp.asarray([n], jnp.int32), row)
+                i += n
+        else:
+            if self._extend_step is None:
+                self._extend_step = jax.jit(self.model.decode_step)
+            for t in suffix:
+                _logits, row = self._extend_step(
+                    self.params, jnp.asarray([t], jnp.int32), row)
+        tokens = resident + len(suffix)
+        kk = row["k"][:, 0, :tokens]
+        vv = row["v"][:, 0, :tokens]
+        if not self.pool.write_session(session_id, kk, vv, tokens, now,
+                                       token_ids=toks):
+            return 0
+        self.metrics.prefills += 1
+        self.metrics.prefill_tokens += len(suffix)
         return tokens
 
     # ----------------------------------------------------------------- step
@@ -547,6 +717,11 @@ class InferenceEngine:
                 req = self.slots[i]
                 toks[i, 0] = req.generated[-1] if req.generated else 0
                 valid[i] = 1
+        if self._prefix_share_ok:
+            for i in active:
+                ids = self._slot_tokens.get(i)
+                if ids is not None and valid[i]:
+                    ids.extend(int(t) for t in toks[i, :valid[i]])
         logits, self.cache = self._decode_chunk(
             self.params, jnp.asarray(toks), jnp.asarray(valid), self.cache)
         self.metrics.decode_steps += 1
@@ -593,6 +768,12 @@ class InferenceEngine:
                     mask[i] = True
             if not mask.any():
                 break
+            if self._prefix_share_ok:
+                for i in active:
+                    if mask[i]:
+                        ids = self._slot_tokens.get(i)
+                        if ids is not None:
+                            ids.append(int(toks[i]))
             logits, self.cache = self._masked_decode(
                 self.params, jnp.asarray(toks), self.cache,
                 jnp.asarray(mask))
@@ -620,6 +801,7 @@ class InferenceEngine:
         self.slots[slot] = None
         self._active_mask[slot] = False
         self._pending_prompt.pop(slot, None)
+        self._slot_tokens.pop(slot, None)
         if req is not None:
             self._req_rng.pop(req.request_id, None)
 
@@ -635,8 +817,12 @@ class InferenceEngine:
             if isinstance(self.pool, PagedKVPool):
                 k = row["k"][:, 0, :tokens]
                 v = row["v"][:, 0, :tokens]
+                ids = self._slot_tokens.get(slot)
+                if ids is not None and len(ids) != tokens:
+                    ids = None      # provenance lost: keep the write opaque
                 if tokens <= self.max_seq:
-                    self.pool.write_session(req.session_id, k, v, tokens, now)
+                    self.pool.write_session(req.session_id, k, v, tokens, now,
+                                            token_ids=ids)
             else:
                 self.pool.store(req.session_id,
                                 jax.tree_util.tree_map(lambda x: x, row),
@@ -689,6 +875,7 @@ class InferenceEngine:
                     n += 1
                     self._vacate_slot(slot)
             self._pending_prompt.clear()
+            self._slot_tokens.clear()
             with self._done_lock:
                 self._callbacks.clear()
             self.metrics.queued = 0
@@ -713,6 +900,11 @@ class InferenceEngine:
                 "completed": m.completed, "decode_steps": m.decode_steps,
                 "prefills": m.prefills, "prefill_tokens": m.prefill_tokens,
                 "prefix_hits": m.prefix_hits,
+                "shared_prefix_hits": m.shared_prefix_hits,
+                "shared_prefix_tokens": m.shared_prefix_tokens,
+                "prefix_sharing": (dict(self.pool.stats)
+                                   if isinstance(self.pool, PagedKVPool)
+                                   else {}),
                 "tokens_generated": m.tokens_generated,
                 "queue_limit": self.max_queue,
                 "queue_saturation": self.saturation(),

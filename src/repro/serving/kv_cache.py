@@ -9,6 +9,18 @@ migration — the engine consults those hints instead of blind LRU, which is
 exactly the paper's remedy for "generic eviction heuristics that discard
 caches about to be reused".
 
+Cross-session prefix sharing: the pool keeps a radix index at page
+granularity — ``(parent_page, token_block) -> page`` with the root parent
+``-1`` — over every session whose page contents are a known function of a
+token prefix (``SessionPages.token_ids``).  Pages are refcounted; a cold
+session whose prompt prefix is resident *acquires* the matching chain
+(``acquire_prefix``) and prefills only its novel suffix.  Divergence is
+copy-on-write: ``write_session`` keeps the still-common full pages in
+place (shared or not — their bytes are already correct) and gives the
+diverging tail fresh pages, so no session ever observes another session's
+writes.  Eviction and ``release`` decref; a page is freed (and unindexed)
+only when its last reference drops.
+
 The pool also exposes ``gather_contiguous`` to materialize a sequence's
 cache into the dense per-slot layout the XLA decode path uses, and the page
 table format the Pallas paged-attention kernel consumes.
@@ -18,7 +30,7 @@ from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,12 +38,20 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 
+# radix-index root: the "parent" of a session's first page
+_ROOT = -1
+
 
 @dataclass
 class SessionPages:
     session_id: str
     pages: List[int] = field(default_factory=list)
     tokens: int = 0                  # valid tokens across pages
+    # token ids whose K/V the pages hold, in position order.  Valid (and
+    # eligible for sharing / keep-in-place rewrites) only when
+    # len(token_ids) == tokens; sessions built through raw allocate() are
+    # opaque (token_ids == []) and never enter the prefix index.
+    token_ids: List[int] = field(default_factory=list)
     pinned: bool = False             # retain hint from the global controller
     offloaded: bool = False          # "far memory" (host) residency
     last_used: float = 0.0
@@ -41,8 +61,8 @@ class PagedKVPool:
     """One pool per engine instance.
 
     The pool stores K and V as [L, n_pages, page_size, Hkv, Dh].  On real
-    TPU hardware this lives in HBM; pages are the granularity of both
-    eviction and session migration (the paper's K,V migration maps to
+    TPU hardware this lives in HBM; pages are the granularity of eviction,
+    sharing and session migration (the paper's K,V migration maps to
     copying a session's page list between instances' pools).
     """
 
@@ -60,6 +80,17 @@ class PagedKVPool:
         self.v = jnp.zeros(shape, dt)
         self._free: List[int] = list(range(n_pages))
         self._sessions: Dict[str, SessionPages] = {}
+        # page -> number of session page-lists containing it
+        self._ref: Dict[int, int] = {}
+        # prefix index: parent page (or _ROOT) -> {token block -> page}.
+        # The index holds no references of its own — entries die with the
+        # page — and a page has at most one entry (its _page_key).
+        self._index: Dict[int, Dict[Tuple[int, ...], int]] = {}
+        self._page_key: Dict[int, Tuple[int, Tuple[int, ...]]] = {}
+        self.stats: Dict[str, int] = {
+            "prefix_queries": 0, "prefix_hits": 0, "prefix_tokens": 0,
+            "cow_copies": 0, "dedup_pages": 0, "evictions": 0,
+        }
         self._lock = threading.RLock()
 
     # ---------------------------------------------------------- allocation
@@ -70,36 +101,91 @@ class PagedKVPool:
         with self._lock:
             return len(self._free)
 
+    def _free_page(self, page: int) -> None:
+        """Return ``page`` to the free list and drop its index entries."""
+        self._unindex(page)
+        sub = self._index.pop(page, None)
+        if sub:
+            # orphan any children: their chain prefix no longer exists, so
+            # they must not be discoverable under a recycled parent id
+            for child in sub.values():
+                self._page_key.pop(child, None)
+        self._ref.pop(page, None)
+        self._free.append(page)
+
+    def _incref(self, page: int) -> None:
+        self._ref[page] = self._ref.get(page, 0) + 1
+
+    def _decref(self, page: int) -> None:
+        r = self._ref.get(page, 0) - 1
+        if r <= 0:
+            self._free_page(page)
+        else:
+            self._ref[page] = r
+
+    def _alloc_page(self, now: float, avoid: Optional[str] = None
+                    ) -> Optional[int]:
+        while not self._free:
+            if not self._evict_one(now, avoid=avoid):
+                return None
+        page = self._free.pop()
+        self._ref[page] = 1
+        return page
+
     def allocate(self, session_id: str, tokens: int, now: float = 0.0,
                  evict: bool = True) -> Optional[SessionPages]:
-        """Reserve pages for ``tokens`` new tokens of a session."""
+        """Reserve pages for ``tokens`` new tokens of a session.
+
+        Raw reservations carry no token identity: the session becomes
+        opaque to the prefix index until a ``write_session`` with
+        ``token_ids`` re-describes its contents.
+        """
         with self._lock:
             sp = self._sessions.setdefault(session_id,
                                            SessionPages(session_id))
             have = len(sp.pages) * self.page_size
             need_pages = self.pages_needed(max(0, sp.tokens + tokens - have))
-            while len(self._free) < need_pages:
-                if not evict or not self._evict_one(now):
-                    return None
+            got: List[int] = []
             for _ in range(need_pages):
-                sp.pages.append(self._free.pop())
+                if evict:
+                    page = self._alloc_page(now, avoid=session_id)
+                elif self._free:
+                    page = self._free.pop()
+                    self._ref[page] = 1
+                else:
+                    page = None
+                if page is None:
+                    for p in got:
+                        self._decref(p)
+                    return None
+                got.append(page)
+            sp.pages.extend(got)
             sp.tokens += tokens
+            sp.token_ids = []
             sp.last_used = now
             return sp
 
-    def _evict_one(self, now: float) -> bool:
-        """Evict the LRU unpinned session (hint-aware, unlike vanilla LRU)."""
-        cands = [s for s in self._sessions.values() if s.pages and not s.pinned]
+    def _evict_one(self, now: float, avoid: Optional[str] = None) -> bool:
+        """Evict the LRU unpinned session (hint-aware, unlike vanilla LRU).
+
+        Shared pages survive eviction of one owner — only their last
+        reference frees them — so evicting a donor never corrupts the
+        sessions that acquired its prefix."""
+        cands = [s for s in self._sessions.values()
+                 if s.pages and not s.pinned and s.session_id != avoid]
         if not cands:
             return False
         victim = min(cands, key=lambda s: s.last_used)
         self._release(victim)
+        self.stats["evictions"] += 1
         return True
 
     def _release(self, sp: SessionPages) -> None:
-        self._free.extend(sp.pages)
+        for p in sp.pages:
+            self._decref(p)
         sp.pages = []
         sp.tokens = 0
+        sp.token_ids = []
         sp.offloaded = False
 
     def release(self, session_id: str) -> None:
@@ -107,6 +193,102 @@ class PagedKVPool:
             sp = self._sessions.pop(session_id, None)
             if sp is not None:
                 self._release(sp)
+
+    # --------------------------------------------------------- prefix index
+    def _unindex(self, page: int) -> None:
+        key = self._page_key.pop(page, None)
+        if key is not None:
+            parent, block = key
+            children = self._index.get(parent)
+            if children is not None and children.get(block) == page:
+                del children[block]
+                if not children:
+                    self._index.pop(parent, None)
+
+    def _index_page(self, parent: int, block: Tuple[int, ...],
+                    page: int) -> None:
+        if page in self._page_key:      # one entry per page
+            return
+        children = self._index.setdefault(parent, {})
+        if block in children:           # first writer wins
+            return
+        children[block] = page
+        self._page_key[page] = (parent, block)
+
+    def _match_prefix_locked(self, ids: List[int]
+                             ) -> Tuple[List[int], int]:
+        """Longest resident chain covering a prefix of ``ids``.
+
+        Full-page blocks must match a stored block exactly; the walk ends
+        at the first block matched only partially (the page is shared up
+        to the common token prefix — positions beyond it are never read,
+        and rewrites COW)."""
+        P = self.page_size
+        pages: List[int] = []
+        matched = 0
+        parent = _ROOT
+        n = len(ids)
+        while matched < n:
+            block = tuple(ids[matched:matched + P])
+            children = self._index.get(parent)
+            if not children:
+                break
+            page = children.get(block)
+            if page is not None and len(block) == P:
+                pages.append(page)
+                matched += P
+                parent = page
+                continue
+            best, best_c = None, 0
+            for key, kpage in children.items():
+                m = min(len(key), len(block))
+                c = 0
+                while c < m and key[c] == block[c]:
+                    c += 1
+                if c > best_c:
+                    best, best_c = kpage, c
+            if best is not None:
+                pages.append(best)
+                matched += best_c
+            break
+        return pages, matched
+
+    def match_prefix(self, token_ids: List[int]) -> int:
+        """Tokens of ``token_ids`` resident in the index (read-only probe)."""
+        with self._lock:
+            _pages, matched = self._match_prefix_locked(
+                [int(t) for t in token_ids])
+            return matched
+
+    def acquire_prefix(self, session_id: str, token_ids: List[int],
+                       now: float = 0.0) -> int:
+        """Adopt the longest indexed chain covering a prefix of
+        ``token_ids`` as the (cold) session's initial pages.
+
+        Returns the number of tokens now cached for the session (0 on a
+        miss or if the session already holds pages)."""
+        ids = [int(t) for t in token_ids]
+        with self._lock:
+            sp = self._sessions.get(session_id)
+            if sp is not None and sp.pages:
+                return 0
+            self.stats["prefix_queries"] += 1
+            pages, matched = self._match_prefix_locked(ids)
+            if matched <= 0:
+                return 0
+            for p in pages:
+                self._incref(p)
+            if sp is None:
+                sp = SessionPages(session_id)
+                self._sessions[session_id] = sp
+            sp.pages = list(pages)
+            sp.tokens = matched
+            sp.token_ids = ids[:matched]
+            sp.last_used = now
+            sp.offloaded = False
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_tokens"] += matched
+            return matched
 
     # ----------------------------------------------------------- hint hooks
     def on_hint(self, session_id: str, hint: str) -> None:
@@ -125,36 +307,95 @@ class PagedKVPool:
                 sp.offloaded = True
                 sp.pinned = False
             elif hint == "migrate_out":
-                # ownership moved away; free local pages
+                # ownership moved away; drop local references (shared pages
+                # stay alive for their remaining owners)
                 self._release(sp)
                 self._sessions.pop(session_id, None)
             elif hint == "migrate_in":
                 pass  # pages arrive via export/import below
 
     # ----------------------------------------------------------- migration
-    def export_session(self, session_id: str) -> Optional[Tuple[np.ndarray, np.ndarray, int]]:
+    def compatible_with(self, other: "PagedKVPool") -> bool:
+        """Page payloads are portable between pools of identical geometry."""
+        return (isinstance(other, PagedKVPool)
+                and self.page_size == other.page_size
+                and self.k.shape[0] == other.k.shape[0]
+                and self.k.shape[2:] == other.k.shape[2:]
+                and self.k.dtype == other.k.dtype)
+
+    def export_session(self, session_id: str) -> Optional[Dict[str, Any]]:
         """Serialize a session's K/V pages (the migration payload)."""
         with self._lock:
             sp = self._sessions.get(session_id)
             if sp is None or not sp.pages:
                 return None
             idx = jnp.asarray(sp.pages)
-            return (np.asarray(self.k[:, idx]), np.asarray(self.v[:, idx]),
-                    sp.tokens)
+            return {"k": np.asarray(self.k[:, idx]),
+                    "v": np.asarray(self.v[:, idx]),
+                    "tokens": sp.tokens,
+                    "token_ids": list(sp.token_ids),
+                    "page_size": self.page_size}
 
-    def import_session(self, session_id: str, payload, now: float = 0.0) -> bool:
-        kpages, vpages, tokens = payload
+    def import_session(self, session_id: str, payload,
+                       now: float = 0.0) -> bool:
+        """Install a migration payload, deduplicating against the local
+        prefix index: full pages whose token blocks are already resident
+        are adopted (refcounted) instead of copied."""
+        if payload is None:
+            return False
+        if isinstance(payload, dict):
+            kpages, vpages = payload["k"], payload["v"]
+            tokens = payload["tokens"]
+            token_ids = payload.get("token_ids") or []
+            if payload.get("page_size", self.page_size) != self.page_size:
+                return False
+        else:   # legacy (k, v, tokens) tuple
+            kpages, vpages, tokens = payload
+            token_ids = []
         n = kpages.shape[1]
+        ids = [int(t) for t in token_ids]
+        if len(ids) != tokens:
+            ids = []
+        P = self.page_size
         with self._lock:
-            while len(self._free) < n:
-                if not self._evict_one(now):
+            old = self._sessions.pop(session_id, None)
+            if old is not None:
+                self._release(old)
+            # adopt resident full pages (exact-chain matches only: a
+            # partially matched page cannot be spliced with payload pages)
+            shared: List[int] = []
+            if ids:
+                chain, matched = self._match_prefix_locked(ids)
+                shared = chain[:matched // P]
+                for p in shared:
+                    self._incref(p)
+                self.stats["dedup_pages"] += len(shared)
+            first_new = len(shared)
+            fresh: List[int] = []
+            for _ in range(first_new, n):
+                page = self._alloc_page(now, avoid=session_id)
+                if page is None:
+                    for p in shared:
+                        self._decref(p)
+                    for p in fresh:
+                        self._decref(p)
                     return False
-            pages = [self._free.pop() for _ in range(n)]
-            idx = jnp.asarray(pages)
-            self.k = self.k.at[:, idx].set(jnp.asarray(kpages))
-            self.v = self.v.at[:, idx].set(jnp.asarray(vpages))
+                fresh.append(page)
+            if fresh:
+                idx = jnp.asarray(fresh)
+                self.k = self.k.at[:, idx].set(jnp.asarray(kpages[:, first_new:]))
+                self.v = self.v.at[:, idx].set(jnp.asarray(vpages[:, first_new:]))
+            pages = shared + fresh
+            if ids:
+                parent = shared[-1] if shared else _ROOT
+                for b, page in enumerate(fresh, start=first_new):
+                    block = tuple(ids[b * P:min((b + 1) * P, tokens)])
+                    if block:
+                        self._index_page(parent, block, page)
+                    parent = page
             self._sessions[session_id] = SessionPages(
-                session_id, pages=pages, tokens=tokens, last_used=now)
+                session_id, pages=pages, tokens=tokens, token_ids=ids,
+                last_used=now)
             return True
 
     # ------------------------------------------------------------- reading
@@ -184,9 +425,102 @@ class PagedKVPool:
         v = self.v[:, idx].reshape(L, -1, *self.v.shape[3:])[:, :max_seq]
         return k, v, tokens
 
+    # ------------------------------------------------------------- writing
     def write_session(self, session_id: str, k_seq, v_seq, tokens: int,
-                      now: float = 0.0) -> bool:
-        """Store a sequence's dense K/V ([L, S, Hkv, Dh]) into pages."""
+                      now: float = 0.0, token_ids=None) -> bool:
+        """Store a sequence's dense K/V ([L, S, Hkv, Dh]) into pages.
+
+        With ``token_ids`` (one id per cached position) the write is
+        sharing-aware: full pages whose token prefix is unchanged stay in
+        place untouched — shared pages stay shared, which *is* the
+        copy-on-write: the diverging tail gets fresh pages while the old
+        tail pages survive for their other owners.  New full pages (and
+        the partial tail) enter the prefix index for future cross-session
+        hits.  Without ``token_ids`` the legacy release-and-rewrite path
+        runs (opaque contents, no sharing)."""
+        ids = None
+        if token_ids is not None:
+            ids = [int(t) for t in token_ids]
+            if len(ids) != tokens:
+                ids = None
+        if ids is None:
+            return self._write_opaque(session_id, k_seq, v_seq, tokens, now)
+        P = self.page_size
+        n_blocks = self.pages_needed(tokens)
+        with self._lock:
+            sp = self._sessions.setdefault(session_id,
+                                           SessionPages(session_id))
+            old_pages = list(sp.pages)
+            old_valid = len(sp.token_ids) == sp.tokens and sp.tokens > 0
+            common = 0
+            if old_valid:
+                m = min(len(sp.token_ids), tokens)
+                while common < m and sp.token_ids[common] == ids[common]:
+                    common += 1
+            keep = min(common // P, sp.tokens // P, len(old_pages))
+            # build the new chain before dropping the old tail, so an
+            # unchanged tail is re-adopted instead of freed and rewritten
+            pages = old_pages[:keep]
+            parent = pages[-1] if pages else _ROOT
+            adopted: List[int] = []
+            fresh: List[int] = []
+            novel: List[Tuple[int, int]] = []       # (block index, page)
+            ok = True
+            for b in range(keep, n_blocks):
+                block = tuple(ids[b * P:min((b + 1) * P, tokens)])
+                child = self._index.get(parent, {}).get(block)
+                if child is not None and self._ref.get(child, 0) > 0:
+                    self._incref(child)
+                    adopted.append(child)
+                    pages.append(child)
+                    parent = child
+                    continue
+                page = self._alloc_page(now, avoid=session_id)
+                if page is None:
+                    ok = False
+                    break
+                fresh.append(page)
+                novel.append((b, page))
+                self._index_page(parent, block, page)
+                pages.append(page)
+                parent = page
+            if not ok:
+                for p in adopted + fresh:
+                    self._decref(p)
+                return False
+            self.stats["dedup_pages"] += len(adopted)
+            # divergence from a shared page = the copy-on-write event: the
+            # old owner keeps the page, this session wrote a fresh one
+            new_set = set(pages)
+            self.stats["cow_copies"] += sum(
+                1 for p in old_pages[keep:]
+                if p not in new_set and self._ref.get(p, 0) > 1)
+            for p in old_pages[keep:]:
+                self._decref(p)
+            if novel:
+                pad = n_blocks * P - k_seq.shape[1]
+                if pad:
+                    padding = [(0, 0), (0, pad), (0, 0), (0, 0)]
+                    k_seq = jnp.pad(k_seq, padding)
+                    v_seq = jnp.pad(v_seq, padding)
+                kp = k_seq.reshape(self.cfg.n_layers, n_blocks, P,
+                                   *k_seq.shape[2:])
+                vp = v_seq.reshape(self.cfg.n_layers, n_blocks, P,
+                                   *v_seq.shape[2:])
+                bsel = jnp.asarray([b for b, _ in novel])
+                psel = jnp.asarray([p for _, p in novel])
+                self.k = self.k.at[:, psel].set(kp[:, bsel])
+                self.v = self.v.at[:, psel].set(vp[:, bsel])
+            sp.pages = pages
+            sp.tokens = tokens
+            sp.token_ids = ids
+            sp.last_used = now
+            sp.offloaded = False
+            return True
+
+    def _write_opaque(self, session_id: str, k_seq, v_seq, tokens: int,
+                      now: float) -> bool:
+        """Legacy path: fresh exclusive pages, contents unindexed."""
         self.release(session_id)
         sp = self.allocate(session_id, tokens, now)
         if sp is None:
@@ -206,6 +540,51 @@ class PagedKVPool:
             self.k = self.k.at[:, idx].set(kp)
             self.v = self.v.at[:, idx].set(vp)
         return True
+
+    # ----------------------------------------------------------- invariants
+    def check_invariants(self) -> None:
+        """Assert the pool's aliasing/accounting invariants (test hook).
+
+        * every page is exactly one of: free, or referenced by >= 1 session;
+        * refcounts equal the number of session page-lists containing the
+          page (no double-free, no leak: free + live == n_pages);
+        * no page appears twice in one session (aliased positions);
+        * index entries point at live pages, agree with the reverse map,
+          and hang off live parents.
+        """
+        with self._lock:
+            free = list(self._free)
+            assert len(free) == len(set(free)), "duplicate pages in free list"
+            occ: Dict[int, int] = {}
+            for sp in self._sessions.values():
+                assert len(sp.pages) == len(set(sp.pages)), \
+                    f"session {sp.session_id} owns a page twice"
+                assert sp.tokens <= len(sp.pages) * self.page_size, \
+                    f"session {sp.session_id} tokens exceed its pages"
+                assert len(sp.token_ids) in (0, sp.tokens), \
+                    f"session {sp.session_id} token_ids length mismatch"
+                for p in sp.pages:
+                    occ[p] = occ.get(p, 0) + 1
+            for p, n in occ.items():
+                assert self._ref.get(p, 0) == n, \
+                    f"page {p}: refcount {self._ref.get(p, 0)} != {n} owners"
+                assert p not in free, f"page {p} is both owned and free"
+            live = {p for p, r in self._ref.items() if r > 0}
+            assert live == set(occ), \
+                f"refcounted pages {live} != owned pages {set(occ)}"
+            assert len(free) + len(live) == self.n_pages, \
+                f"{len(free)} free + {len(live)} live != {self.n_pages}"
+            for page, (parent, block) in self._page_key.items():
+                assert self._ref.get(page, 0) > 0, \
+                    f"index entry for free page {page}"
+                assert self._index.get(parent, {}).get(block) == page, \
+                    f"reverse map for page {page} disagrees with index"
+                assert parent == _ROOT or self._ref.get(parent, 0) > 0, \
+                    f"page {page} indexed under freed parent {parent}"
+            for parent, children in self._index.items():
+                for block, page in children.items():
+                    assert self._page_key.get(page) == (parent, block), \
+                        f"index entry ({parent},{block})->{page} unmapped"
 
 
 class StateCachePool:

@@ -11,14 +11,19 @@ concrete replicas instead of simulated instances:
   the Router's precedence (pin → KV locality → managed-state locality →
   weighted table → least-ETA) applies unchanged, so a session's follow-up
   lands where its prefix KV lives without any pool-specific routing code.
-* **Migration replays the transcript.**  ``migrate(session_id, src, dst)``
-  physically rebuilds the session on the destination: the managed-state
-  layer materializes the ``SessionTranscript`` at the destination node, the
-  destination engine prefills it straight into its cache pool
-  (``InferenceEngine.warm_session``), and the ``KVRegistry`` re-homes reuse
-  expectations — after which the session's next call is a warm continuation
-  on the new replica.  Works across heterogeneous replicas because tokens,
-  not cache pages, are the migration payload.
+* **Migration ships pages when it can, replays tokens when it must.**
+  ``migrate(session_id, src, dst)`` physically rebuilds the session on the
+  destination.  When both replicas run geometry-compatible paged pools, the
+  source's K/V pages are exported *before* the registry frees them and
+  imported at the destination (deduplicated against its prefix index), so
+  ``warm_session`` finds the prefix resident and prefills only the
+  transcript tail — a page transfer instead of a full re-prefill.
+  Otherwise (heterogeneous configs, opaque caches, ``page_migration``
+  off) the managed-state layer materializes the ``SessionTranscript`` at
+  the destination node and the destination engine prefills it straight
+  into its cache pool (``InferenceEngine.warm_session``).  Either way the
+  ``KVRegistry`` re-homes reuse expectations and the session's next call
+  is a warm continuation on the new replica.
 * **In-flight futures are never broken.**  If the session has a call running
   on the source engine, the migration defers until it resolves
   (``EngineBridge.defer_until_idle``); queued same-session calls move with
@@ -47,6 +52,7 @@ from ..core.future import FutureState
 from ..core.stubs import AgentSpec
 from .bridge import EngineBridge, EngineMethod
 from .engine import InferenceEngine
+from .kv_cache import PagedKVPool
 from .sampler import SamplingParams
 
 
@@ -92,9 +98,14 @@ class EnginePool:
             "migrations": 0, "migrations_deferred": 0,
             "migrations_fallback": 0, "migrations_noop": 0,
             "futures_rerouted": 0, "replayed_tokens": 0,
+            "migrations_page_shipped": 0, "pages_shipped": 0,
             "replica_failures": 0, "failed_inflight": 0,
             "sessions_recovered": 0,
         }
+        # page-shipping fast path for migrate (export/import K/V pages
+        # instead of transcript-replay re-prefill); benchmarks/tests can
+        # force the replay path by clearing this
+        self.page_migration = True
 
     # -------------------------------------------------------------- replicas
     def add_replica(self, instance_id: str, bridge: EngineBridge) -> None:
@@ -236,6 +247,15 @@ class EnginePool:
         dst_iid = resolved
         now = self.rt.kernel.now()
 
+        # 0. Page-shipping fast path: snapshot the session's K/V pages at
+        #    the source *before* the registry migrate frees them.  Only
+        #    possible when both replicas run geometry-compatible paged
+        #    pools, the destination can reuse a token-tagged prefix, and
+        #    the source cache isn't opaque (no token provenance).
+        transcript = dst_bridge.transcript.tokens(sid)
+        payload = self._export_pages(src_iid, dst_bridge.engine, sid,
+                                     transcript)
+
         # 1. Registry re-homes reuse expectations first: ``migrate`` moves
         #    the residency record and fires migrate_out at the source pool,
         #    freeing its pages.  (Must precede the replay — warm_session's
@@ -244,13 +264,18 @@ class EnginePool:
         self.rt.kv_registry.migrate(sid, src_iid, dst_iid)
 
         # 2. State layer does the rebuild: reading the transcript through the
-        #    destination bridge materializes it at the destination node, and
-        #    the destination engine prefills it straight into its session
-        #    cache pool (touching the registry with the replayed count).  A
-        #    follow-up racing this window hits the engine's fallback_prompt
-        #    path — cold-at-admission is always safe.
-        tokens = dst_bridge.transcript.tokens(sid)
-        replayed = dst_bridge.engine.warm_session(sid, tokens)
+        #    destination bridge materializes it at the destination node.  If
+        #    the page snapshot landed, warm_session finds the prefix already
+        #    resident and prefills only the transcript tail; otherwise the
+        #    destination engine prefills the full transcript straight into
+        #    its session cache pool (touching the registry with the replayed
+        #    count).  A follow-up racing this window hits the engine's
+        #    fallback_prompt path — cold-at-admission is always safe.
+        shipped = 0
+        if payload is not None:
+            if dst_bridge.engine.pool.import_session(sid, payload, now=now):
+                shipped = int(payload["k"].shape[1])
+        replayed = dst_bridge.engine.warm_session(sid, transcript)
 
         # 3. Any other managed state of the session follows it.
         self.rt.migrate_session_state(sid, self.name, dst_ctrl.inst.node_id)
@@ -274,11 +299,66 @@ class EnginePool:
         with self._lock:
             self.migrations.append(dict(
                 session_id=sid, src=src_iid, dst=dst_iid,
-                replayed_tokens=replayed, futures_moved=moved, at=now))
+                replayed_tokens=replayed, futures_moved=moved, at=now,
+                mode="pages" if shipped else "replay",
+                pages_shipped=shipped))
             self.stats["migrations"] += 1
             self.stats["futures_rerouted"] += moved
             self.stats["replayed_tokens"] += replayed
+            if shipped:
+                self.stats["migrations_page_shipped"] += 1
+                self.stats["pages_shipped"] += shipped
         return moved + 1
+
+    def _export_pages(self, src_iid: str, dst_engine: InferenceEngine,
+                      sid: str, transcript: List[int]
+                      ) -> Optional[Dict[str, Any]]:
+        """Session K/V payload for page-shipping, or ``None`` when the
+        replicas cannot exchange pages: ``page_migration`` off, either pool
+        unpaged or geometry-incompatible, the destination engine unable to
+        extend a resident prefix (sharing disabled), or the source cache
+        opaque (no token provenance — the destination could not verify what
+        the bytes cover, so the transcript replay is the safe path).
+
+        The payload is trimmed to the longest source-cache prefix that
+        matches the transcript: a multi-turn cache skips each turn's final
+        generated token (sampled but never fed), so only the prefix up to
+        the first such hole is worth shipping — the destination's
+        ``warm_session`` prefills the rest from the transcript."""
+        if not self.page_migration:
+            return None
+        src_bridge = self.bridge_of(src_iid)
+        if src_bridge is None:
+            return None
+        src_pool = src_bridge.engine.pool
+        dst_pool = dst_engine.pool
+        if not (isinstance(src_pool, PagedKVPool)
+                and isinstance(dst_pool, PagedKVPool)
+                and getattr(dst_engine, "_prefix_share_ok", False)
+                and src_pool.compatible_with(dst_pool)):
+            return None
+        try:
+            payload = src_pool.export_session(sid)
+        except Exception:  # noqa: BLE001 — fall back to transcript replay
+            return None
+        if (payload is None or not payload.get("tokens")
+                or len(payload.get("token_ids") or ())
+                != payload["tokens"]):
+            return None
+        ids = payload["token_ids"]
+        common = 0
+        for a, b in zip(ids, transcript):
+            if int(a) != int(b):
+                break
+            common += 1
+        if common == 0:
+            return None
+        if common < payload["tokens"]:
+            pages = -(-common // payload["page_size"])     # ceil div
+            payload = dict(payload, k=payload["k"][:, :pages],
+                           v=payload["v"][:, :pages],
+                           tokens=common, token_ids=list(ids[:common]))
+        return payload
 
     def _reroute(self, fut, src_ctrl, dst_ctrl) -> int:
         """Hand one not-yet-executed session future to the destination."""

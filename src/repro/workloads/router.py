@@ -120,6 +120,7 @@ def build_pool_runtime(*, replicas: int = 3, arch: str = "qwen3_0_6b",
                        heterogeneous: bool = False,
                        prefill_chunk: int = 8, max_queue: int = 0,
                        max_retries: int = 0, retry_backoff: float = 0.05,
+                       prefix_sharing: bool = True,
                        decode=None, seed: int = 0) -> NalarRuntime:
     """One ``llm`` agent type backed by an ``EnginePool`` of real replicas.
 
@@ -139,7 +140,10 @@ def build_pool_runtime(*, replicas: int = 3, arch: str = "qwen3_0_6b",
     (0 = legacy monolithic bucket prefill); ``max_queue`` — per-replica
     admission bound (0 = unbounded queueing, the baseline collapse mode);
     ``max_retries``/``retry_backoff`` — retry-ladder budget so admission
-    rejections back off and reroute instead of failing the request.
+    rejections back off and reroute instead of failing the request;
+    ``prefix_sharing`` — cross-session KV prefix index with copy-on-write
+    pages (``False`` = the baseline that re-prefills identical system
+    prompts per session).
     """
     import jax
 
@@ -165,7 +169,8 @@ def build_pool_runtime(*, replicas: int = 3, arch: str = "qwen3_0_6b",
         engines.append(InferenceEngine(model, params, max_batch=mb,
                                        max_seq=max_seq,
                                        prefill_chunk=prefill_chunk,
-                                       max_queue=max_queue))
+                                       max_queue=max_queue,
+                                       prefix_sharing=prefix_sharing))
     register_engine_pool(
         rt, "llm", engines,
         sampling=SamplingParams(max_new_tokens=max_new_tokens),

@@ -12,6 +12,7 @@ Covers the tentpole contract:
 """
 
 import jax
+import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
@@ -323,3 +324,112 @@ def test_engine_warm_session_populates_cache(model_setup):
     assert req.prefix_reused_tokens == cached     # resumed, not re-prefilled
     assert engine.metrics.prefill_tokens == pt
     assert engine.warm_session("s-warm", []) == 0
+
+
+# ------------------------------------------------- page-shipping migration
+def test_migrate_ships_pages_and_matches_replay(model_setup):
+    """Page-shipping migrate must be a pure optimization: same destination
+    cache (numerically) and identical follow-up decode tokens as the
+    transcript-replay path, at a fraction of the prefill cost."""
+    cfg, model, params = model_setup
+
+    def one_run(page_migration):
+        rt, pool = make_pool_runtime(model, params)
+        pool.page_migration = page_migration
+        r1 = run_turn(rt, None, "the quick brown fox jumps over")
+        sid = session_of(rt)
+        src = r1.engine_id
+        dst = next(i for i in pool.instance_ids if i != src)
+        dst_engine = pool.bridge_of(dst).engine
+        pt0 = dst_engine.metrics.prefill_tokens
+        assert pool.migrate_session(sid, src, dst) >= 1
+        prefilled = dst_engine.metrics.prefill_tokens - pt0
+        k, v, tokens = dst_engine.pool.gather_contiguous(sid, 64)
+        dst_engine.pool.check_invariants()
+        r2 = run_turn(rt, sid, "and keeps running")
+        out = (np.asarray(k[:, :tokens]).copy(),
+               np.asarray(v[:, :tokens]).copy(), tokens,
+               list(r2.tokens), prefilled, dict(pool.stats),
+               list(pool.migrations))
+        rt.shutdown()
+        return out
+
+    k_r, v_r, t_r, gen_r, cost_r, stats_r, mig_r = one_run(False)
+    k_p, v_p, t_p, gen_p, cost_p, stats_p, mig_p = one_run(True)
+
+    # replay path untouched by the toggle
+    assert stats_r["migrations_page_shipped"] == 0
+    assert mig_r[0]["mode"] == "replay"
+    # shipped path actually shipped, and prefilled strictly less
+    assert stats_p["migrations_page_shipped"] == 1
+    assert stats_p["pages_shipped"] >= 1
+    assert mig_p[0]["mode"] == "pages"
+    assert 0 < cost_p < cost_r
+    # same destination state: cache covers the same tokens with the same
+    # values, and the next turn decodes the same tokens
+    assert t_r == t_p
+    np.testing.assert_allclose(k_p, k_r, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(v_p, v_r, rtol=2e-4, atol=2e-4)
+    assert gen_p == gen_r
+
+
+def test_migrate_page_ship_deferred_while_inflight(model_setup):
+    """The deferred (migrate-while-inflight) path also ships pages once the
+    in-flight call resolves, with the same warm follow-up."""
+    cfg, model, params = model_setup
+    rt, pool = make_pool_runtime(model, params)
+
+    run_turn(rt, None, "warm up this session first")
+    sid = session_of(rt)
+    src = rt.kv_registry.lookup(sid).instance_id
+    dst = next(i for i in pool.instance_ids if i != src)
+    src_bridge = pool.bridge_of(src)
+    dst_engine = pool.bridge_of(dst).engine
+
+    with src_bridge._cv:
+        src_bridge._session_active.add(sid)
+    pt0 = dst_engine.metrics.prefill_tokens
+    assert pool.migrate_session(sid, src, dst) == 1      # deferred
+    assert pool.stats["migrations_deferred"] == 1
+    assert pool.stats["migrations_page_shipped"] == 0    # nothing yet
+
+    src_bridge._advance_session(sid)                     # resolves -> fires
+    assert rt.kv_registry.lookup(sid).instance_id == dst
+    assert pool.stats["migrations_page_shipped"] == 1
+    assert pool.stats["pages_shipped"] >= 1
+    # the resident prefix covered all but the transcript tail: the rebuild
+    # cost is bounded by a page, not the whole transcript
+    transcript = pool.bridge_of(dst).transcript.tokens(sid)
+    assert 0 < dst_engine.metrics.prefill_tokens - pt0 < len(transcript)
+    dst_engine.pool.check_invariants()
+
+    r = run_turn(rt, sid, "after deferred migration")
+    assert r.engine_id == dst
+    assert r.prefix_reused_tokens > 0
+    rt.shutdown()
+
+
+def test_warm_session_shared_prefix_skips_redundant_prefill(model_setup):
+    """Regression for the warm_session waste: re-homing a session whose
+    (shared) prefix is already resident must not prefill anything."""
+    cfg, model, params = model_setup
+    engine = InferenceEngine(model, params, max_batch=2, max_seq=64)
+    toks = list(range(1, 39))
+
+    warmed = engine.warm_session("first", toks)
+    assert warmed == len(toks)
+    pf0 = engine.metrics.prefills
+    pt0 = engine.metrics.prefill_tokens
+    ds0 = engine.metrics.decode_steps
+
+    # a different session with the same transcript: everything resident
+    warmed2 = engine.warm_session("second", toks)
+    assert warmed2 == len(toks)
+    assert engine.metrics.prefills == pf0              # zero prefill steps
+    assert engine.metrics.prefill_tokens == pt0        # zero prefill tokens
+    assert engine.metrics.decode_steps == ds0          # zero decode steps
+    engine.pool.check_invariants()
+
+    # and re-warming the same session is also free
+    assert engine.warm_session("first", toks) == len(toks)
+    assert engine.metrics.prefill_tokens == pt0

@@ -1,0 +1,321 @@
+"""Property-based invariant suite for the shared-prefix ``PagedKVPool``.
+
+The prefix index aliases pages across sessions (refcounts + copy-on-write),
+which is exactly the kind of mutation machinery that corrupts caches
+silently unless the invariants are locked in: no page is ever double-owned
+or double-freed, refcounts equal the number of page-list references, page
+accounting balances (free + live == n_pages), and — the one that matters to
+users — no session ever reads bytes another session wrote after divergence.
+
+The oracle is deterministic content: position ``i`` of a session whose
+``token_ids[i] == t`` always holds ``f(t, i)``, the same function for every
+session.  That models the real engine property that K/V at a position is a
+pure function of the token prefix, and makes byte-leak detection exact: a
+session's ``gather_contiguous`` must equal ``f`` over its own ids after
+*every* operation, no matter how pages are shared, COW'd, evicted,
+exported, or imported underneath it.
+
+When hypothesis is not installed, the deterministic random-sampling
+fallback (tests/_hypothesis_fallback.py) stands in.
+"""
+
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.serving.kv_cache import PagedKVPool
+
+# ≥ 200 randomized interleavings in CI across the two schedule-driven
+# properties (the acceptance budget for this suite)
+INTERLEAVE_SETTINGS = dict(max_examples=120, deadline=None)
+SMALL_SETTINGS = dict(max_examples=25, deadline=None)
+
+L, HKV, DH = 2, 2, 4
+P = 4           # page_size: tiny so schedules cross page boundaries often
+N_PAGES = 12    # tight so eviction/alloc-failure paths are exercised
+
+
+def _cfg() -> ModelConfig:
+    return ModelConfig(arch_id="kvprop", family="dense", n_layers=L,
+                       d_model=HKV * DH, n_heads=HKV, n_kv_heads=HKV,
+                       dtype="float32")
+
+
+def make_pool(n_pages: int = N_PAGES) -> PagedKVPool:
+    return PagedKVPool(_cfg(), n_pages=n_pages, page_size=P,
+                       dtype=np.float32)
+
+
+def content(ids, offset: float = 0.0) -> np.ndarray:
+    """Deterministic K (or V, via offset) for a token sequence: position i
+    holds f(ids[i], i), identical across sessions — the property real
+    prefix caches rely on."""
+    S = len(ids)
+    base = np.asarray([(t * 31 + i * 7) % 1000 for i, t in enumerate(ids)],
+                      np.float32)
+    lay = np.arange(L, dtype=np.float32).reshape(L, 1, 1, 1)
+    out = base.reshape(1, S, 1, 1) + lay * 10_000.0
+    out = np.broadcast_to(out, (L, S, HKV, DH)).copy()
+    return out + offset
+
+
+def write(pool: PagedKVPool, sid: str, ids, now: float) -> bool:
+    k = content(ids)
+    v = content(ids, offset=0.5)
+    return pool.write_session(sid, k, v, len(ids), now=now, token_ids=ids)
+
+
+def assert_no_leakage(pool: PagedKVPool, oracle) -> None:
+    """Every live session's visible bytes == f over its own token ids."""
+    for sid, ids in oracle.items():
+        sp = pool.session(sid)
+        if sp is None or not sp.pages:
+            continue
+        got = pool.gather_contiguous(sid, max_seq=N_PAGES * P)
+        assert got is not None
+        k, v, tokens = got
+        assert tokens == len(ids)
+        np.testing.assert_array_equal(np.asarray(k[:, :tokens]),
+                                      content(ids),
+                                      err_msg=f"session {sid} K bytes leaked")
+        np.testing.assert_array_equal(np.asarray(v[:, :tokens]),
+                                      content(ids, offset=0.5),
+                                      err_msg=f"session {sid} V bytes leaked")
+
+
+# ----------------------------------------------------- random interleavings
+@given(st.integers(0, 10_000), st.integers(8, 26))
+@settings(**INTERLEAVE_SETTINGS)
+def test_random_interleaving_preserves_invariants(seed, n_ops):
+    """Randomized allocate/write/share/COW/release/evict schedules: the
+    pool's accounting invariants hold and no session's bytes ever change
+    under another session's mutations."""
+    rng = np.random.default_rng(seed)
+    pool = make_pool()
+    oracle = {}          # sid -> token ids the pool must reproduce
+    now = 0.0
+    for step in range(n_ops):
+        now += 1.0
+        op = rng.choice(["write", "rewrite", "share", "acquire", "release",
+                         "hint"], p=[0.3, 0.15, 0.2, 0.15, 0.1, 0.1])
+        sids = sorted(oracle)
+        if op == "write" or not sids:
+            sid = f"s{rng.integers(0, 6)}"
+            ids = [int(t) for t in rng.integers(0, 50, rng.integers(1, 17))]
+            if write(pool, sid, ids, now):
+                oracle[sid] = ids
+            else:
+                # failed writes must roll back: session state unchanged
+                sp = pool.session(sid)
+                if sid in oracle:
+                    assert sp is not None and sp.tokens == len(oracle[sid])
+        elif op == "rewrite":
+            # append/diverge on an existing session — the COW trigger
+            sid = sids[rng.integers(0, len(sids))]
+            old = oracle[sid]
+            cut = int(rng.integers(0, len(old) + 1))
+            ids = old[:cut] + [int(t) for t in
+                               rng.integers(50, 99, rng.integers(1, 9))]
+            if write(pool, sid, ids, now):
+                oracle[sid] = ids
+        elif op == "share":
+            # new session re-deriving a donor's prefix (plus its own tail):
+            # the write path must dedup into the donor's indexed pages
+            donor = oracle[sids[rng.integers(0, len(sids))]]
+            cut = int(rng.integers(1, len(donor) + 1))
+            ids = donor[:cut] + [int(t) for t in
+                                 rng.integers(50, 99, rng.integers(0, 5))]
+            sid = f"s{rng.integers(6, 10)}"
+            if write(pool, sid, ids, now):
+                oracle[sid] = ids
+        elif op == "acquire":
+            donor = oracle[sids[rng.integers(0, len(sids))]]
+            sid = f"a{rng.integers(0, 4)}"
+            if pool.session(sid) is None:
+                matched = pool.acquire_prefix(sid, donor, now=now)
+                if matched > 0:
+                    sp = pool.session(sid)
+                    assert sp is not None and sp.tokens == matched
+                    # adopted bytes must be the donor prefix, not garbage
+                    oracle[sid] = donor[:matched]
+                else:
+                    assert pool.session(sid) is None
+        elif op == "release":
+            sid = sids[rng.integers(0, len(sids))]
+            pool.release(sid)
+            oracle.pop(sid, None)
+        elif op == "hint":
+            sid = sids[rng.integers(0, len(sids))]
+            hint = ["retain", "drop", "release", "migrate_out"][
+                rng.integers(0, 4)]
+            pool.on_hint(sid, hint)
+            if hint in ("release", "migrate_out"):
+                oracle.pop(sid, None)
+            elif hint == "drop":
+                # un-pins only; pages stay until evicted
+                pass
+        pool.check_invariants()
+        # sessions evicted under pressure leave an empty page list; the
+        # oracle only checks sessions that still hold pages
+        for sid in list(oracle):
+            sp = pool.session(sid)
+            if sp is None or not sp.pages:
+                oracle.pop(sid, None)
+        assert_no_leakage(pool, oracle)
+    # teardown must balance the books completely
+    for sid in list(oracle):
+        pool.release(sid)
+    pool.check_invariants()
+
+
+@given(st.integers(0, 10_000))
+@settings(**INTERLEAVE_SETTINGS)
+def test_export_import_random_roundtrip(seed):
+    """Randomized export/import between two pools: imported sessions read
+    back the exporter's bytes, dedup against the local index never mixes
+    sessions, and both pools' invariants hold."""
+    rng = np.random.default_rng(seed)
+    a, b = make_pool(), make_pool()
+    oracle_a, oracle_b = {}, {}
+    now = 0.0
+    for step in range(10):
+        now += 1.0
+        # grow a donor population in pool a (shared prefixes on purpose)
+        sid = f"s{rng.integers(0, 4)}"
+        if oracle_a and rng.random() < 0.5:
+            donor = oracle_a[sorted(oracle_a)[rng.integers(0, len(oracle_a))]]
+            cut = int(rng.integers(1, len(donor) + 1))
+            ids = donor[:cut] + [int(t) for t in
+                                 rng.integers(50, 99, rng.integers(0, 6))]
+        else:
+            ids = [int(t) for t in rng.integers(0, 50, rng.integers(1, 15))]
+        if write(a, sid, ids, now):
+            oracle_a[sid] = ids
+        # ship a random resident session a -> b
+        if oracle_a and rng.random() < 0.7:
+            src = sorted(oracle_a)[rng.integers(0, len(oracle_a))]
+            payload = a.export_session(src)
+            if payload is not None:
+                if b.import_session(f"m:{src}", payload, now=now):
+                    oracle_b[f"m:{src}"] = list(oracle_a[src])
+        a.check_invariants()
+        b.check_invariants()
+        for oracle, pool in ((oracle_a, a), (oracle_b, b)):
+            for s in list(oracle):
+                sp = pool.session(s)
+                if sp is None or not sp.pages:
+                    oracle.pop(s, None)
+        assert_no_leakage(a, oracle_a)
+        assert_no_leakage(b, oracle_b)
+
+
+# ------------------------------------------------------------ targeted COW
+def test_cow_preserves_donor_bytes():
+    """A sharer diverging inside a shared page gets a fresh page; the
+    donor's bytes never move."""
+    pool = make_pool()
+    donor = list(range(10))                      # 2.5 pages
+    assert write(pool, "donor", donor, 1.0)
+    donor_pages = list(pool.session("donor").pages)
+
+    sharer = donor[:6] + [90, 91, 92]            # diverges inside page 1
+    assert write(pool, "sharer", sharer, 2.0)
+    sp = pool.session("sharer")
+    assert sp.pages[0] == donor_pages[0]         # full page 0 shared
+    assert sp.pages[1] != donor_pages[1]         # divergent page COW'd
+    assert pool.stats["dedup_pages"] >= 1
+    pool.check_invariants()
+    assert_no_leakage(pool, {"donor": donor, "sharer": sharer})
+
+    # rewrite the sharer entirely: donor still untouched
+    assert write(pool, "sharer", [70, 71, 72], 3.0)
+    pool.check_invariants()
+    assert_no_leakage(pool, {"donor": donor, "sharer": [70, 71, 72]})
+
+
+def test_refcounts_pin_shared_pages_against_eviction():
+    """A page referenced by two sessions survives the release of either
+    one, and eviction never reclaims a page while any owner remains."""
+    pool = make_pool(n_pages=4)
+    assert write(pool, "a", list(range(8)), 1.0)         # 2 pages
+    assert pool.acquire_prefix("b", list(range(8)), now=2.0) == 8
+    shared = list(pool.session("a").pages)
+    pool.release("a")
+    pool.check_invariants()
+    # b still owns the pages: bytes intact, pages not freed
+    assert pool.session("b").pages == shared
+    assert_no_leakage(pool, {"b": list(range(8))})
+    # allocation pressure cannot evict b's in-use pages while... b is live
+    # but unpinned: eviction MAY reclaim b wholesale (refcount drops to 0
+    # via the eviction path) — never partially
+    sp = pool.allocate("c", 16, now=3.0)                 # needs all 4 pages
+    assert sp is not None
+    bb = pool.session("b")
+    assert bb is None or bb.pages == []                  # all-or-nothing
+    pool.check_invariants()
+
+
+def test_acquire_refused_for_resident_session():
+    pool = make_pool()
+    assert write(pool, "a", list(range(8)), 1.0)
+    assert pool.acquire_prefix("a", list(range(8)), now=2.0) == 0
+
+
+def test_opaque_write_is_not_indexed():
+    """Writes without token provenance must never enter the prefix index
+    (their bytes cannot be verified against any token sequence)."""
+    pool = make_pool()
+    ids = list(range(8))
+    k = content(ids)
+    v = content(ids, offset=0.5)
+    assert pool.write_session("op", k, v, len(ids), now=1.0)   # no token_ids
+    assert pool.match_prefix(ids) == 0
+    assert pool.acquire_prefix("x", ids, now=2.0) == 0
+    pool.check_invariants()
+
+
+def test_import_dedups_against_resident_prefix():
+    """Importing a payload whose prefix is already indexed locally adopts
+    the resident pages instead of copying them."""
+    a, b = make_pool(), make_pool()
+    ids = list(range(12))                        # 3 full pages
+    assert write(a, "s", ids, 1.0)
+    assert write(b, "local", ids, 1.0)           # same prefix resident in b
+    payload = a.export_session("s")
+    dd0 = b.stats["dedup_pages"]
+    assert b.import_session("moved", payload, now=2.0)
+    assert b.stats["dedup_pages"] - dd0 == 3     # all full pages adopted
+    sp_l, sp_m = b.session("local"), b.session("moved")
+    assert sp_l.pages == sp_m.pages              # physically shared
+    b.check_invariants()
+    assert_no_leakage(b, {"local": ids, "moved": ids})
+
+
+def test_export_import_legacy_tuple_payload():
+    """The pre-index (k, v, tokens) payload still imports (opaque)."""
+    a, b = make_pool(), make_pool()
+    ids = list(range(6))
+    assert write(a, "s", ids, 1.0)
+    d = a.export_session("s")
+    legacy = (d["k"], d["v"], d["tokens"])
+    assert b.import_session("s", legacy, now=2.0)
+    assert_no_leakage(b, {"s": ids})
+    b.check_invariants()
+
+
+def test_free_page_accounting_balances_after_churn():
+    """free + live == n_pages through a full allocate/share/release cycle,
+    and a fully drained pool returns to all-free."""
+    pool = make_pool()
+    assert write(pool, "a", list(range(9)), 1.0)
+    assert pool.acquire_prefix("b", list(range(9)), now=2.0) > 0
+    assert write(pool, "c", list(range(9))[:5] + [77, 78], 3.0)
+    pool.check_invariants()
+    for sid in ("a", "b", "c"):
+        pool.release(sid)
+    pool.check_invariants()
+    assert pool.free_pages() == N_PAGES

@@ -447,3 +447,140 @@ def test_paged_kernel_reads_engine_pool(dense_setup):
                           scale=cfg.head_dim_ ** -0.5, n_rep=n_rep)[:, 0]
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------------------------- cross-session prefix sharing
+def _gather_bytes(engine, sid):
+    k, v, tokens = engine.pool.gather_contiguous(sid, engine.max_seq)
+    return np.asarray(k[:, :tokens]), np.asarray(v[:, :tokens]), tokens
+
+
+@pytest.mark.parametrize("arch", ["qwen3_0_6b", "granite_moe_1b_a400m"])
+def test_prefix_hit_matches_cold_prefill_chunked(arch):
+    """A cold session whose system prompt is resident (written by another
+    session) prefills only its novel suffix — and the result is *bitwise*
+    equal to a full cold prefill: same greedy tokens, same cache bytes.
+    The suffix re-enters the same chunked-prefill program at the same chunk
+    boundary the cold path would reach, so even float bits agree."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sysp = list(range(1, 65))                    # 64 tokens == one page
+    suf_donor = [(100 + i) % cfg.vocab_size for i in range(8)]
+    suf = [(200 + i) % cfg.vocab_size for i in range(8)]
+    sp = SamplingParams(max_new_tokens=4)
+
+    cold = InferenceEngine(model, params, max_batch=2, max_seq=128,
+                           prefill_chunk=8)
+    r_cold = cold.generate(sysp + suf, session_id="x", sampling=sp)
+
+    shared = InferenceEngine(model, params, max_batch=2, max_seq=128,
+                             prefill_chunk=8)
+    shared.generate(sysp + suf_donor, session_id="donor", sampling=sp)
+    pt0 = shared.metrics.prefill_tokens
+    r_hit = shared.generate(sysp + suf, session_id="x", sampling=sp)
+
+    assert shared.metrics.shared_prefix_hits == 1
+    assert shared.metrics.shared_prefix_tokens == 64
+    # the hit admission never re-prefilled the shared 64 tokens
+    assert shared.metrics.prefill_tokens - pt0 < len(sysp)
+    assert r_hit.prefix_reused_tokens == 64
+    assert r_hit.generated == r_cold.generated
+    kc, vc, tc = _gather_bytes(cold, "x")
+    ks, vs, ts = _gather_bytes(shared, "x")
+    assert tc == ts
+    np.testing.assert_array_equal(ks, kc)
+    np.testing.assert_array_equal(vs, vc)
+
+
+def test_prefix_hit_matches_cold_prefill_monolithic(dense_setup):
+    """Same equivalence on the legacy monolithic-prefill path.  The prompt
+    is exactly one bucket so the cold path has no pad positions and the
+    comparison is bitwise."""
+    cfg, model, params = dense_setup
+    sysp = list(range(1, 49))                    # 48 tokens = 3 pages of 16
+    suf_donor = [100 + i for i in range(16)]
+    suf = [200 + i for i in range(16)]           # prompt 64 == bucket
+    sp = SamplingParams(max_new_tokens=4)
+
+    cold = InferenceEngine(model, params, max_batch=2, max_seq=128,
+                           prefill_chunk=0, page_size=16)
+    r_cold = cold.generate(sysp + suf, session_id="x", sampling=sp)
+
+    shared = InferenceEngine(model, params, max_batch=2, max_seq=128,
+                             prefill_chunk=0, page_size=16)
+    shared.generate(sysp + suf_donor, session_id="donor", sampling=sp)
+    r_hit = shared.generate(sysp + suf, session_id="x", sampling=sp)
+
+    assert shared.metrics.shared_prefix_hits == 1
+    assert shared.metrics.shared_prefix_tokens == 48
+    assert r_hit.generated == r_cold.generated
+    kc, vc, tc = _gather_bytes(cold, "x")
+    ks, vs, ts = _gather_bytes(shared, "x")
+    assert tc == ts
+    np.testing.assert_array_equal(ks, kc)
+    np.testing.assert_array_equal(vs, vc)
+
+
+def test_prefix_hit_partial_tail_page(dense_setup):
+    """A new session re-sending a donor's *exact* prompt shares into the
+    donor's partial tail page (common-prefix match inside the block) and
+    prefills only the final position; greedy output still matches a cold
+    run."""
+    cfg, model, params = dense_setup
+    prompt = list(range(1, 73))                  # 72 tokens, page 64
+    sp = SamplingParams(max_new_tokens=4)
+
+    cold = InferenceEngine(model, params, max_batch=2, max_seq=128,
+                           prefill_chunk=8)
+    r_cold = cold.generate(prompt, session_id="x", sampling=sp)
+
+    shared = InferenceEngine(model, params, max_batch=2, max_seq=128,
+                             prefill_chunk=8)
+    shared.generate(prompt, session_id="donor", sampling=sp)
+    r_hit = shared.generate(prompt, session_id="x", sampling=sp)
+
+    assert shared.metrics.shared_prefix_hits == 1
+    # ids[:-1] = 71 tokens: one full page (64) + 7 inside the donor's
+    # partial tail page
+    assert shared.metrics.shared_prefix_tokens == 71
+    assert r_hit.generated == r_cold.generated
+    kc, vc, tc = _gather_bytes(cold, "x")
+    ks, vs, ts = _gather_bytes(shared, "x")
+    assert tc == ts
+    np.testing.assert_allclose(ks, kc, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(vs, vc, rtol=2e-4, atol=2e-4)
+
+
+def test_prefix_share_cow_keeps_donor_bytes(dense_setup):
+    """Copy-on-write isolation at the engine level: a sharer that diverges
+    and generates past the shared prefix never mutates the donor's cache."""
+    cfg, model, params = dense_setup
+    sysp = list(range(1, 65))
+    sp = SamplingParams(max_new_tokens=6)
+    eng = make_engine(model, params, max_batch=2, prefill_chunk=8)
+    eng.generate(sysp + [100, 101], session_id="donor", sampling=sp)
+    kd0, vd0, td0 = _gather_bytes(eng, "donor")
+
+    eng.generate(sysp + [200, 201, 202], session_id="sharer", sampling=sp)
+    assert eng.metrics.shared_prefix_hits == 1
+    kd1, vd1, td1 = _gather_bytes(eng, "donor")
+    assert td0 == td1
+    np.testing.assert_array_equal(kd1, kd0)
+    np.testing.assert_array_equal(vd1, vd0)
+    eng.pool.check_invariants()
+
+
+def test_prefix_sharing_off_is_cold(dense_setup):
+    """The kill switch: with prefix_sharing=False nothing is indexed and a
+    same-prompt second session pays the full prefill."""
+    cfg, model, params = dense_setup
+    sysp = list(range(1, 65))
+    sp = SamplingParams(max_new_tokens=3)
+    eng = make_engine(model, params, prefill_chunk=8, prefix_sharing=False)
+    eng.generate(sysp + [100], session_id="a", sampling=sp)
+    pt0 = eng.metrics.prefill_tokens
+    r = eng.generate(sysp + [200], session_id="b", sampling=sp)
+    assert eng.metrics.shared_prefix_hits == 0
+    assert r.prefix_reused_tokens == 0
+    assert eng.metrics.prefill_tokens - pt0 == len(sysp) + 1
