@@ -18,8 +18,8 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from . import (failure_injection, fig9_financial, fig9_router,  # noqa: E402
-               fig9_swe, fig10_control_loop, pool_routing, sec62_policies,
-               sustained_rps, table4_two_level)
+               fig9_swe, fig10_control_loop, paged_decode, pool_routing,
+               sec62_policies, sustained_rps, table4_two_level)
 
 BENCHES = {
     "fig9a_financial": fig9_financial,
@@ -35,6 +35,9 @@ BENCHES = {
     # open-loop stepped-RPS load: chunked-vs-monolithic prefill TTFT and
     # bounded-vs-unbounded admission goodput (the abstract's 80-RPS claim)
     "sustained_rps": sustained_rps,
+    # paged-native decode vs gather data plane: per-step time + max
+    # resident batch at fixed HBM (churn workload, real engines)
+    "paged_decode": paged_decode,
 }
 
 
@@ -76,6 +79,9 @@ def main() -> None:
     if "sustained_rps" in all_rows:
         sustained_rps.write_record(all_rows["sustained_rps"],
                                    "full" if args.full else "quick")
+    if "paged_decode" in all_rows:
+        paged_decode.write_record(all_rows["paged_decode"],
+                                  "full" if args.full else "quick")
     print(f"done,benches,{len(all_rows)}")
 
 

@@ -8,7 +8,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .paged_attention import decode_ring, paged_decode
+from .paged_attention import decode_ring, paged_decode, paged_decode_chunk
 
 
 def _on_tpu() -> bool:
@@ -33,3 +33,16 @@ def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
     """Engine-side paged decode over the KV pool (vLLM block-table analogue)."""
     return paged_decode(q, k_pages, v_pages, page_table, lengths,
                         scale=scale, n_rep=n_rep, interpret=not _on_tpu())
+
+
+def paged_decode_chunk_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
+                                 v_pages: jnp.ndarray,
+                                 page_table: jnp.ndarray, pos: jnp.ndarray,
+                                 *, scale: float, n_rep: int) -> jnp.ndarray:
+    """Chunk-extended paged decode (q [B,T,H,D]) over the KV pool.
+
+    Not jitted here: callers invoke it inside an already-jitted layer scan
+    (``models.transformer.decode_chunk_paged`` with ``kernel=True``)."""
+    return paged_decode_chunk(q, k_pages, v_pages, page_table, pos,
+                              scale=scale, n_rep=n_rep,
+                              interpret=not _on_tpu())

@@ -208,3 +208,104 @@ def paged_decode(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
     )(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
       qg, k_pages, v_pages)
     return out.reshape(B, H, D)
+
+
+# -------------------------------------------------------- paged chunk decode
+def _paged_chunk_kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                        m_scr, l_scr, acc_scr, *, scale: float, page: int,
+                        n_rep: int):
+    """Grid: (B, Hkv, max_pages).  q_ref: [1, 1, R, D] with R = T*n_rep query
+    rows; row r belongs to chunk token ``r // n_rep`` at logical position
+    ``pos[b] + r // n_rep``.  The chunk's own K/V is already scattered into
+    the pages (write-then-attend), so per-row causal masking
+    ``tok <= pos + t`` is the only mask needed."""
+    b = pl.program_id(0)
+    ji = pl.program_id(2)
+    nj = pl.num_programs(2)
+    pos = pos_ref[b]
+
+    @pl.when(ji == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    valid_page = pt_ref[b, ji] >= 0
+
+    @pl.when(valid_page)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)             # [R, D]
+        k = k_ref[0, :, 0].astype(jnp.float32)          # [page, D]
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        tok = ji * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        qpos = pos + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // n_rep
+        s = jnp.where(tok <= qpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ji == nj - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def paged_decode_chunk(q: jnp.ndarray, k_pages: jnp.ndarray,
+                       v_pages: jnp.ndarray, page_table: jnp.ndarray,
+                       pos: jnp.ndarray, *, scale: float, n_rep: int,
+                       interpret: bool = True) -> jnp.ndarray:
+    """Chunk-extended paged decode: q [B, T, H, D] over pool pages.
+
+    ``pos`` [B] is each sequence's first chunk position; chunk token t
+    queries positions <= pos+t.  The caller must have scattered the chunk's
+    K/V into the pages already.  Rows past a sequence's valid length attend
+    unwritten positions and return garbage — callers discard them (the
+    engine reads row ``valid_len[b]-1`` only).  -> [B, T, H, D].
+    """
+    B, T, H, D = q.shape
+    n_pages, page, Hkv, _ = k_pages.shape
+    max_pages = page_table.shape[1]
+    R = T * n_rep
+    # head h = kv*n_rep + rep (repeat_kv layout); row r = t*n_rep + rep
+    qg = (q.reshape(B, T, Hkv, n_rep, D)
+          .transpose(0, 2, 1, 3, 4).reshape(B, Hkv, R, D))
+
+    def kv_index(b, h, j, pt, pos_):
+        p = jnp.maximum(pt[b, j], 0)
+        return (p, 0, h, 0)
+
+    kernel = functools.partial(_paged_chunk_kernel, scale=scale, page=page,
+                               n_rep=n_rep)
+    grid = (B, Hkv, max_pages)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, R, D),
+                             lambda b, h, j, pt, pos_: (b, h, 0, 0)),
+                pl.BlockSpec((1, page, 1, D), kv_index),
+                pl.BlockSpec((1, page, 1, D), kv_index),
+            ],
+            out_specs=pl.BlockSpec((1, 1, R, D),
+                                   lambda b, h, j, pt, pos_: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((R, 1), jnp.float32),
+                pltpu.VMEM((R, 1), jnp.float32),
+                pltpu.VMEM((R, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, R, D), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), pos.astype(jnp.int32),
+      qg, k_pages, v_pages)
+    return (out.reshape(B, Hkv, T, n_rep, D)
+            .transpose(0, 2, 1, 3, 4).reshape(B, T, H, D))

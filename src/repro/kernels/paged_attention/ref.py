@@ -48,3 +48,31 @@ def paged_decode_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
                           n_rep=n_rep, window=None)
     # mask by real length: decode_ring_ref valid = slots <= pos = length-1 ✓
     return out[:, 0]
+
+
+def paged_decode_chunk_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                           v_pages: jnp.ndarray, page_table: jnp.ndarray,
+                           pos: jnp.ndarray, *, scale: float,
+                           n_rep: int) -> jnp.ndarray:
+    """Gather pages densely, then per-row causal attention (q [B,T,H,D];
+    chunk token t attends positions <= pos[b]+t)."""
+    B, T, H, D = q.shape
+    n_pages, page, Hkv, _ = k_pages.shape
+    max_pages = page_table.shape[1]
+    pt = jnp.maximum(page_table, 0)
+    C = max_pages * page
+
+    def rep(pages):
+        x = pages[pt].reshape(B, C, Hkv, D)
+        return jnp.broadcast_to(x[:, :, :, None, :], (B, C, Hkv, n_rep, D)
+                                ).reshape(B, C, Hkv * n_rep, D)
+
+    k, v = rep(k_pages), rep(v_pages)
+    logits = jnp.einsum("bthd,bkhd->bhtk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = pos[:, None] + jnp.arange(T)[None, :]           # [B,T]
+    valid = jnp.arange(C)[None, None, :] <= qpos[:, :, None]
+    logits = jnp.where(valid[:, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhtk,bkhd->bthd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)

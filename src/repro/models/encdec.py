@@ -208,3 +208,115 @@ def decode_step(params: dict, cfg: ModelConfig, token: jnp.ndarray,
     logits = L.unembed(x[:, 0], params["embed"], cfg)
     return logits, {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"],
                     "pos": pos + 1}
+
+
+def encode_cross(params: dict, cfg: ModelConfig,
+                 frames: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run the encoder and project per-decoder-layer cross K/V.
+
+    Returns (xk, xv) [L, B, T_enc, Hkv, Dh] — bitwise identical to the
+    ``xk``/``xv`` leaves :func:`prefill` produces (same ``encode`` + same
+    per-layer ``_cross_kv`` einsums), so the chunked admission path can
+    populate the slim cache without running a monolithic prefill."""
+    memory = encode(params, cfg, frames)
+
+    def step(carry, p):
+        k, v = _cross_kv(memory, p["xattn"], cfg)
+        return carry, (k, v)
+
+    _, (xks, xvs) = jax.lax.scan(step, 0, params["dec_layers"])
+    return xks, xvs
+
+
+def decode_chunk(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                 valid_len: jnp.ndarray, cache: dict) -> Tuple[jnp.ndarray, dict]:
+    """T decoder tokens ([B,T]) against the KV cache in one forward.
+
+    Chunked-prefill for the encoder-decoder: causal self-attention within
+    the chunk + full attention over the cached prefix, cross-attending the
+    precomputed ``xk``/``xv`` memory every layer.  Mirrors
+    ``transformer.decode_chunk`` (non-windowed branch)."""
+    B, T = tokens.shape
+    pos = jnp.broadcast_to(cache["pos"], (B,))
+    x = L.embed(tokens, params["embed"]).astype(cfg.jnp_dtype)
+    positions = pos[:, None] + jnp.arange(T)[None, :]          # [B,T]
+    valid = jnp.arange(T)[None, :] < valid_len[:, None]        # [B,T]
+
+    def step(carry, xs):
+        p, ck, cv, xk, xv = xs
+        x = carry
+        h = L.apply_norm(x, p["attn_norm"], cfg)
+        q, k, v = L.attention_qkv(h, p["attn"], cfg, positions)
+        ck, cv = L.kv_cache_update_chunk(ck, cv, k, v, pos, valid, None)
+        o = L.chunk_decode_attention(q, ck, cv, positions, cfg)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"])
+        h = L.apply_norm(x, p["xattn_norm"], cfg)
+        x = x + _cross_attend(h, xk, xv, p["xattn"], cfg)
+        h = L.apply_norm(x, p["mlp_norm"], cfg)
+        x = x + L.mlp_block(h, p["mlp"], cfg)
+        return x, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(
+        step, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    logits = L.unembed(x, params["embed"], cfg)                # [B,T,V]
+    return logits, {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"],
+                    "pos": pos + valid_len}
+
+
+def decode_chunk_paged(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                       valid_len: jnp.ndarray, cache: dict,
+                       k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+                       page_table: jnp.ndarray, *, max_seq: int,
+                       kernel: bool = False):
+    """Paged-native :func:`decode_chunk`: decoder self-attention KV lives in
+    the pool pages; the slim cache carries only {"xk", "xv", "pos"}.  Same
+    scatter-routing and bitwise-parity strategy as
+    ``transformer.decode_chunk_paged`` (non-windowed).  Returns
+    (logits [B,T,V], slim cache, k_pages, v_pages)."""
+    B, T = tokens.shape
+    pos = jnp.broadcast_to(cache["pos"], (B,))
+    x = L.embed(tokens, params["embed"]).astype(cfg.jnp_dtype)
+    positions = pos[:, None] + jnp.arange(T)[None, :]          # [B,T]
+    valid = jnp.arange(T)[None, :] < valid_len[:, None]        # [B,T]
+    C = max_seq
+
+    _nl, n_pages, P, Hkv, Dh = k_pages.shape
+    maxp = page_table.shape[1]
+    pslot = jnp.minimum(positions // P, maxp - 1)              # [B,T]
+    page_of = jnp.take_along_axis(page_table, pslot, axis=1)   # [B,T]
+    off = positions % P
+    oob = (~valid) | (page_of < 0) | (positions >= C)
+    widx = jnp.where(oob, n_pages, page_of)                    # drop sentinel
+    pt_c = jnp.maximum(page_table, 0)
+
+    def gather(pages):
+        return pages[pt_c].reshape(B, maxp * P, Hkv, Dh)[:, :C]
+
+    def step(carry, xs):
+        p, kp, vp, xk, xv = xs
+        x = carry
+        h = L.apply_norm(x, p["attn_norm"], cfg)
+        q, k, v = L.attention_qkv(h, p["attn"], cfg, positions)
+        kp = kp.at[widx, off].set(k.astype(kp.dtype), mode="drop")
+        vp = vp.at[widx, off].set(v.astype(vp.dtype), mode="drop")
+        if kernel:
+            o = L.paged_chunk_attention(q, kp, vp, page_table, pos, cfg)
+        else:
+            o = L.chunk_decode_attention(q, gather(kp), gather(vp),
+                                         positions, cfg)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"])
+        h = L.apply_norm(x, p["xattn_norm"], cfg)
+        x = x + _cross_attend(h, xk, xv, p["xattn"], cfg)
+        h = L.apply_norm(x, p["mlp_norm"], cfg)
+        x = x + L.mlp_block(h, p["mlp"], cfg)
+        return x, (kp, vp)
+
+    x, (ks, vs) = jax.lax.scan(
+        step, x, (params["dec_layers"], k_pages, v_pages,
+                  cache["xk"], cache["xv"]))
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    logits = L.unembed(x, params["embed"], cfg)                # [B,T,V]
+    return (logits, {"xk": cache["xk"], "xv": cache["xv"],
+                     "pos": pos + valid_len}, ks, vs)

@@ -424,6 +424,25 @@ def chunk_decode_attention_windowed(q: jnp.ndarray, cache_k: jnp.ndarray,
     return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(vals.dtype), vals)
 
 
+def paged_chunk_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
+                          v_pages: jnp.ndarray, page_table: jnp.ndarray,
+                          pos: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Pallas paged attention for a T-token chunk straight over the KV pool
+    (q [B,T,H,Dh]; pages [n_pages,P,Hkv,Dh]; the chunk's K/V must already
+    be scattered into the pages).
+
+    The serving fast path behind ``decode_chunk_paged(kernel=True)``: no
+    dense gather is materialized — pages stage HBM->VMEM by table lookup.
+    Numerics match :func:`chunk_decode_attention` to float tolerance but
+    not bitwise (different softmax accumulation order), so the engine
+    gates it behind its ``paged_kernel`` knob (auto-on on TPU only)."""
+    from ..kernels.paged_attention.ops import paged_decode_chunk_attention
+    return paged_decode_chunk_attention(
+        q, k_pages, v_pages, page_table, pos,
+        scale=cfg.head_dim_ ** -0.5,
+        n_rep=cfg.n_heads // cfg.n_kv_heads)
+
+
 def decode_attention(q: jnp.ndarray, cache_k: jnp.ndarray, cache_v: jnp.ndarray,
                      pos: jnp.ndarray, cfg: ModelConfig,
                      window: Optional[int] = None,

@@ -122,9 +122,20 @@ class Model:
     # decode_chunk(params, tokens [B,T], valid_len [B], cache) -> (logits
     # [B,T,V], cache): T tokens in one forward, each sequence advancing by
     # valid_len[b] <= T positions — the serving engine's chunked-prefill
-    # fast path.  None for families without a fused chunk step (encoder-
-    # decoder; recurrent families fall back to per-token masked decode).
+    # fast path.  Every family wires one: attention families fuse the
+    # chunk natively, recurrent families scan masked single steps in-jit.
     decode_chunk: Optional[Callable[..., Tuple[jnp.ndarray, dict]]] = None
+    # decode_chunk_paged(params, tokens, valid_len, slim_cache, k_pages,
+    # v_pages, page_table, *, max_seq, kernel) -> (logits, slim_cache,
+    # k_pages, v_pages): the paged-native variant — K/V is read from and
+    # scattered into the engine's KV pool pages by table, no dense per-slot
+    # cache exists.  None for families whose decode state is O(1)
+    # (ssm/hybrid use StateCachePool, not pages).
+    decode_chunk_paged: Optional[Callable[..., Any]] = None
+    # encode_cross(params, frames) -> (xk, xv): encoder-decoder only — one
+    # encoder pass producing the per-layer cross-attention memory, so
+    # chunked admission can populate a slot without a monolithic prefill.
+    encode_cross: Optional[Callable[..., Any]] = None
 
     def param_shapes(self) -> dict:
         return jax.eval_shape(self.init, jax.random.PRNGKey(0))
@@ -182,6 +193,10 @@ def build_model(cfg: ModelConfig, attention_impl: str = "xla",
             decode_chunk=lambda params, toks, n, cache: transformer.decode_chunk(
                 params, cfg, toks, n, cache, attention_impl=attention_impl,
                 moe_impl=moe_impl),
+            decode_chunk_paged=lambda params, toks, n, cache, kp, vp, pt, **kw:
+                transformer.decode_chunk_paged(
+                    params, cfg, toks, n, cache, kp, vp, pt,
+                    attention_impl=attention_impl, moe_impl=moe_impl, **kw),
             init_cache=functools.partial(transformer.init_cache, cfg),
             input_specs=lambda shape: _token_specs(shape, cfg),
         )
@@ -210,6 +225,8 @@ def build_model(cfg: ModelConfig, attention_impl: str = "xla",
                                                             batch["tokens"]),
             decode_step=lambda params, tok, cache: ssm.decode_step(
                 params, cfg, tok, cache),
+            decode_chunk=lambda params, toks, n, cache: ssm.decode_chunk(
+                params, cfg, toks, n, cache),
             init_cache=functools.partial(ssm.init_cache, cfg),
             input_specs=lambda shape: _token_specs(shape, cfg),
         )
@@ -241,6 +258,8 @@ def build_model(cfg: ModelConfig, attention_impl: str = "xla",
                                                               batch["tokens"], **kw),
             decode_step=lambda params, tok, cache: rglru.decode_step(
                 params, cfg, tok, cache),
+            decode_chunk=lambda params, toks, n, cache: rglru.decode_chunk(
+                params, cfg, toks, n, cache),
             init_cache=functools.partial(rglru.init_cache, cfg),
             input_specs=lambda shape: _token_specs(shape, cfg),
         )
@@ -288,6 +307,12 @@ def build_model(cfg: ModelConfig, attention_impl: str = "xla",
                 attention_impl=attention_impl, **kw),
             decode_step=lambda params, tok, cache: vlm.decode_step(
                 params, cfg, tok, cache),
+            decode_chunk=lambda params, toks, n, cache: vlm.decode_chunk(
+                params, cfg, toks, n, cache, attention_impl=attention_impl),
+            decode_chunk_paged=lambda params, toks, n, cache, kp, vp, pt, **kw:
+                vlm.decode_chunk_paged(
+                    params, cfg, toks, n, cache, kp, vp, pt,
+                    attention_impl=attention_impl, **kw),
             init_cache=functools.partial(vlm.init_cache, cfg),
             input_specs=specs,
         )
@@ -328,6 +353,13 @@ def build_model(cfg: ModelConfig, attention_impl: str = "xla",
                 params, cfg, batch["tokens"], batch["frames"], **kw),
             decode_step=lambda params, tok, cache: encdec.decode_step(
                 params, cfg, tok, cache),
+            decode_chunk=lambda params, toks, n, cache: encdec.decode_chunk(
+                params, cfg, toks, n, cache),
+            decode_chunk_paged=lambda params, toks, n, cache, kp, vp, pt, **kw:
+                encdec.decode_chunk_paged(params, cfg, toks, n, cache,
+                                          kp, vp, pt, **kw),
+            encode_cross=lambda params, frames: encdec.encode_cross(
+                params, cfg, frames),
             init_cache=functools.partial(encdec.init_cache, cfg),
             input_specs=specs,
         )

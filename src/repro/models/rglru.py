@@ -395,3 +395,30 @@ def decode_step(params: dict, cfg: ModelConfig, token: jnp.ndarray,
         "conv": conv_flat, "h": h_flat,
         "k": ks, "v": vs, "pos": pos + 1,
     }
+
+
+def decode_chunk(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                 valid_len: jnp.ndarray, cache: dict):
+    """T tokens ([B,T]) in one compiled forward: an in-jit scan of masked
+    single steps (see ``ssm.decode_chunk`` — same rationale: the RG-LRU
+    recurrence is sequential, the win is one dispatch per engine step).
+    Token ``t`` advances sequence ``b`` iff ``t < valid_len[b]``; masked-out
+    rows keep their conv/h/KV state and position untouched.  Returns
+    (logits [B,T,V], cache)."""
+    T = tokens.shape[1]
+
+    def outer(cache, xs):
+        tok, t = xs
+        logits, new = decode_step(params, cfg, tok, cache)
+        mask = t < valid_len                                   # [B]
+        out = {}
+        for key in new:
+            ax = 0 if key == "pos" else 1       # batch axis per leaf
+            shp = [1] * new[key].ndim
+            shp[ax] = new[key].shape[ax]
+            out[key] = jnp.where(mask.reshape(shp), new[key], cache[key])
+        return out, logits
+
+    cache, logits = jax.lax.scan(
+        outer, cache, (jnp.moveaxis(tokens, 0, 1), jnp.arange(T)))
+    return jnp.moveaxis(logits, 0, 1), cache

@@ -263,3 +263,34 @@ def decode_step(params: dict, cfg: ModelConfig, token: jnp.ndarray,
     x = L.apply_norm(x, params["final_norm"], cfg)
     logits = L.unembed(x[:, 0], params["embed"], cfg)
     return logits, {"conv": conv_sts, "ssm": ssm_sts, "pos": cache["pos"] + 1}
+
+
+def decode_chunk(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                 valid_len: jnp.ndarray, cache: dict):
+    """T tokens ([B,T]) in one compiled forward: an in-jit scan of masked
+    single steps.
+
+    The recurrence is inherently sequential, so unlike the attention
+    families there is no quadratic fusion to exploit — the win is purely
+    dispatch: one jitted call (and one host round-trip) per engine step
+    instead of ``prefill_chunk`` of them.  Token ``t`` advances sequence
+    ``b`` iff ``t < valid_len[b]``; a masked-out step leaves that row's
+    state (and position) untouched, exactly like the engine's masked
+    fallback.  Returns (logits [B,T,V], cache)."""
+    T = tokens.shape[1]
+
+    def outer(cache, xs):
+        tok, t = xs
+        logits, new = decode_step(params, cfg, tok, cache)
+        mask = t < valid_len                                   # [B]
+        out = {}
+        for key in new:
+            ax = 0 if key == "pos" else 1       # batch axis per leaf
+            shp = [1] * new[key].ndim
+            shp[ax] = new[key].shape[ax]
+            out[key] = jnp.where(mask.reshape(shp), new[key], cache[key])
+        return out, logits
+
+    cache, logits = jax.lax.scan(
+        outer, cache, (jnp.moveaxis(tokens, 0, 1), jnp.arange(T)))
+    return jnp.moveaxis(logits, 0, 1), cache

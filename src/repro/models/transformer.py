@@ -231,3 +231,89 @@ def decode_chunk(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
     x = L.apply_norm(x, params["final_norm"], cfg)
     logits = L.unembed(x, params["embed"], cfg)                # [B,T,V]
     return logits, {"k": ks, "v": vs, "pos": pos + valid_len}
+
+
+def decode_chunk_paged(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                       valid_len: jnp.ndarray, cache: dict,
+                       k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+                       page_table: jnp.ndarray, *, max_seq: int,
+                       attention_impl: str = "xla", moe_impl: str = "einsum",
+                       kernel: bool = False):
+    """Paged-native :func:`decode_chunk`: the KV pool IS the decode cache.
+
+    New K/V is scattered straight into the pool pages named by
+    ``page_table`` [B, max_pages] (-1 padding) — no dense per-slot cache,
+    no ``gather_contiguous`` on admission, no write-back on eviction.  The
+    caller (``serving.engine``) must guarantee every page about to receive
+    a write has refcount 1 (``PagedKVPool.begin_append`` privatizes shared
+    pages first) and that distinct batch rows never map a written position
+    to the same page, so the scatter is collision-free; rows with
+    ``valid_len == 0`` and -1 table entries write nowhere (``mode='drop'``).
+
+    Default path gathers the tables to a dense [B, C, Hkv, Dh] view (C =
+    the dense slot-cache length) and reuses the exact
+    ``chunk_decode_attention`` / ``_windowed`` math, so greedy outputs and
+    cache bytes are bitwise identical to :func:`decode_chunk`.
+    ``kernel=True`` instead runs the Pallas paged kernel over the tables
+    (no dense materialization; near-identical, not bitwise).  Windowed
+    configs are only supported when ``max_seq <= sliding_window`` (ring
+    slot == position, so the linear page layout matches the ring layout);
+    the engine falls back to the dense path otherwise.
+
+    Returns (logits [B,T,V], slim cache {"pos"}, k_pages, v_pages).
+    """
+    B, T = tokens.shape
+    pos = jnp.broadcast_to(cache["pos"], (B,))
+    x = L.embed(tokens, params["embed"]).astype(cfg.jnp_dtype)
+    positions = pos[:, None] + jnp.arange(T)[None, :]          # [B,T]
+    valid = jnp.arange(T)[None, :] < valid_len[:, None]        # [B,T]
+    W = cfg.sliding_window
+    C = min(max_seq, W) if W else max_seq
+
+    _nl, n_pages, P, Hkv, Dh = k_pages.shape
+    maxp = page_table.shape[1]
+    # position -> (page, offset) routing for the chunk's scatter writes
+    pslot = jnp.minimum(positions // P, maxp - 1)              # [B,T]
+    page_of = jnp.take_along_axis(page_table, pslot, axis=1)   # [B,T]
+    off = positions % P
+    oob = (~valid) | (page_of < 0) | (positions >= C)
+    widx = jnp.where(oob, n_pages, page_of)                    # drop sentinel
+    pt_c = jnp.maximum(page_table, 0)                          # [B,maxp]
+
+    def gather(pages):
+        # dense [B, C, Hkv, Dh] view — same length as the dense slot cache,
+        # so the attention HLO (and its reduction order) is identical
+        return pages[pt_c].reshape(B, maxp * P, Hkv, Dh)[:, :C]
+
+    def step(carry, xs):
+        x = carry
+        layer_p, kp, vp = xs
+        h = L.apply_norm(x, layer_p["attn_norm"], cfg)
+        q, k, v = L.attention_qkv(h, layer_p["attn"], cfg, positions)
+        if kernel:
+            kp = kp.at[widx, off].set(k.astype(kp.dtype), mode="drop")
+            vp = vp.at[widx, off].set(v.astype(vp.dtype), mode="drop")
+            o = L.paged_chunk_attention(q, kp, vp, page_table, pos, cfg)
+        elif W:
+            # mirror decode_chunk's order exactly: attend the pre-write
+            # view + the chunk itself, then write
+            o = L.chunk_decode_attention_windowed(
+                q, gather(kp), gather(vp), k, v, pos, valid_len, positions,
+                cfg, window=W)
+            kp = kp.at[widx, off].set(k.astype(kp.dtype), mode="drop")
+            vp = vp.at[widx, off].set(v.astype(vp.dtype), mode="drop")
+        else:
+            kp = kp.at[widx, off].set(k.astype(kp.dtype), mode="drop")
+            vp = vp.at[widx, off].set(v.astype(vp.dtype), mode="drop")
+            o = L.chunk_decode_attention(q, gather(kp), gather(vp),
+                                         positions, cfg)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, layer_p["attn"]["wo"])
+        h = L.apply_norm(x, layer_p["mlp_norm"], cfg)
+        y, _aux = _ffn(h, layer_p, cfg, moe_impl)
+        x = x + y
+        return x, (kp, vp)
+
+    x, (ks, vs) = jax.lax.scan(step, x, (params["layers"], k_pages, v_pages))
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    logits = L.unembed(x, params["embed"], cfg)                # [B,T,V]
+    return logits, {"pos": pos + valid_len}, ks, vs

@@ -52,6 +52,11 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
 
 
 decode_step = T.decode_step   # decode is text-only once the prefix is cached
+# ... and so are the fused chunk steps: the image prefix enters the cache
+# (or the KV pool's pages, for the paged-native engine) at prefill, after
+# which chunked/paged decode is indistinguishable from the dense backbone
+decode_chunk = T.decode_chunk
+decode_chunk_paged = T.decode_chunk_paged
 
 
 def text_loss_mask(cfg: ModelConfig, batch: int, text_len: int) -> jnp.ndarray:

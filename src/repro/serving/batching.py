@@ -61,6 +61,10 @@ class Request:
     first_token_at: float = -1.0
     finished_at: float = -1.0
     prefix_reused_tokens: int = 0
+    # execution path the engine admitted this request onto ("paged" /
+    # "fused" / "masked") — observability for tests and benchmarks that
+    # must assert which data plane actually served them
+    decode_path: str = ""
 
     @staticmethod
     def make(prompt, session_id: str = "", sampling: Optional[SamplingParams] = None,

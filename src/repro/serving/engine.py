@@ -23,7 +23,13 @@ Execution model:
     failure instead of unbounded queue growth — and exports a saturation
     watermark so routers/policies shed load before collapse;
   * finished sessions write their cache back to the pool so follow-up
-    requests in the same session skip recomputation.
+    requests in the same session skip recomputation;
+  * **paged-native decode** (default where supported): the pool pages ARE
+    the decode cache — each step feeds per-slot page tables into the model
+    and scatters new K/V straight into pool pages (COW-privatized first if
+    shared), so admission, resume, eviction and finish move zero cache
+    bytes and the dense per-slot K/V arrays are never allocated.
+    ``paged_decode=False`` restores the dense gather/write-back path.
 """
 
 from __future__ import annotations
@@ -46,8 +52,10 @@ from .sampler import SamplingParams, sample
 
 # model families whose decode step, run token-by-token from a blank cache
 # row, is exactly prefill (causal attention / recurrent state).  Encoder-
-# decoder ("audio") models compute cross-attention memory only at prefill
-# and must keep the monolithic path.
+# decoder ("audio") models chunk too (``_chunked_for`` special-cases them:
+# one ``encode_cross`` pass supplies the cross-attention memory first), but
+# stay OUT of this tuple — it also gates prefix sharing, and audio decoder
+# K/V depends on the frames, so token-identity never implies K/V-identity.
 _CHUNKABLE_FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm")
 
 
@@ -66,6 +74,16 @@ class EngineMetrics:
     tokens_generated: int = 0
     prefill_tokens: int = 0
     admission_rejects: int = 0
+    # resumes refused because the restored cache would not fit the slot
+    # (previously a silent None -> cold rebuild)
+    resume_overflows: int = 0
+    # resumes refused because the family cannot restore from the pool
+    # (encoder-decoder: cross-attention memory is not poolable; previously
+    # the dense path silently resumed with zeroed xk/xv)
+    resume_unsupported: int = 0
+    # paged-native admissions/steps aborted because the pool could not
+    # provide pages (all residents protected or pinned)
+    paged_append_failures: int = 0
 
 
 def _cache_slot_axis(key: str) -> int:
@@ -113,7 +131,9 @@ class InferenceEngine:
                  prefill_chunk: int = 8, max_queue: int = 0,
                  queue_watermark: float = 0.75,
                  finished_cap: int = 8192,
-                 prefix_sharing: bool = True) -> None:
+                 prefix_sharing: bool = True,
+                 paged_decode: bool = True,
+                 paged_kernel: Optional[bool] = None) -> None:
         self.model = model
         self.cfg: ModelConfig = model.cfg
         self.params = params
@@ -173,6 +193,33 @@ class InferenceEngine:
             and isinstance(self.pool, PagedKVPool)
             and self.cfg.family in _CHUNKABLE_FAMILIES
             and (not W or self.max_seq <= W))
+        # paged-native decode (the tentpole): the KV pool IS the decode
+        # cache.  The per-slot dense k/v arrays are dropped entirely; each
+        # step consumes per-slot page tables and scatters new K/V straight
+        # into pool pages, so admission/eviction/finish move no cache bytes
+        # (``gather_contiguous`` leaves the hot path).  Windowed configs
+        # qualify only when the ring never wraps (max_seq <= window, the
+        # same condition as prefix sharing) — slot == position then, so the
+        # linear page layout matches the ring layout bitwise.
+        self.paged_decode = bool(paged_decode)
+        self._paged = (self.paged_decode
+                       and isinstance(self.pool, PagedKVPool)
+                       and model.decode_chunk_paged is not None
+                       and (not W or self.max_seq <= W))
+        # Pallas paged-attention kernel instead of the bitwise-identical
+        # gathered-dense attention inside the paged step (auto-on on TPU;
+        # near-identical numerics, not bitwise)
+        self._paged_kernel = (bool(paged_kernel) if paged_kernel is not None
+                              else jax.default_backend() == "tpu")
+        # dense per-slot cache length (what self.cache["k"].shape[2] was)
+        self._slot_C = min(self.max_seq, W) if W else self.max_seq
+        # slot -> pool session key the slot decodes into (paged mode only;
+        # anonymous requests get a synthetic key released at vacate)
+        self._slot_sid: Dict[int, str] = {}
+        if self._paged:
+            self.cache = {key: v for key, v in self.cache.items()
+                          if key not in ("k", "v")}
+            self._max_pages = self.pool.pages_needed(self.max_seq)
         # slot -> token ids whose K/V occupy the slot's cache positions so
         # far (None = unknown provenance, the finish write stays opaque)
         self._slot_tokens: Dict[int, Optional[List[int]]] = {}
@@ -199,6 +246,32 @@ class InferenceEngine:
         # compiled shapes only: T=1 (decode-only steps) and T=prefill_chunk.
         self._decode_chunk = (jax.jit(model.decode_chunk)
                               if model.decode_chunk is not None else None)
+        # paged-native fused step: chunked prefill + decode + per-slot
+        # sampling prep in ONE jit over (slim cache, pool pages, page
+        # tables).  Only the [B,V] next-token rows and the greedy argmax
+        # cross the host boundary — the [B,T,V] logits never leave device.
+        self._paged_step: Optional[Callable] = None
+        if self._paged:
+            paged_fn = model.decode_chunk_paged
+            _max_seq = self.max_seq
+            _kernel = self._paged_kernel
+
+            def _paged_chunk(params, toks, valid, cache, kp, vp, pt):
+                logits, cache, kp, vp = paged_fn(
+                    params, toks, valid, cache, kp, vp, pt,
+                    max_seq=_max_seq, kernel=_kernel)
+                rows = jnp.take_along_axis(
+                    logits, jnp.maximum(valid - 1, 0)[:, None, None],
+                    axis=1)[:, 0]                               # [B,V]
+                greedy = jnp.argmax(rows, axis=-1)
+                return rows, greedy, cache, kp, vp
+
+            # donate the pool arrays on TPU so the step updates them in
+            # place (CPU donation is a no-op and only warns)
+            donate = (4, 5) if jax.default_backend() == "tpu" else ()
+            self._paged_step = jax.jit(_paged_chunk, donate_argnums=donate)
+        # lazily jitted encoder pass for chunked encoder-decoder admission
+        self._encode_cross: Optional[Callable] = None
         self._prefill_cache: Dict[int, Callable] = {}
 
         # async completion plumbing (NALAR bridge): request_id -> callback,
@@ -310,24 +383,48 @@ class InferenceEngine:
         return logits, row_cache
 
     def _try_resume(self, req: Request):
-        """Prefix reuse: restore this session's cache from the pool."""
+        """Prefix reuse: restore this session's cache from the pool.
+
+        Refusals are explicit and counted (``resume_overflows`` /
+        ``resume_unsupported``) — a ``None`` always means the caller
+        rebuilds the context cold.  In paged mode a successful resume moves
+        no bytes at all: the slot simply adopts the session's pages and the
+        sentinel ``("paged", tokens)`` is returned instead of a dense row.
+        """
         if isinstance(self.pool, StateCachePool):
             payload = self.pool.load(req.session_id)
             if payload is None:
                 return None
             state, tokens = payload
             return state, tokens
+        if self.cfg.family == "audio":
+            # decoder self-attention K/V is poolable, but the cross-
+            # attention memory (xk/xv) is not: a resumed slot would cross-
+            # attend zeros.  The dense path used to do exactly that
+            # silently; refuse and count instead.
+            sp = self.pool.session(req.session_id)
+            if sp is not None and sp.pages:
+                self.metrics.resume_unsupported += 1
+            return None
+        if self._paged:
+            sp = self.pool.session(req.session_id)
+            if sp is None or not sp.pages or sp.tokens <= 0:
+                return None
+            if sp.tokens > self.max_seq:
+                self.metrics.resume_overflows += 1
+                return None
+            return "paged", sp.tokens
         got = self.pool.gather_contiguous(req.session_id, self.max_seq)
         if got is None:
             return None
         k, v, tokens = got
-        C = self.cache["k"].shape[2]
+        C = self._slot_C
         pad = C - k.shape[1]
         if pad < 0:
+            self.metrics.resume_overflows += 1
             return None
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))[:, None]
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))[:, None]
-        row = dict(self.cache.__class__() if False else {})
         row = {key: None for key in self.cache}
         row["k"], row["v"] = k, v
         row["pos"] = jnp.asarray([tokens], jnp.int32)
@@ -352,6 +449,13 @@ class InferenceEngine:
             self._blank_row_cache = row
         return self._blank_row_cache
 
+    def _paged_row(self, tokens: int) -> dict:
+        """Slim cache row for a paged-native admission: position only — the
+        K/V lives in the session's pool pages."""
+        row = dict(self._blank_row())
+        row["pos"] = jnp.asarray(tokens, jnp.int32)
+        return row
+
     def _resumed_slot_tokens(self, req: Request,
                              tokens: int) -> Optional[List[int]]:
         """Token provenance of a resumed slot: the pool session's ids, when
@@ -365,7 +469,16 @@ class InferenceEngine:
         return None
 
     def _chunked_for(self, req: Request) -> bool:
-        if self.prefill_chunk <= 0 or req.extras:
+        if self.prefill_chunk <= 0:
+            return False
+        if self.cfg.family == "audio":
+            # encoder-decoder: one encoder pass computes the cross-attn
+            # memory (exactly the bytes prefill would), then the decoder
+            # prompt chunks like any causal family
+            return (set(req.extras) == {"frames"}
+                    and self.model.encode_cross is not None
+                    and self.model.decode_chunk is not None)
+        if req.extras:
             return False
         return self.cfg.family in _CHUNKABLE_FAMILIES
 
@@ -399,6 +512,15 @@ class InferenceEngine:
             if req is None:
                 return
             now = time.monotonic()
+            if (self._paged and req.session_id
+                    and req.session_id in self._slot_sid.values()):
+                # the session's pages are already the live in-place write
+                # target of an active slot; a second concurrent appender
+                # would corrupt them.  Defer until that slot finishes.
+                self.queue.push(req)
+                return
+            req.decode_path = "paged" if self._paged else (
+                "fused" if self._decode_chunk is not None else "masked")
             resumed = None
             if req.session_id:
                 resumed = self._try_resume(req)
@@ -412,6 +534,7 @@ class InferenceEngine:
                     # the resumed suffix would run past the slot's cache
                     # capacity mid-prompt; rebuild the (bounded) full
                     # context cold instead of overflowing the ring
+                    self.metrics.resume_overflows += 1
                     resumed = None
             if resumed is None and req.fallback_prompt is not None:
                 # The caller sent only a continuation suffix expecting a warm
@@ -442,13 +565,40 @@ class InferenceEngine:
                 req.prefix_reused_tokens = tokens
                 self.metrics.prefix_hits += 1
                 # feed the prompt as additional decode steps (short suffix)
-                self.cache = set_slot(self.cache, slot, row_cache)
+                if self._paged and row_cache == "paged":
+                    # zero-copy resume: the slot decodes straight into the
+                    # session's resident pages (shared prefix tails are
+                    # privatized lazily by begin_append's COW)
+                    self.pool.protect(req.session_id)
+                    self._slot_sid[slot] = req.session_id
+                    self.cache = set_slot(self.cache, slot,
+                                          self._paged_row(tokens))
+                else:
+                    self.cache = set_slot(self.cache, slot, row_cache)
                 self._pending_prompt[slot] = [int(t) for t in req.prompt]
                 self._slot_tokens[slot] = self._resumed_slot_tokens(req, tokens)
             elif self._chunked_for(req):
                 # chunked prefill: blank row now, prompt consumed by step()
                 # in prefill_chunk-sized pieces piggybacked on decode
-                self.cache = set_slot(self.cache, slot, self._blank_row())
+                row = self._blank_row()
+                if self.cfg.family == "audio":
+                    frames = req.extras["frames"]
+                    frames = jnp.asarray(frames[None] if frames.ndim == 2
+                                         else frames)
+                    if self._encode_cross is None:
+                        self._encode_cross = jax.jit(self.model.encode_cross)
+                    xk, xv = self._encode_cross(self.params, frames)
+                    row = dict(row)
+                    row["xk"], row["xv"] = xk[:, 0], xv[:, 0]
+                if self._paged:
+                    sid = req.session_id or f"__anon:{req.request_id}"
+                    if req.session_id:
+                        # stale pages from a refused resume would misplace
+                        # the first in-place append: start cold
+                        self.pool.release(sid)
+                    self.pool.protect(sid)
+                    self._slot_sid[slot] = sid
+                self.cache = set_slot(self.cache, slot, row)
                 self._pending_prompt[slot] = [int(t) for t in req.prompt]
                 self._slot_tokens[slot] = [] if self._prefix_share_ok else None
                 self.metrics.prefills += 1
@@ -461,16 +611,40 @@ class InferenceEngine:
                 # TTFT: the first token exists *now*, after the prefill
                 # compute — not at admission time
                 req.first_token_at = time.monotonic()
-                self.cache = set_slot(self.cache, slot, row_cache)
-                if self._prefix_share_ok and not req.extras:
-                    # left-aligned bucket prefill: pad token 0's K/V enters
-                    # the leading positions and is part of the provenance
-                    S = len(req.prompt)
-                    bucket = min(bucket_len(S), self.max_seq)
-                    self._slot_tokens[slot] = ([0] * (bucket - S)
-                                               + [int(t) for t in req.prompt])
+                S = len(req.prompt)
+                bucket = min(bucket_len(S), self.max_seq)
+                share = self._prefix_share_ok and not req.extras
+                # left-aligned bucket prefill: pad token 0's K/V enters
+                # the leading positions and is part of the provenance
+                ids = ([0] * (bucket - S) + [int(t) for t in req.prompt]
+                       if share else None)
+                if self._paged:
+                    sid = req.session_id or f"__anon:{req.request_id}"
+                    tokens = int(np.asarray(row_cache["pos"]).reshape(-1)[0])
+                    if req.session_id:
+                        self.pool.release(sid)
+                    if tokens > self.max_seq or not self.pool.write_session(
+                            sid, row_cache["k"][:, 0, :tokens],
+                            row_cache["v"][:, 0, :tokens], tokens, now,
+                            token_ids=ids):
+                        # pool exhausted (residents all protected/pinned):
+                        # deliver what we have instead of wedging the slot
+                        self.metrics.paged_append_failures += 1
+                        self.metrics.tokens_generated += 1
+                        req.finished = True
+                        req.finished_at = time.monotonic()
+                        self.metrics.completed += 1
+                        with self._done_lock:
+                            self._finished.append(req)
+                        continue
+                    self.pool.protect(sid)
+                    self._slot_sid[slot] = sid
+                    row = {key: v for key, v in row_cache.items()
+                           if key not in ("k", "v")}
+                    self.cache = set_slot(self.cache, slot, row)
                 else:
-                    self._slot_tokens[slot] = None
+                    self.cache = set_slot(self.cache, slot, row_cache)
+                self._slot_tokens[slot] = list(ids) if ids is not None else None
                 self.metrics.tokens_generated += 1
                 if (len(req.generated) >= req.sampling.max_new_tokens
                         or tok == req.sampling.eos_token):
@@ -594,7 +768,7 @@ class InferenceEngine:
         extended cache back.  The honest migration/warm cost becomes the
         novel suffix, not the whole transcript."""
         suffix = toks[resident:]
-        C = self.cache["k"].shape[2]
+        C = self._slot_C
         if resident + len(suffix) > min(C, self.max_seq):
             return 0
         got = self.pool.gather_contiguous(session_id, self.max_seq)
@@ -663,7 +837,9 @@ class InferenceEngine:
             pending = self._pending_prompt
             prefilling = any(pending.get(i) for i in active)
             budget = max(1, self.prefill_chunk) if prefilling else 1
-            if self._decode_chunk is not None:
+            if self._paged:
+                sampled = self._step_paged(active, budget)
+            elif self._decode_chunk is not None:
                 sampled = self._step_fused(active, budget)
             else:
                 sampled = self._step_masked(active, budget)
@@ -685,6 +861,88 @@ class InferenceEngine:
             self.metrics.queued = len(self.queue)
             self.metrics.active = int(self._active_mask.sum())
             return len(active)
+
+    def _step_paged(self, active: List[int], budget: int) -> set:
+        """One paged-native fused step.
+
+        Identical batching policy to ``_step_fused`` (chunk width sized to
+        need, rounded to a power of two), but the K/V never touches a
+        per-slot dense cache: ``begin_append`` reserves (and COW-privatizes)
+        each advancing session's pages, the jitted step scatters new K/V
+        into them by page table and returns only the next-token rows, and
+        ``commit_append`` publishes the new tokens (re-keying the prefix
+        index).  A slot whose reservation fails is aborted explicitly —
+        counted, finished with what it has — never silently wedged."""
+        pending = self._pending_prompt
+        need = 1
+        for i in active:
+            q = pending.get(i)
+            if q:
+                need = max(need, min(len(q), budget))
+        T = min(1 << (need - 1).bit_length(), budget)
+        toks = np.zeros((self.max_batch, T), np.int32)
+        valid = np.zeros((self.max_batch,), np.int32)
+        for i in active:
+            q = pending.get(i)
+            if q:
+                n = min(len(q), T)
+                toks[i, :n] = q[:n]
+                del q[:n]
+                valid[i] = n
+                if not q:
+                    pending.pop(i, None)
+            else:
+                req = self.slots[i]
+                toks[i, 0] = req.generated[-1] if req.generated else 0
+                valid[i] = 1
+        now = time.monotonic()
+        aborted: List[int] = []
+        for i in active:
+            if not valid[i]:
+                continue
+            if not self.pool.begin_append(self._slot_sid[i], int(valid[i]),
+                                          now):
+                self.metrics.paged_append_failures += 1
+                valid[i] = 0
+                aborted.append(i)
+        if self._prefix_share_ok:
+            for i in active:
+                ids = self._slot_tokens.get(i)
+                if ids is not None and valid[i]:
+                    ids.extend(int(t) for t in toks[i, :valid[i]])
+        pt = np.full((self.max_batch, self._max_pages), -1, np.int32)
+        for i in active:
+            if valid[i]:
+                pt[i] = self.pool.page_table(self._slot_sid[i],
+                                             self._max_pages)
+        rows, greedy, self.cache, self.pool.k, self.pool.v = \
+            self._paged_step(self.params, jnp.asarray(toks),
+                             jnp.asarray(valid), self.cache,
+                             self.pool.k, self.pool.v, jnp.asarray(pt))
+        self.metrics.decode_steps += 1
+        for i in active:
+            if valid[i]:
+                n = int(valid[i])
+                ids = (toks[i, :n].tolist()
+                       if self._slot_tokens.get(i) is not None else None)
+                self.pool.commit_append(self._slot_sid[i], n, token_ids=ids,
+                                        now=now)
+        for i in aborted:
+            self._finish_slot(i, now)
+        ready = [i for i in active if valid[i] and i not in pending]
+        if not ready:
+            return set()
+        greedy_np = np.asarray(greedy)
+        sampled: set = set()
+        for i in ready:
+            req = self.slots[i]
+            tok = self._sample_slot(req, rows, i, greedy_np)
+            req.generated.append(tok)
+            if req.first_token_at < 0:
+                req.first_token_at = time.monotonic()
+            self.metrics.tokens_generated += 1
+            sampled.add(i)
+        return sampled
 
     def _step_fused(self, active: List[int], budget: int) -> set:
         """One fused chunk forward: prefilling slots consume up to
@@ -802,6 +1060,12 @@ class InferenceEngine:
         self._active_mask[slot] = False
         self._pending_prompt.pop(slot, None)
         self._slot_tokens.pop(slot, None)
+        sid = self._slot_sid.pop(slot, None)
+        if sid is not None:
+            self.pool.unprotect(sid)
+            if req is None or not req.session_id:
+                # anonymous paged session: no follow-up can resume it
+                self.pool.release(sid)
         if req is not None:
             self._req_rng.pop(req.request_id, None)
 
@@ -811,7 +1075,18 @@ class InferenceEngine:
         req.finished_at = now
         self.metrics.completed += 1
         # persist session cache for prefix reuse on follow-ups
-        if req.session_id:
+        if self._paged:
+            # nothing to persist: the pool pages ARE the session cache,
+            # already current through commit_append.  Vacate unprotects
+            # (and releases anonymous sessions).
+            if req.session_id:
+                sp = self.pool.session(req.session_id)
+                tokens = (sp.tokens if sp is not None
+                          else int(np.asarray(self.cache["pos"])[slot]))
+                if self.kv_registry is not None:
+                    self.kv_registry.touch(req.session_id, self.instance_id,
+                                           tokens, now)
+        elif req.session_id:
             row = get_slot(self.cache, slot)
             tokens = int(np.asarray(row["pos"])[0])
             if isinstance(self.pool, PagedKVPool):
@@ -910,4 +1185,9 @@ class InferenceEngine:
                 "queue_saturation": self.saturation(),
                 "admission_rejects": self.queue.rejected,
                 "prefill_chunk": self.prefill_chunk,
+                "paged_decode": self._paged,
+                "paged_kernel": self._paged and self._paged_kernel,
+                "resume_overflows": m.resume_overflows,
+                "resume_unsupported": m.resume_unsupported,
+                "paged_append_failures": m.paged_append_failures,
                 "slot_sessions": self.slot_sessions()}

@@ -21,9 +21,15 @@ diverging tail fresh pages, so no session ever observes another session's
 writes.  Eviction and ``release`` decref; a page is freed (and unindexed)
 only when its last reference drops.
 
-The pool also exposes ``gather_contiguous`` to materialize a sequence's
-cache into the dense per-slot layout the XLA decode path uses, and the page
-table format the Pallas paged-attention kernel consumes.
+Paged-native decode (PR 7): the engine's hot loop no longer copies pages
+in or out.  ``begin_append``/``commit_append`` reserve and publish in-place
+page writes for each decode step — a write never touches a page with
+refcount > 1 (``begin_append`` privatizes a shared tail first, which is the
+copy-on-write event), and ``protect``/``unprotect`` pin the sessions that
+are actively decoding against eviction and drop hints.
+``gather_contiguous`` remains only for the off-hot-path consumers: session
+export/migration, warm-up replay (``warm_session``), the dense fallback
+engine (``paged_decode=False``) and debugging.
 """
 
 from __future__ import annotations
@@ -90,7 +96,12 @@ class PagedKVPool:
         self.stats: Dict[str, int] = {
             "prefix_queries": 0, "prefix_hits": 0, "prefix_tokens": 0,
             "cow_copies": 0, "dedup_pages": 0, "evictions": 0,
+            "inplace_appends": 0,
         }
+        # sessions an engine slot is actively decoding into: never evicted,
+        # never released by drop/migrate hints (their pages are the live
+        # write targets of the paged-native step)
+        self._protected: set = set()
         self._lock = threading.RLock()
 
     # ---------------------------------------------------------- allocation
@@ -170,9 +181,11 @@ class PagedKVPool:
 
         Shared pages survive eviction of one owner — only their last
         reference frees them — so evicting a donor never corrupts the
-        sessions that acquired its prefix."""
+        sessions that acquired its prefix.  Protected sessions (actively
+        decoding in an engine slot) are never candidates."""
         cands = [s for s in self._sessions.values()
-                 if s.pages and not s.pinned and s.session_id != avoid]
+                 if s.pages and not s.pinned and s.session_id != avoid
+                 and s.session_id not in self._protected]
         if not cands:
             return False
         victim = min(cands, key=lambda s: s.last_used)
@@ -193,6 +206,115 @@ class PagedKVPool:
             sp = self._sessions.pop(session_id, None)
             if sp is not None:
                 self._release(sp)
+
+    # ------------------------------------------------- paged-native appends
+    def protect(self, session_id: str) -> None:
+        """Pin a session against eviction and drop/migrate hints while an
+        engine slot decodes straight into its pages."""
+        with self._lock:
+            self._protected.add(session_id)
+
+    def unprotect(self, session_id: str) -> None:
+        with self._lock:
+            self._protected.discard(session_id)
+
+    def begin_append(self, session_id: str, n: int, now: float = 0.0) -> bool:
+        """Reserve in-place write capacity for ``n`` more tokens.
+
+        The paged-native decode step writes new K/V straight into the
+        session's pages (positions ``tokens .. tokens+n-1``).  This call
+        makes that safe:
+
+        * every page about to be written becomes exclusively owned — a
+          shared page (refcount > 1, e.g. an adopted prefix tail from PR 6)
+          is privatized onto a fresh page first (the copy-on-write event),
+          so **an in-place write never mutates a page with refcount > 1**;
+        * an exclusively-owned tail is unindexed before the write: its
+          index key may still describe a departed donor's longer block, and
+          any chain hanging off it would splice content computed under a
+          different prefix (``commit_append`` re-keys it afterwards);
+        * capacity pages for the overflow are allocated up front.
+
+        All-or-nothing: returns False (session untouched) if the pool
+        cannot provide the pages.  The caller publishes the write with
+        ``commit_append`` after the step lands."""
+        if n <= 0:
+            return True
+        P = self.page_size
+        with self._lock:
+            sp = self._sessions.setdefault(session_id,
+                                           SessionPages(session_id))
+            first_b = sp.tokens // P
+            last_b = (sp.tokens + n - 1) // P
+            existing = list(range(first_b, min(last_b + 1, len(sp.pages))))
+            n_new = max(0, last_b + 1 - len(sp.pages))
+            n_cow = sum(1 for b in existing
+                        if self._ref.get(sp.pages[b], 0) > 1)
+            fresh: List[int] = []
+            for _ in range(n_new + n_cow):
+                page = self._alloc_page(now, avoid=session_id)
+                if page is None:
+                    for p in fresh:
+                        self._decref(p)
+                    return False
+                fresh.append(page)
+            for b in existing:
+                old = sp.pages[b]
+                if self._ref.get(old, 0) > 1:
+                    # privatize: the other owners keep the old page (and
+                    # its index entry) untouched
+                    new = fresh.pop()
+                    self.k = self.k.at[:, new].set(self.k[:, old])
+                    self.v = self.v.at[:, new].set(self.v[:, old])
+                    sp.pages[b] = new
+                    self._decref(old)
+                    self.stats["cow_copies"] += 1
+                else:
+                    # exclusively ours, but its key/children may describe a
+                    # departed donor's content past our valid tokens —
+                    # stale the moment we write in place
+                    self._unindex(old)
+                    sub = self._index.pop(old, None)
+                    if sub:
+                        for child in sub.values():
+                            self._page_key.pop(child, None)
+            sp.pages.extend(fresh)
+            sp.last_used = now
+            self.stats["inplace_appends"] += 1
+            return True
+
+    def commit_append(self, session_id: str, n: int, token_ids=None,
+                      now: float = 0.0) -> None:
+        """Publish ``n`` tokens written in place by the paged decode step.
+
+        With ``token_ids`` (the ``n`` consumed tokens, extending a valid
+        provenance) the affected pages (re-)enter the prefix index —
+        completed full pages and the new partial tail — so cross-session
+        sharing keeps working without any gather/write-back.  Without ids
+        (or on a provenance break) the session goes opaque; already-indexed
+        prefix pages keep their entries, which stay valid."""
+        P = self.page_size
+        with self._lock:
+            sp = self._sessions.get(session_id)
+            if sp is None or n <= 0:
+                return
+            old_tokens = sp.tokens
+            sp.tokens = old_tokens + n
+            sp.last_used = now
+            ok = (token_ids is not None and len(token_ids) == n
+                  and len(sp.token_ids) == old_tokens)
+            if not ok:
+                sp.token_ids = []
+                return
+            sp.token_ids = sp.token_ids + [int(t) for t in token_ids]
+            ids = sp.token_ids
+            for b in range(old_tokens // P, (sp.tokens - 1) // P + 1):
+                page = sp.pages[b]
+                block = tuple(ids[b * P:min((b + 1) * P, sp.tokens)])
+                parent = sp.pages[b - 1] if b > 0 else _ROOT
+                self._unindex(page)
+                if block:
+                    self._index_page(parent, block, page)
 
     # --------------------------------------------------------- prefix index
     def _unindex(self, page: int) -> None:
@@ -301,16 +423,22 @@ class PagedKVPool:
                 sp.pinned = True
             elif hint == "drop":
                 sp.pinned = False
-                self._release(sp)
-                self._sessions.pop(session_id, None)
+                # a protected session is the live write target of an active
+                # paged decode: freeing its pages under the step would hand
+                # them to another session mid-write.  The hint downgrades
+                # to unpin; LRU reclaims the pages once decode finishes.
+                if session_id not in self._protected:
+                    self._release(sp)
+                    self._sessions.pop(session_id, None)
             elif hint == "offload":
                 sp.offloaded = True
                 sp.pinned = False
             elif hint == "migrate_out":
                 # ownership moved away; drop local references (shared pages
                 # stay alive for their remaining owners)
-                self._release(sp)
-                self._sessions.pop(session_id, None)
+                if session_id not in self._protected:
+                    self._release(sp)
+                    self._sessions.pop(session_id, None)
             elif hint == "migrate_in":
                 pass  # pages arrive via export/import below
 
@@ -413,7 +541,12 @@ class PagedKVPool:
         return row
 
     def gather_contiguous(self, session_id: str, max_seq: int):
-        """Materialize [L, max_seq, Hkv, Dh] dense K/V for the XLA path."""
+        """Materialize [L, max_seq, Hkv, Dh] dense K/V.
+
+        No longer on the serving hot path: paged-native decode consumes
+        page tables directly.  This remains the export/debug path — warm
+        replay, migration payload assembly, the ``paged_decode=False``
+        fallback engine, and tests that compare cache bytes."""
         with self._lock:
             sp = self._sessions.get(session_id)
             if sp is None or not sp.pages:

@@ -238,9 +238,9 @@ def test_hard_kill_recovers_sessions_and_retries_inflight(model_setup):
     done = {}
     rt.start()
     rt.submit_request(
-        lambda: rt.stub("llm").generate("the follow up").value(timeout=60),
+        lambda: rt.stub("llm").generate("the follow up").value(timeout=240),
         session=sid, on_done=lambda o, e: done.update(out=o, err=e))
-    deadline = time.time() + 30
+    deadline = time.time() + 120
     while time.time() < deadline:
         with victim_bridge._cv:
             if victim_bridge._session_q.get(sid):
@@ -288,9 +288,9 @@ def test_cancelled_session_queued_call_never_hits_engine(model_setup):
     done = {}
     rt.start()
     rt.submit_request(
-        lambda: rt.stub("llm").generate("never runs").value(timeout=60),
+        lambda: rt.stub("llm").generate("never runs").value(timeout=240),
         session=sid, on_done=lambda o, e: done.update(out=o, err=e))
-    deadline = time.time() + 30
+    deadline = time.time() + 120
     while time.time() < deadline:
         with bridge._cv:
             if bridge._session_q.get(sid):

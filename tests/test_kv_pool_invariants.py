@@ -307,6 +307,172 @@ def test_export_import_legacy_tuple_payload():
     b.check_invariants()
 
 
+# ------------------------------------------- paged-native in-place appends
+def append_inplace(pool: PagedKVPool, sid: str, new_ids, oracle, now: float,
+                   ) -> bool:
+    """Emulate the engine's paged decode write: ``begin_append`` → scatter
+    K/V for the new positions straight into pool pages → ``commit_append``.
+
+    Asserts the contract the data plane relies on: after ``begin_append``,
+    every page the scatter will touch has refcount exactly 1 (a shared page
+    must have been COW-privatized, never written in place)."""
+    old = oracle.get(sid, [])
+    n = len(new_ids)
+    if not pool.begin_append(sid, n, now=now):
+        return False
+    sp = pool.session(sid)
+    assert sp is not None and sp.tokens == len(old)
+    first_b, last_b = sp.tokens // P, (sp.tokens + n - 1) // P
+    for b in range(first_b, last_b + 1):
+        assert pool._ref.get(sp.pages[b], 0) == 1, (
+            f"in-place write target page {sp.pages[b]} (block {b}) is "
+            f"shared: refcount {pool._ref.get(sp.pages[b], 0)}")
+    full = old + list(new_ids)
+    k, v = content(full), content(full, offset=0.5)
+    for t in range(sp.tokens, sp.tokens + n):
+        page, off = sp.pages[t // P], t % P
+        pool.k = pool.k.at[:, page, off].set(k[:, t])
+        pool.v = pool.v.at[:, page, off].set(v[:, t])
+    pool.commit_append(sid, n, token_ids=list(new_ids), now=now)
+    oracle[sid] = full
+    return True
+
+
+@given(st.integers(0, 10_000), st.integers(8, 22))
+@settings(**INTERLEAVE_SETTINGS)
+def test_inplace_append_interleavings(seed, n_ops):
+    """Randomized schedules mixing in-place decode appends with writes,
+    prefix adoption, and releases: no append ever mutates a shared page
+    (asserted inside :func:`append_inplace`), every session still reads
+    exactly f over its own ids, and accounting stays balanced."""
+    rng = np.random.default_rng(seed)
+    pool = make_pool()
+    oracle = {}
+    now = 0.0
+    for step in range(n_ops):
+        now += 1.0
+        op = rng.choice(["write", "append", "share", "acquire", "release"],
+                        p=[0.25, 0.35, 0.15, 0.15, 0.1])
+        sids = sorted(oracle)
+        if op == "write" or not sids:
+            sid = f"s{rng.integers(0, 5)}"
+            ids = [int(t) for t in rng.integers(0, 50, rng.integers(1, 14))]
+            if write(pool, sid, ids, now):
+                oracle[sid] = ids
+        elif op == "append":
+            # the paged decode step: 1-4 new tokens straight into pages
+            sid = sids[rng.integers(0, len(sids))]
+            new = [int(t) for t in rng.integers(50, 99, rng.integers(1, 5))]
+            append_inplace(pool, sid, new, oracle, now)
+        elif op == "share":
+            donor = oracle[sids[rng.integers(0, len(sids))]]
+            cut = int(rng.integers(1, len(donor) + 1))
+            ids = donor[:cut] + [int(t) for t in
+                                 rng.integers(50, 99, rng.integers(0, 4))]
+            sid = f"s{rng.integers(5, 9)}"
+            if write(pool, sid, ids, now):
+                oracle[sid] = ids
+        elif op == "acquire":
+            donor = oracle[sids[rng.integers(0, len(sids))]]
+            sid = f"a{rng.integers(0, 3)}"
+            if pool.session(sid) is None:
+                matched = pool.acquire_prefix(sid, donor, now=now)
+                if matched > 0:
+                    oracle[sid] = donor[:matched]
+        elif op == "release":
+            sid = sids[rng.integers(0, len(sids))]
+            pool.release(sid)
+            oracle.pop(sid, None)
+        pool.check_invariants()
+        for sid in list(oracle):
+            sp = pool.session(sid)
+            if sp is None or not sp.pages:
+                oracle.pop(sid, None)
+        assert_no_leakage(pool, oracle)
+    for sid in list(oracle):
+        pool.release(sid)
+    pool.check_invariants()
+    assert pool.free_pages() == N_PAGES
+
+
+def test_inplace_append_privatizes_adopted_tail():
+    """A session decoding onto an adopted shared prefix: ``begin_append``
+    must COW the partially-filled shared tail page before the in-place
+    write, leaving the donor's bytes untouched."""
+    pool = make_pool()
+    oracle = {}
+    donor = list(range(10))                       # 2.5 pages
+    assert write(pool, "donor", donor, 1.0)
+    oracle["donor"] = donor
+    assert pool.acquire_prefix("dec", donor, now=2.0) == 10
+    oracle["dec"] = donor[:]
+    donor_pages = list(pool.session("donor").pages)
+    assert pool.session("dec").pages == donor_pages      # fully aliased
+    cow0 = pool.stats["cow_copies"]
+
+    assert append_inplace(pool, "dec", [90, 91], oracle, 3.0)
+    dp = pool.session("dec").pages
+    assert dp[0] == donor_pages[0] and dp[1] == donor_pages[1]
+    assert dp[2] != donor_pages[2]                # shared tail was COW'd
+    assert pool.stats["cow_copies"] > cow0
+    pool.check_invariants()
+    assert_no_leakage(pool, oracle)               # donor bytes intact
+
+
+def test_commit_append_rekeys_index_for_sharing():
+    """Pages completed by in-place appends re-enter the prefix index: a
+    later session deriving the extended transcript adopts them instead of
+    recomputing."""
+    pool = make_pool()
+    oracle = {}
+    base = list(range(6))
+    assert write(pool, "s", base, 1.0)
+    oracle["s"] = base
+    assert append_inplace(pool, "s", [60, 61, 62], oracle, 2.0)   # 9 tokens
+    full = oracle["s"]
+    assert pool.match_prefix(full) >= 8           # both full pages indexed
+    assert pool.acquire_prefix("adopt", full, now=3.0) >= 8
+    sp_s, sp_a = pool.session("s"), pool.session("adopt")
+    assert sp_a.pages[0] == sp_s.pages[0] and sp_a.pages[1] == sp_s.pages[1]
+    oracle["adopt"] = full[:pool.session("adopt").tokens]
+    pool.check_invariants()
+    assert_no_leakage(pool, oracle)
+
+
+def test_begin_append_all_or_nothing_on_exhaustion():
+    """If the pool cannot provide capacity pages, ``begin_append`` fails
+    without touching the session (no partial privatization, no leak)."""
+    pool = make_pool(n_pages=3)
+    oracle = {}
+    ids = list(range(12))                         # exactly 3 pages
+    assert write(pool, "s", ids, 1.0)
+    oracle["s"] = ids
+    pool.protect("s")                             # eviction can't help
+    pages_before = list(pool.session("s").pages)
+    assert not pool.begin_append("s", 2, now=2.0)
+    assert pool.session("s").pages == pages_before
+    assert pool.session("s").tokens == 12
+    pool.check_invariants()
+    assert_no_leakage(pool, oracle)
+    pool.unprotect("s")
+
+
+def test_protected_session_survives_allocation_pressure():
+    """Pages of a protected (actively-decoding) session are never evicted
+    out from under the engine slot writing into them."""
+    pool = make_pool(n_pages=4)
+    assert write(pool, "hot", list(range(8)), 1.0)       # 2 pages
+    pool.protect("hot")
+    # needs 3 pages but only 2 are free: eviction may not touch "hot"
+    assert pool.allocate("cold", 12, now=2.0) is None
+    assert pool.session("hot") is not None
+    assert_no_leakage(pool, {"hot": list(range(8))})
+    pool.unprotect("hot")
+    # once unprotected the same pressure may reclaim it
+    assert pool.allocate("cold", 12, now=3.0) is not None
+    pool.check_invariants()
+
+
 def test_free_page_accounting_balances_after_churn():
     """free + live == n_pages through a full allocate/share/release cycle,
     and a fully drained pool returns to all-free."""
