@@ -19,7 +19,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from . import (failure_injection, fig9_financial, fig9_router,  # noqa: E402
                fig9_swe, fig10_control_loop, paged_decode, pool_routing,
-               sec62_policies, sustained_rps, table4_two_level)
+               sec62_policies, spec_decode, sustained_rps, table4_two_level)
 
 BENCHES = {
     "fig9a_financial": fig9_financial,
@@ -38,6 +38,9 @@ BENCHES = {
     # paged-native decode vs gather data plane: per-step time + max
     # resident batch at fixed HBM (churn workload, real engines)
     "paged_decode": paged_decode,
+    # speculative decoding (self-draft, fused multi-token verify) +
+    # model-tier routing: tokens/step gain and goodput-per-FLOP
+    "spec_decode": spec_decode,
 }
 
 
@@ -82,6 +85,9 @@ def main() -> None:
     if "paged_decode" in all_rows:
         paged_decode.write_record(all_rows["paged_decode"],
                                   "full" if args.full else "quick")
+    if "spec_decode" in all_rows:
+        spec_decode.write_record(all_rows["spec_decode"],
+                                 "full" if args.full else "quick")
     print(f"done,benches,{len(all_rows)}")
 
 

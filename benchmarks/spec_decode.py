@@ -1,0 +1,318 @@
+"""Speculative decoding + model-tier routing — real engines, wall-clock.
+
+Two claims ride the paged data plane this PR armed:
+
+* **acceptance-weighted decode tokens/step** — identical greedy workload
+  through a plain engine and one with a small-tier draft (the target's
+  own first layer, truncated then *distilled* on the target's decisions:
+  ~half the FLOPs, same tokenizer by construction).  The verifier runs
+  all ``k+1`` positions in one fused ``decode_chunk_paged`` call, so
+  every accepted draft token rides a step for free.  Claims: acceptance
+  > 0, tokens/step >= 1.5x the baseline, and the emitted greedy stream is
+  *byte-identical* to the non-speculative engine's (rejection rollback
+  keeps the COW page bracket exact).
+
+  Why the pair is briefly trained first: a random-*weight* target is a
+  random hash of its context — no smaller model can predict its argmax
+  (measured ~7 % agreement, pure noise floor), which says nothing about
+  speculation because production targets are trained and their easy
+  tokens are exactly what a draft recovers.  So the target takes a few
+  hundred AdamW steps on a synthetic low-entropy corpus (modular
+  arithmetic ramps standing in for templated agent traces), and the
+  draft is distilled from the target's own greedy labels on that
+  distribution (`serving.speculative.distill_draft`).  The engine
+  machinery under test — fused verify, COW rollback, acceptance
+  accounting — is identical either way; training only restores the
+  low-entropy regime speculation exploits.  The greedy-identity check is
+  training-independent (both engines share the same target params).
+
+* **goodput-per-FLOP under tier routing** — a fig9-style two-phase mix of
+  cheap and hard steps on a 3-replica pool, once with every replica on the
+  large tier, once with a small-tier replica + ``TierRoutePolicy`` routing
+  ``model_tier`` hints.  Cheap steps burn small-tier FLOPs instead of
+  large-tier ones, so completed work per FLOP rises.
+
+Numbers are CPU smoke-model scale — the *shape* (ratios, identity) is the
+reproduced claim, not absolute latency.  Token-count ratios are
+deterministic for greedy decoding, so the 1.5x budget holds across hosts.
+
+    PYTHONPATH=src python -m benchmarks.spec_decode          # quick
+    PYTHONPATH=src python benchmarks/spec_decode.py --smoke  # CI budget
+    PYTHONPATH=src python -m benchmarks.run --only spec_decode
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.models.model import build_model  # noqa: E402
+from repro.serving.batching import Request  # noqa: E402
+from repro.serving.engine import InferenceEngine  # noqa: E402
+from repro.serving.sampler import SamplingParams  # noqa: E402
+from repro.serving.speculative import distill_draft, truncated_draft  # noqa: E402
+
+TARGET = "qwen3_1_7b"          # large tier (the verify side)
+SMALL = "qwen3_0_6b"           # small tier for the routing row
+MAX_SEQ = 96
+PAGE = 8
+MAX_BATCH = 4
+SPEC_K = 3
+TRAIN_STEPS = 250
+
+_MODELS: Dict[str, tuple] = {}
+_TRAINED: Dict[str, tuple] = {}
+
+
+def _model(arch):
+    if arch not in _MODELS:
+        cfg = get_smoke_config(arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _MODELS[arch] = (model, params)
+    return _MODELS[arch]
+
+
+def _ramps(key, B, S, V):
+    """Low-entropy corpus: modular arithmetic ramps (random start/stride)
+    — the smoke-scale stand-in for templated agent-trace text."""
+    import jax.numpy as jnp
+    k1, k2 = jax.random.split(key)
+    start = jax.random.randint(k1, (B, 1), 1, V)
+    stride = jax.random.randint(k2, (B, 1), 1, 17)
+    pos = jnp.arange(S)[None, :]
+    return ((start + stride * pos) % (V - 1) + 1).astype(jnp.int32)
+
+
+def _trained_pair(arch):
+    """Target trained on the ramp corpus + 1-layer draft distilled from
+    the target's greedy labels (see module docstring for why)."""
+    if arch in _TRAINED:
+        return _TRAINED[arch]
+    import jax.numpy as jnp
+    from repro.training.optimizer import AdamW, constant_schedule
+    model, params = _model(arch)
+    V = model.cfg.vocab_size
+
+    def ce(p, toks):
+        out = model.forward(p, {"tokens": toks})
+        lg = out[0] if isinstance(out, tuple) else out
+        lp = jax.nn.log_softmax(lg[:, :-1].astype(jnp.float32), axis=-1)
+        return -jnp.mean(jnp.take_along_axis(lp, toks[:, 1:, None], -1))
+
+    opt = AdamW(learning_rate=constant_schedule(3e-3), weight_decay=0.0)
+    state = opt.init(params)
+    step = jax.jit(lambda p, st, t: opt.update(jax.grad(ce)(p, t), st, p))
+    key = jax.random.PRNGKey(1)
+    for _ in range(TRAIN_STEPS):
+        key, sub = jax.random.split(key)
+        params, state = step(params, state, _ramps(sub, 32, 48, V))
+
+    draft, dparams = truncated_draft(model, params, 1)
+    dparams = distill_draft(draft, dparams, model, params,
+                            lambda k: _ramps(k, 32, 48, V),
+                            steps=TRAIN_STEPS, seed=2)
+    _TRAINED[arch] = (model, params, draft, dparams)
+    return _TRAINED[arch]
+
+
+def _flops_per_token(arch) -> float:
+    """Dense decode FLOPs/token proxy: 2 x parameter count."""
+    _, params = _model(arch)
+    return 2.0 * sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+def _engine(arch, *, spec: bool) -> InferenceEngine:
+    model, params, draft, dparams = _trained_pair(arch)
+    kw = {}
+    if spec:
+        kw = dict(draft_model=draft, draft_params=dparams, spec_k=SPEC_K,
+                  spec_min_accept=0.0)
+    return InferenceEngine(model, params, max_batch=MAX_BATCH,
+                           max_seq=MAX_SEQ, page_size=PAGE, prefill_chunk=8,
+                           rng_seed=0, **kw)
+
+
+def _decode_workload(eng: InferenceEngine, n_req: int, gen_len: int) -> Dict:
+    rng = np.random.default_rng(0)
+    V = eng.model.cfg.vocab_size
+    sp = SamplingParams(temperature=0.0, max_new_tokens=gen_len)
+    reqs = []
+    for j in range(n_req):
+        # held-out ramp prompts: same family as the corpus, fresh draws
+        start, stride = int(rng.integers(1, V)), int(rng.integers(1, 17))
+        prompt = [(start + stride * t) % (V - 1) + 1
+                  for t in range(8 + j % 5)]
+        r = Request.make(prompt, session_id=f"c{j}", sampling=sp)
+        eng.submit(r)
+        reqs.append(r)
+    t0 = time.perf_counter()
+    while eng.step():
+        pass
+    wall = time.perf_counter() - t0
+    m = eng.metrics
+    return {
+        "sessions": {r.session_id: list(r.generated) for r in reqs},
+        "decode_steps": m.decode_steps,
+        "tokens_generated": m.tokens_generated,
+        "tokens_per_step": m.decode_tokens_per_step,
+        "spec_rounds": m.spec_rounds,
+        "spec_proposed": m.spec_proposed,
+        "spec_accepted": m.spec_accepted,
+        "spec_acceptance": m.spec_acceptance,
+        "tok_per_s": m.tokens_generated / max(wall, 1e-9),
+    }
+
+
+def _tier_workload(tiered: bool, n_req: int, out_small: int,
+                   out_large: int) -> Dict:
+    """Fig9-style two-phase cheap/hard mix on a 3-replica pool."""
+    from repro.core import TierRoutePolicy
+    from repro.workloads.router import build_pool_runtime, tiered_driver
+
+    rt = build_pool_runtime(
+        replicas=3, arch=TARGET, max_batch=MAX_BATCH, max_seq=MAX_SEQ,
+        tiers=(["small", "large", "large"] if tiered else None),
+        tier_archs={"small": SMALL},
+        policy=TierRoutePolicy(), control_interval=0.05,
+        kv_affinity=False, prefill_chunk=8)
+    rt.start()
+    rng = np.random.default_rng(1)
+    for i in range(n_req):
+        # phase 1 cheap-heavy, phase 2 hard-heavy (the trace's imbalance)
+        hard = rng.random() < (0.7 if i >= n_req // 2 else 0.2)
+        tier = "large" if hard else "small"
+        out = out_large if hard else out_small
+        rt.submit_request(tiered_driver, f"q{i} {'hard' if hard else 'easy'}",
+                          tier, out)
+    rt.run(max_time=180.0)
+    backend = rt.engine_backends["llm"]
+    per_replica = []
+    flops = completed = tokens = 0.0
+    for iid in sorted(backend.instance_ids):
+        eng = backend.bridge_of(iid).engine
+        arch = SMALL if (tiered and eng.tier == "small") else TARGET
+        f = eng.metrics.tokens_generated * _flops_per_token(arch)
+        flops += f
+        completed += eng.metrics.completed
+        tokens += eng.metrics.tokens_generated
+        per_replica.append({"instance": iid, "tier": eng.tier, "arch": arch,
+                            "completed": eng.metrics.completed,
+                            "tokens": eng.metrics.tokens_generated})
+    rt.shutdown()
+    return {"completed": completed, "tokens": tokens, "flops": flops,
+            "goodput_per_gflop": completed / max(flops / 1e9, 1e-12),
+            "replicas": per_replica}
+
+
+def run(quick: bool = True, smoke: bool = False) -> List[Dict]:
+    n_req = 8 if (quick or smoke) else 24
+    gen_len = 24 if (quick or smoke) else 48
+    rows: List[Dict] = []
+
+    base = _decode_workload(_engine(TARGET, spec=False), n_req, gen_len)
+    spec = _decode_workload(_engine(TARGET, spec=True), n_req, gen_len)
+    identical = base["sessions"] == spec["sessions"]
+    for mode, m in (("baseline", base), ("speculative", spec)):
+        r = {k: v for k, v in m.items() if k != "sessions"}
+        rows.append({"bench": "spec_decode", "row": "decode", "arch": TARGET,
+                     "mode": mode, "greedy_identical": identical, **r})
+
+    tn = 12 if (quick or smoke) else 36
+    single = _tier_workload(False, tn, out_small=4, out_large=8)
+    tiered = _tier_workload(True, tn, out_small=4, out_large=8)
+    for mode, m in (("single_tier", single), ("tiered", tiered)):
+        rows.append({"bench": "spec_decode", "row": "tier_routing",
+                     "mode": mode, **m})
+    return rows
+
+
+def _pick(rows, row, mode):
+    return next(r for r in rows if r["row"] == row and r["mode"] == mode)
+
+
+def derive(rows: List[Dict]) -> List[str]:
+    base = _pick(rows, "decode", "baseline")
+    spec = _pick(rows, "decode", "speculative")
+    gain = spec["tokens_per_step"] / max(base["tokens_per_step"], 1e-9)
+    out = [
+        f"{TARGET}: speculative {spec['tokens_per_step']:.2f} tokens/step vs "
+        f"baseline {base['tokens_per_step']:.2f} ({gain:.2f}x), acceptance "
+        f"{spec['spec_acceptance']:.1%} over {spec['spec_rounds']} rounds, "
+        f"greedy byte-identical={spec['greedy_identical']}",
+    ]
+    st = _pick(rows, "tier_routing", "single_tier")
+    ti = _pick(rows, "tier_routing", "tiered")
+    fgain = ti["goodput_per_gflop"] / max(st["goodput_per_gflop"], 1e-12)
+    out.append(
+        f"tier routing: {ti['goodput_per_gflop']:.2f} completions/GFLOP "
+        f"(small+large) vs {st['goodput_per_gflop']:.2f} (all-large) — "
+        f"{fgain:.2f}x goodput-per-FLOP at equal replica count")
+    return out
+
+
+def write_record(rows: List[Dict], mode: str) -> str:
+    base = _pick(rows, "decode", "baseline")
+    spec = _pick(rows, "decode", "speculative")
+    st = _pick(rows, "tier_routing", "single_tier")
+    ti = _pick(rows, "tier_routing", "tiered")
+    checks = {
+        "acceptance_positive": bool(spec["spec_acceptance"] > 0),
+        "greedy_identical_to_baseline": bool(spec["greedy_identical"]),
+        "tokens_per_step_above_one": bool(spec["tokens_per_step"] > 1.0),
+        "tokens_per_step_1_5x": bool(
+            spec["tokens_per_step"]
+            >= 1.5 * base["tokens_per_step"]),
+        "tier_goodput_per_flop_gain": bool(
+            ti["goodput_per_gflop"] > st["goodput_per_gflop"]),
+        "tiered_completed_all": bool(ti["completed"] >= st["completed"]),
+    }
+    payload = {"bench": "spec_decode", "mode": mode, "spec_k": SPEC_K,
+               "target": TARGET,
+               "draft": "1-layer truncated self-draft, distilled on target "
+                        "greedy labels (ramp corpus)",
+               "small_tier": SMALL, "checks": checks,
+               "derived": derive(rows), "rows": rows}
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_spec_decode.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=str)
+        f.write("\n")
+    return path
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true")
+    p.add_argument("--smoke", action="store_true",
+                   help="CI budget: acceptance > 0, greedy identical to "
+                        "baseline, tokens/step > 1, tier routing wins "
+                        "goodput-per-FLOP")
+    args = p.parse_args()
+    rows = run(quick=not args.full, smoke=args.smoke)
+    for line in derive(rows):
+        print(line)
+    path = write_record(rows, "smoke" if args.smoke else
+                        ("quick" if not args.full else "full"))
+    print(f"wrote {os.path.relpath(path)}")
+    if args.smoke:
+        with open(path) as f:
+            checks = json.load(f)["checks"]
+        bad = [name for name, ok in checks.items() if ok is False]
+        assert not bad, f"spec-decode budget violated: {bad}"
+        print("spec_decode --smoke: OK (acceptance > 0, greedy identical, "
+              "tokens/step > 1.5x baseline, tier routing wins per FLOP)")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,7 +25,8 @@ from .policy import (Action, ActionSink, ClusterView, HighPrioritySessionPolicy,
                      HoLMitigationPolicy, InstanceView, KVAffinityPolicy,
                      LoadBalancePolicy, LPTPolicy, LPTSchedule, Policy,
                      PolicyChain, ResourceReassignmentPolicy, RetryPolicy,
-                     SRTFPolicy, SRTFSchedule, default_policies)
+                     SRTFPolicy, SRTFSchedule, TierRoutePolicy,
+                     default_policies)
 from .runtime import NalarRuntime, Router, current_runtime, deployment
 from .session import SessionRegistry, get_context, set_context
 from .state import (ManagedDict, ManagedList, SessionStateStore,
@@ -46,7 +47,7 @@ __all__ = [
     "LPTSchedule", "ManagedDict", "ManagedList", "NalarRuntime", "NodeStore",
     "Policy", "PolicyChain", "RealTimeKernel", "Residency",
     "ResourceReassignmentPolicy", "RetryPolicy", "Router", "SRTFPolicy",
-    "SRTFSchedule",
+    "SRTFSchedule", "TierRoutePolicy",
     "SessionRegistry", "SessionStateStore", "SessionTranscript", "SimKernel",
     "StoreCluster",
     "Stub", "Telemetry", "current_runtime", "default_policies", "deployment",

@@ -291,6 +291,8 @@ class GlobalController:
             elif a.kind == "route_weighted":
                 rt.router.set_weights(p["agent_type"], p["instances"],
                                       p["weights"])
+            elif a.kind == "route_tier":
+                rt.router.set_tiers(p["agent_type"], p["tiers"])
             elif a.kind == "set_priority":
                 rt.sessions.set_priority(p["session_id"], p["value"],
                                          p.get("agent"))

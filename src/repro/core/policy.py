@@ -7,6 +7,7 @@ primitives:
 
     route(session_id, agent_type, instance)            session pinning
     route_weighted(agent_type, instances, weights)     weighted spraying
+    route_tier(agent_type, {tier: [instances]})        model-tier routing
     set_priority(session_id, value[, agent_type])
     migrate(session_id, src_instance, dst_instance)
     migrate_future(fid, dst_instance)
@@ -61,6 +62,13 @@ class InstanceView:
     # prefix residency a replica actually converts into saved prefill.
     engine_prefix_hits: int = 0
     engine_prefix_tokens: int = 0
+    # model-tier label of the replica's engine ("" = untiered) plus the
+    # speculative-decode gauges: verifier acceptance rate and the
+    # acceptance-weighted decode tokens/step (> 1 = speculation paying).
+    # TierRoutePolicy builds its tier table from these.
+    engine_tier: str = ""
+    engine_spec_acceptance: float = 0.0
+    engine_decode_tokens_per_step: float = 0.0
 
     def eta(self, now: float) -> float:
         rem = max(0.0, self.busy_until - now) if self.busy else 0.0
@@ -155,6 +163,11 @@ class ClusterView:
             engine_rejects=int(m.get("engine_rejects", 0)),
             engine_prefix_hits=int(m.get("engine_shared_prefix_hits", 0)),
             engine_prefix_tokens=int(m.get("engine_shared_prefix_tokens", 0)),
+            engine_tier=str(m.get("engine_tier", "")),
+            engine_spec_acceptance=float(
+                m.get("engine_spec_acceptance", 0.0)),
+            engine_decode_tokens_per_step=float(
+                m.get("engine_decode_tokens_per_step", 0.0)),
         )
         old = self.instances.get(iid)
         self.instances[iid] = iv
@@ -230,6 +243,14 @@ class ActionSink:
                        weights: List[float]) -> None:
         self.actions.append(Action("route_weighted", dict(
             agent_type=agent_type, instances=instances, weights=weights)))
+
+    def route_tier(self, agent_type: str,
+                   tiers: Dict[str, List[str]]) -> None:
+        """Install a model-tier routing table: futures carrying a
+        ``model_tier`` work hint are routed within ``tiers[hint]`` (with
+        shed-watermark fallback to the other tiers — see Router.route)."""
+        self.actions.append(Action("route_tier", dict(
+            agent_type=agent_type, tiers=tiers)))
 
     def set_priority(self, session_id: str, priority_value: float,
                      agent: Optional[str] = None) -> None:
@@ -313,6 +334,37 @@ class LoadBalancePolicy(Policy):
             s = sum(weights)
             act.route_weighted(agent_type, [iv.instance_id for iv in ivs],
                                [w / s for w in weights])
+
+
+class TierRoutePolicy(Policy):
+    """Just-in-time model-tier routing: publish a tier table built from each
+    replica's self-reported ``engine_tier`` so the router can steer cheap
+    steps (futures hinted ``model_tier="small"``) to small-tier replicas and
+    hard steps to large ones.  The SLO-aware part lives in the router: a
+    tier whose every replica sits at or above the shed watermark falls
+    through to the remaining tiers, composing with the fresh-traffic shed
+    rather than fighting it — a hint is a preference, never a hard pin.
+    """
+
+    name = "tier_route"
+
+    def __init__(self) -> None:
+        self._last: Dict[str, Dict[str, List[str]]] = {}
+
+    def step(self, view: ClusterView, act: ActionSink) -> None:
+        for agent_type in view.by_type:
+            tiers: Dict[str, List[str]] = {}
+            for iv in view.instances_of(agent_type):
+                if iv.engine_tier:
+                    tiers.setdefault(iv.engine_tier, []).append(
+                        iv.instance_id)
+            for ids in tiers.values():
+                ids.sort()
+            if not tiers:           # untiered pool: nothing to install
+                continue
+            if self._last.get(agent_type) != tiers:
+                act.route_tier(agent_type, tiers)
+                self._last[agent_type] = tiers
 
 
 class HoLMitigationPolicy(Policy):

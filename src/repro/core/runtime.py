@@ -64,6 +64,7 @@ class Router:
         self.rt = runtime
         self._pins: Dict[tuple, str] = {}        # (sid, agent_type) -> iid
         self._weights: Dict[str, tuple] = {}     # agent_type -> (iids, cum_w)
+        self._tiers: Dict[str, Dict[str, List[str]]] = {}  # at -> tier -> iids
         self._rng = random.Random(0xA11CE)
         # default-routing capability: "least_eta" (NALAR's native policy-1
         # load balancing), "least_qlen" (queue-length only — blind to
@@ -105,6 +106,11 @@ class Router:
             s += w
             cum.append(s)
         self._weights[agent_type] = (list(instances), cum)
+
+    def set_tiers(self, agent_type: str,
+                  tiers: Dict[str, List[str]]) -> None:
+        """Install the ``route_tier`` table: tier label -> instance ids."""
+        self._tiers[agent_type] = {t: list(ids) for t, ids in tiers.items()}
 
     def route(self, fut: Future) -> Optional[AgentInstance]:
         at = fut.meta.agent_type
@@ -162,6 +168,25 @@ class Router:
                          and not shed(i)]
                 if local:
                     return min(local, key=lambda i: i.load_score(self.rt.kernel.now()))
+        # 2c. model-tier hint (route_tier primitive): restrict the candidate
+        # pool to the hinted tier's replicas.  SLO-aware fallback: when the
+        # whole tier sits at/above the shed watermark while another tier
+        # still has a fresh replica, the hint yields to the shed — a hint
+        # is a preference, never a hard pin.
+        tier_pool = None
+        tiers = self._tiers.get(at)
+        tier_hint = fut.meta.work_hint.get("model_tier") if tiers else None
+        if tier_hint is not None:
+            ids = set(tiers.get(str(tier_hint), ()))
+            pool = [i for i in live if i.instance_id in ids]
+            if pool and not (
+                    sat_of is not None
+                    and not any(sat_of(i.instance_id) < self.shed_watermark
+                                for i in pool)
+                    and any(sat_of(i.instance_id) < self.shed_watermark
+                            for i in live)):
+                tier_pool = pool
+                live = pool
         # shed saturated replicas from default/weighted selection while a
         # below-watermark sibling exists (backpressure-aware routing)
         if sat_of is not None:
@@ -177,7 +202,7 @@ class Router:
             valid = [(i, c) for i, c in zip(iids, cum)
                      if self.rt.instance(i) is not None
                      and self.rt.instance(i).alive
-                     and (i in allowed or not sat_of)]
+                     and (i in allowed or not (sat_of or tier_pool))]
             if valid:
                 r = self._rng.random() * valid[-1][1]
                 for iid, c in valid:

@@ -157,7 +157,8 @@ def _token_specs(shape: InputShape, cfg: ModelConfig) -> Dict[str, Any]:
 
 
 def build_model(cfg: ModelConfig, attention_impl: str = "xla",
-                moe_impl: str = "einsum", remat: bool = False) -> Model:
+                moe_impl: str = "einsum", remat: bool = False,
+                moe_serve_impl: str = "dropless") -> Model:
     fam = cfg.family
 
     # ----------------------------------------------------------- dense/moe
@@ -184,19 +185,26 @@ def build_model(cfg: ModelConfig, attention_impl: str = "xla",
             init=functools.partial(transformer.init_params, cfg=cfg),
             forward=fwd,
             loss_fn=loss_fn,
+            # serving entry points use the dropless MoE dispatch: capacity
+            # dropping is priority-ordered across the whole batch, so with
+            # it a token's logits depend on batch composition — breaking
+            # the pinned chunked == sequential and speculative == plain
+            # bitwise invariants.  Training (forward/loss_fn) keeps the
+            # paper's capacity semantics.
             prefill=lambda params, batch, **kw: transformer.prefill(
                 params, cfg, batch["tokens"], attention_impl=attention_impl,
-                moe_impl=moe_impl, **kw),
+                moe_impl=moe_serve_impl, **kw),
             decode_step=lambda params, tok, cache: transformer.decode_step(
                 params, cfg, tok, cache, attention_impl=attention_impl,
-                moe_impl=moe_impl),
+                moe_impl=moe_serve_impl),
             decode_chunk=lambda params, toks, n, cache: transformer.decode_chunk(
                 params, cfg, toks, n, cache, attention_impl=attention_impl,
-                moe_impl=moe_impl),
+                moe_impl=moe_serve_impl),
             decode_chunk_paged=lambda params, toks, n, cache, kp, vp, pt, **kw:
                 transformer.decode_chunk_paged(
                     params, cfg, toks, n, cache, kp, vp, pt,
-                    attention_impl=attention_impl, moe_impl=moe_impl, **kw),
+                    attention_impl=attention_impl, moe_impl=moe_serve_impl,
+                    **kw),
             init_cache=functools.partial(transformer.init_cache, cfg),
             input_specs=lambda shape: _token_specs(shape, cfg),
         )

@@ -6,11 +6,19 @@ tensor [G, E, C] stays VMEM-scale; expert weights shard over the `model`
 mesh axis (expert parallelism) and the dispatch/combine einsums lower to the
 all-to-all the roofline analysis tracks.
 
-Two dispatch implementations:
+Three dispatch implementations:
   * "einsum"  — baseline one-hot matmul dispatch (this file's default);
   * "gather"  — beyond-paper optimization used by the perf hillclimb
     (EXPERIMENTS.md §Perf): index-gather dispatch that removes the one-hot
     matmul FLOPs.
+  * "dropless" — per-token inference dispatch with no capacity buffers.
+    The capacity impls are priority-ordered across the whole token group
+    (every first choice lands before any second choice), so whether a
+    token's choice is dropped depends on *other* tokens in the batch —
+    correct Switch-style training semantics, but it makes decode outputs
+    a function of batch composition.  Serving needs batch invariance
+    (chunked == sequential, speculative verify == plain decode, bitwise),
+    so the serving entry points route through "dropless" instead.
 
 The router's per-expert load statistics are exported via an auxiliary output
 so the serving layer can feed them to NALAR's global controller as telemetry
@@ -132,6 +140,29 @@ def _group_gather(xg: jnp.ndarray, p: dict, cfg: ModelConfig):
     return y.astype(xg.dtype), probs, counts.astype(jnp.int32)
 
 
+def _dropless(xt: jnp.ndarray, p: dict, cfg: ModelConfig):
+    """Per-token dropless MoE: every token keeps all ``top_k`` choices.
+
+    No capacity buffers and no cross-token state, so a token's output is
+    bitwise invariant to what it is batched with — the property chunked
+    decode and the speculative verifier rely on.  Computes all ``E``
+    experts densely and masks the combine to the top-k gates (E/k x the
+    routed FLOPs; production engines get the same semantics from grouped
+    GEMMs, this repo's scale doesn't warrant one).
+    """
+    E = cfg.n_experts
+    gates, idx, probs = _route(xt, p["router"], cfg)          # [T,k], [T,E]
+    xe = xt.astype(cfg.jnp_dtype)
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xe, p["w_gate"]))
+    h = h * jnp.einsum("td,edf->tef", xe, p["w_up"])
+    ye = jnp.einsum("tef,efd->ted", h, p["w_down"])           # [T,E,D]
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)        # [T,k,E]
+    w = jnp.sum(onehot * gates[..., None], axis=1)            # [T,E]
+    y = jnp.einsum("te,ted->td", w, ye.astype(jnp.float32))
+    counts = jnp.sum(onehot, axis=(0, 1)).astype(jnp.int32)
+    return y.astype(xt.dtype), probs, counts
+
+
 def load_balance_loss(probs: jnp.ndarray, counts: jnp.ndarray,
                       cfg: ModelConfig) -> jnp.ndarray:
     """Switch-style aux loss: E * <f_e> . <p_e>."""
@@ -147,6 +178,10 @@ def moe_block(x: jnp.ndarray, p: dict, cfg: ModelConfig,
     B, S, D = x.shape
     T = B * S
     xt = x.reshape(T, D)
+    if impl == "dropless":
+        y, probs, counts = _dropless(xt, p, cfg)
+        aux = load_balance_loss(probs, counts, cfg)
+        return y.reshape(B, S, D), aux, counts
     G = min(group_size, T)
     if T % G != 0:   # pad to a whole number of groups
         pad = G - T % G

@@ -392,6 +392,10 @@ class EngineBridge:
             "engine_rejects": e.queue.rejected,
             "engine_shared_prefix_hits": e.metrics.shared_prefix_hits,
             "engine_shared_prefix_tokens": e.metrics.shared_prefix_tokens,
+            "engine_tier": getattr(e, "tier", ""),
+            "engine_spec_acceptance": e.metrics.spec_acceptance,
+            "engine_decode_tokens_per_step":
+                e.metrics.decode_tokens_per_step,
         }
 
 

@@ -48,7 +48,7 @@ from ..configs.base import ModelConfig
 from ..models.model import Model
 from .batching import EngineOverloaded, Request, WaitQueue, bucket_len
 from .kv_cache import PagedKVPool, StateCachePool
-from .sampler import SamplingParams, sample
+from .sampler import SamplingParams, sample, speculative_verify
 
 # model families whose decode step, run token-by-token from a blank cache
 # row, is exactly prefill (causal attention / recurrent state).  Encoder-
@@ -84,6 +84,23 @@ class EngineMetrics:
     # paged-native admissions/steps aborted because the pool could not
     # provide pages (all residents protected or pinned)
     paged_append_failures: int = 0
+    # speculative decoding: rounds that ran a draft, draft tokens proposed,
+    # and tokens the verifier accepted
+    spec_rounds: int = 0
+    spec_proposed: int = 0
+    spec_accepted: int = 0
+
+    @property
+    def spec_acceptance(self) -> float:
+        return (self.spec_accepted / self.spec_proposed
+                if self.spec_proposed else 0.0)
+
+    @property
+    def decode_tokens_per_step(self) -> float:
+        """Acceptance-weighted decode throughput: > 1 means speculation is
+        paying (every accepted draft token rides a step for free)."""
+        return (self.tokens_generated / self.decode_steps
+                if self.decode_steps else 0.0)
 
 
 def _cache_slot_axis(key: str) -> int:
@@ -133,7 +150,13 @@ class InferenceEngine:
                  finished_cap: int = 8192,
                  prefix_sharing: bool = True,
                  paged_decode: bool = True,
-                 paged_kernel: Optional[bool] = None) -> None:
+                 paged_kernel: Optional[bool] = None,
+                 draft_model: Optional[Model] = None,
+                 draft_params: Optional[dict] = None,
+                 spec_k: int = 3,
+                 spec_min_accept: float = 0.25,
+                 spec_warmup: int = 24,
+                 tier: str = "") -> None:
         self.model = model
         self.cfg: ModelConfig = model.cfg
         self.params = params
@@ -270,6 +293,47 @@ class InferenceEngine:
             # place (CPU donation is a no-op and only warns)
             donate = (4, 5) if jax.default_backend() == "tpu" else ()
             self._paged_step = jax.jit(_paged_chunk, donate_argnums=donate)
+
+        # speculative decoding (paged plane only): a small-tier draft
+        # proposes spec_k tokens per decode round; the same paged chunk
+        # step verifies all k+1 positions at once.  The spec variant of the
+        # step jit returns the full [B,T,V] logits plus per-position argmax
+        # — the verifier needs every row, not just the last valid one.
+        self.tier = str(tier)
+        self.spec_k = int(spec_k)
+        self.spec_min_accept = float(spec_min_accept)
+        self.spec_warmup = int(spec_warmup)
+        self._spec = None
+        self._paged_step_all: Optional[Callable] = None
+        # pool-session -> [proposed, accepted]: the acceptance ledger the
+        # adaptive controller reads to disable speculation per session
+        self._spec_ledger: Dict[str, List[int]] = {}
+        self._spec_off: set = set()
+        # slots whose draft stream mirrors the target's consumed tokens
+        # (unknown provenance = no speculation for that slot)
+        self._spec_ok: set = set()
+        if draft_model is not None and self._paged and self.spec_k > 0:
+            if draft_model.cfg.vocab_size != self.cfg.vocab_size:
+                raise ValueError(
+                    "draft/target vocab mismatch: "
+                    f"{draft_model.cfg.vocab_size} vs {self.cfg.vocab_size}")
+            from .speculative import DraftEngine
+            self._spec = DraftEngine(draft_model, draft_params,
+                                     max_batch=max_batch, max_seq=max_seq)
+            paged_fn = model.decode_chunk_paged
+            _max_seq = self.max_seq
+            _kernel = self._paged_kernel
+
+            def _paged_chunk_all(params, toks, valid, cache, kp, vp, pt):
+                logits, cache, kp, vp = paged_fn(
+                    params, toks, valid, cache, kp, vp, pt,
+                    max_seq=_max_seq, kernel=_kernel)
+                greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return logits, greedy, cache, kp, vp
+
+            donate = (4, 5) if jax.default_backend() == "tpu" else ()
+            self._paged_step_all = jax.jit(_paged_chunk_all,
+                                           donate_argnums=donate)
         # lazily jitted encoder pass for chunked encoder-decoder admission
         self._encode_cross: Optional[Callable] = None
         self._prefill_cache: Dict[int, Callable] = {}
@@ -519,8 +583,18 @@ class InferenceEngine:
                 # would corrupt them.  Defer until that slot finishes.
                 self.queue.push(req)
                 return
-            req.decode_path = "paged" if self._paged else (
-                "fused" if self._decode_chunk is not None else "masked")
+            W = self.cfg.sliding_window
+            if self._paged:
+                req.decode_path = "paged"
+            elif W and self.max_seq > W and self._decode_chunk is not None:
+                # windowed config whose ring wraps (max_seq > window): the
+                # paged plane cannot serve it (linear page layout != ring
+                # layout), so it stays on the dense ring fallback plane
+                req.decode_path = "dense-ring"
+            elif self._decode_chunk is not None:
+                req.decode_path = "fused"
+            else:
+                req.decode_path = "masked"
             resumed = None
             if req.session_id:
                 resumed = self._try_resume(req)
@@ -577,6 +651,14 @@ class InferenceEngine:
                     self.cache = set_slot(self.cache, slot, row_cache)
                 self._pending_prompt[slot] = [int(t) for t in req.prompt]
                 self._slot_tokens[slot] = self._resumed_slot_tokens(req, tokens)
+                if self._spec is not None:
+                    # the draft can only shadow this slot if the resumed
+                    # positions have exact token provenance to replay
+                    self._spec.reset(slot)
+                    ids = self._slot_tokens[slot]
+                    if ids is not None and len(ids) == tokens:
+                        self._spec.observe(slot, ids)
+                        self._spec_ok.add(slot)
             elif self._chunked_for(req):
                 # chunked prefill: blank row now, prompt consumed by step()
                 # in prefill_chunk-sized pieces piggybacked on decode
@@ -601,6 +683,11 @@ class InferenceEngine:
                 self.cache = set_slot(self.cache, slot, row)
                 self._pending_prompt[slot] = [int(t) for t in req.prompt]
                 self._slot_tokens[slot] = [] if self._prefix_share_ok else None
+                if self._spec is not None:
+                    # chunked prefill feeds the whole prompt through the
+                    # step loop, which mirrors each chunk into the draft
+                    self._spec.reset(slot)
+                    self._spec_ok.add(slot)
                 self.metrics.prefills += 1
                 self.metrics.prefill_tokens += len(req.prompt)
             else:
@@ -645,6 +732,14 @@ class InferenceEngine:
                 else:
                     self.cache = set_slot(self.cache, slot, row_cache)
                 self._slot_tokens[slot] = list(ids) if ids is not None else None
+                if self._spec is not None and self._paged:
+                    # bucketed prefill: the cache holds the left-padded
+                    # bucket, reconstructible whether or not it was indexed
+                    full = ([0] * (bucket - S) + [int(t) for t in req.prompt])
+                    self._spec.reset(slot)
+                    if tokens == len(full):
+                        self._spec.observe(slot, full)
+                        self._spec_ok.add(slot)
                 self.metrics.tokens_generated += 1
                 if (len(req.generated) >= req.sampling.max_new_tokens
                         or tok == req.sampling.eos_token):
@@ -874,12 +969,35 @@ class InferenceEngine:
         index).  A slot whose reservation fails is aborted explicitly —
         counted, finished with what it has — never silently wedged."""
         pending = self._pending_prompt
+        pos_before = np.asarray(self.cache["pos"])
+        # plan speculation: decode-only slots with a shadowing draft stream
+        # propose spec_k tokens each (batched across slots in the draft)
+        spec_plan: Dict[int, List[int]] = {}
+        if self._spec is not None:
+            want: Dict[int, int] = {}
+            for i in active:
+                if pending.get(i) or i not in self._spec_ok:
+                    continue
+                req = self.slots[i]
+                if req is None or not req.generated:
+                    continue
+                k_i = self._spec_budget(i, req, int(pos_before[i]))
+                if k_i > 0:
+                    self._spec.observe(i, [int(req.generated[-1])])
+                    want[i] = k_i
+            if want:
+                spec_plan = self._spec.propose(want)
         need = 1
         for i in active:
             q = pending.get(i)
             if q:
                 need = max(need, min(len(q), budget))
-        T = min(1 << (need - 1).bit_length(), budget)
+            elif i in spec_plan:
+                need = max(need, 1 + len(spec_plan[i]))
+        cap = budget
+        if spec_plan:
+            cap = max(cap, max(1 + len(d) for d in spec_plan.values()))
+        T = min(1 << (need - 1).bit_length(), cap)
         toks = np.zeros((self.max_batch, T), np.int32)
         valid = np.zeros((self.max_batch,), np.int32)
         for i in active:
@@ -891,10 +1009,15 @@ class InferenceEngine:
                 valid[i] = n
                 if not q:
                     pending.pop(i, None)
+                if self._spec is not None and i in self._spec_ok:
+                    # mirror the consumed chunk into the draft stream
+                    self._spec.observe(i, toks[i, :n].tolist())
             else:
                 req = self.slots[i]
-                toks[i, 0] = req.generated[-1] if req.generated else 0
-                valid[i] = 1
+                seq = [int(req.generated[-1]) if req.generated else 0]
+                seq += spec_plan.get(i, [])
+                toks[i, :len(seq)] = seq
+                valid[i] = len(seq)
         now = time.monotonic()
         aborted: List[int] = []
         for i in active:
@@ -908,20 +1031,32 @@ class InferenceEngine:
         if self._prefix_share_ok:
             for i in active:
                 ids = self._slot_tokens.get(i)
-                if ids is not None and valid[i]:
+                if ids is not None and valid[i] and i not in spec_plan:
                     ids.extend(int(t) for t in toks[i, :valid[i]])
         pt = np.full((self.max_batch, self._max_pages), -1, np.int32)
         for i in active:
             if valid[i]:
                 pt[i] = self.pool.page_table(self._slot_sid[i],
                                              self._max_pages)
-        rows, greedy, self.cache, self.pool.k, self.pool.v = \
-            self._paged_step(self.params, jnp.asarray(toks),
-                             jnp.asarray(valid), self.cache,
-                             self.pool.k, self.pool.v, jnp.asarray(pt))
+        if self._paged_step_all is not None:
+            logits, greedy_all, self.cache, self.pool.k, self.pool.v = \
+                self._paged_step_all(self.params, jnp.asarray(toks),
+                                     jnp.asarray(valid), self.cache,
+                                     self.pool.k, self.pool.v,
+                                     jnp.asarray(pt))
+            greedy_np_all = np.asarray(greedy_all)               # [B,T]
+            greedy = greedy_np_all[np.arange(self.max_batch),
+                                   np.maximum(valid - 1, 0)]     # [B]
+            rows = None                                          # lazy [B,V]
+        else:
+            rows, greedy, self.cache, self.pool.k, self.pool.v = \
+                self._paged_step(self.params, jnp.asarray(toks),
+                                 jnp.asarray(valid), self.cache,
+                                 self.pool.k, self.pool.v, jnp.asarray(pt))
+            logits = greedy_np_all = None
         self.metrics.decode_steps += 1
         for i in active:
-            if valid[i]:
+            if valid[i] and i not in spec_plan:
                 n = int(valid[i])
                 ids = (toks[i, :n].tolist()
                        if self._slot_tokens.get(i) is not None else None)
@@ -936,6 +1071,16 @@ class InferenceEngine:
         sampled: set = set()
         for i in ready:
             req = self.slots[i]
+            if i in spec_plan:
+                self._verify_slot(req, i, spec_plan[i], int(toks[i, 0]),
+                                  int(pos_before[i]), logits, greedy_np_all,
+                                  now)
+                sampled.add(i)
+                continue
+            if rows is None and logits is not None:
+                rows = jnp.take_along_axis(
+                    logits, jnp.asarray(np.maximum(valid - 1, 0))
+                    [:, None, None], axis=1)[:, 0]               # [B,V]
             tok = self._sample_slot(req, rows, i, greedy_np)
             req.generated.append(tok)
             if req.first_token_at < 0:
@@ -943,6 +1088,92 @@ class InferenceEngine:
             self.metrics.tokens_generated += 1
             sampled.add(i)
         return sampled
+
+    def _spec_budget(self, slot: int, req: Request, pos: int) -> int:
+        """Draft tokens worth proposing for this slot this round (0 = run a
+        plain decode step): bounded by the configured ``spec_k``, by the
+        request's remaining new-token budget (a round emits at most k+1),
+        by the slot's remaining positions, and by the adaptive per-session
+        off-switch."""
+        sid = self._slot_sid.get(slot)
+        if sid is None or sid in self._spec_off:
+            return 0
+        remaining_new = req.sampling.max_new_tokens - len(req.generated)
+        n_max = self.max_seq - 1 - pos       # emission budget to the cap
+        return max(0, min(self.spec_k, remaining_new - 1, n_max - 1))
+
+    def _verify_slot(self, req: Request, slot: int, drafts: List[int],
+                     t_prev: int, pos0: int, logits, greedy_all: np.ndarray,
+                     now: float) -> None:
+        """Rejection-sample one verified draft chunk for ``slot``.
+
+        The jitted step already scattered K/V for all ``k+1`` fed positions
+        into the slot's reserved pages; this decides how many survive.
+        Greedy accepts the longest prefix where the in-jit argmax equals
+        the draft (bitwise the non-speculative sequence, because chunked ==
+        sequential is pinned); stochastic runs the accept/resample rule on
+        the per-position logits with the request's seeded stream.  Commits
+        exactly the consumed positions, rolls the rejected tail's reserved
+        pages back, rewinds the slot position, and truncates the draft's
+        stream to the surviving prefix."""
+        k = len(drafts)
+        sp = req.sampling
+        if sp.temperature <= 0.0:
+            g = greedy_all[slot]
+            m = 0
+            while m < k and int(g[m]) == drafts[m]:
+                m += 1
+            candidates = drafts[:m] + [int(g[m])]
+        else:
+            key = self._req_rng.get(req.request_id)
+            if key is None:
+                key = self._request_key(req)
+            key, sub = jax.random.split(key)
+            self._req_rng[req.request_id] = key
+            rows_np = np.asarray(logits[slot, :k + 1], dtype=np.float32)
+            candidates, m = speculative_verify(rows_np, drafts, sp, sub)
+        # trim emissions at the request's stop conditions (a mid-chunk eos
+        # or budget hit ends the round early, exactly like the one-token
+        # path would have)
+        emitted: List[int] = []
+        for t in candidates:
+            emitted.append(int(t))
+            if (len(req.generated) + len(emitted) >= sp.max_new_tokens
+                    or t == sp.eos_token
+                    or pos0 + len(emitted) >= self.max_seq - 1):
+                break
+        r = len(emitted)
+        sid = self._slot_sid[slot]
+        consumed_ids = [t_prev] + [int(t) for t in emitted[:r - 1]]
+        ids = self._slot_tokens.get(slot)
+        if ids is not None:
+            ids.extend(consumed_ids)
+        self.pool.commit_append(
+            sid, r, token_ids=(consumed_ids if ids is not None else None),
+            now=now)
+        self.pool.truncate_reserved(sid)
+        # the jit advanced pos by the full k+1 feed; only r positions exist
+        self.cache["pos"] = self.cache["pos"].at[slot].set(pos0 + r)
+        self._spec.rollback(slot, pos0 + r)
+        for t in emitted:
+            req.generated.append(int(t))
+            self.metrics.tokens_generated += 1
+        if req.first_token_at < 0:
+            req.first_token_at = time.monotonic()
+        self.metrics.spec_rounds += 1
+        self.metrics.spec_proposed += k
+        self.metrics.spec_accepted += m
+        led = self._spec_ledger.setdefault(sid, [0, 0])
+        led[0] += k
+        led[1] += m
+        if (led[0] >= self.spec_warmup
+                and led[1] < self.spec_min_accept * led[0]):
+            # observed acceptance makes speculation a loss for this
+            # session: every future round decodes plain
+            self._spec_off.add(sid)
+        if len(self._spec_ledger) > 8192:
+            self._spec_ledger.clear()
+            self._spec_off.clear()
 
     def _step_fused(self, active: List[int], budget: int) -> set:
         """One fused chunk forward: prefilling slots consume up to
@@ -1060,6 +1291,9 @@ class InferenceEngine:
         self._active_mask[slot] = False
         self._pending_prompt.pop(slot, None)
         self._slot_tokens.pop(slot, None)
+        if self._spec is not None:
+            self._spec.reset(slot)
+            self._spec_ok.discard(slot)
         sid = self._slot_sid.pop(slot, None)
         if sid is not None:
             self.pool.unprotect(sid)
@@ -1187,6 +1421,13 @@ class InferenceEngine:
                 "prefill_chunk": self.prefill_chunk,
                 "paged_decode": self._paged,
                 "paged_kernel": self._paged and self._paged_kernel,
+                "tier": self.tier,
+                "speculative": self._spec is not None,
+                "spec_rounds": m.spec_rounds,
+                "spec_proposed": m.spec_proposed,
+                "spec_accepted": m.spec_accepted,
+                "spec_acceptance": m.spec_acceptance,
+                "decode_tokens_per_step": m.decode_tokens_per_step,
                 "resume_overflows": m.resume_overflows,
                 "resume_unsupported": m.resume_unsupported,
                 "paged_append_failures": m.paged_append_failures,

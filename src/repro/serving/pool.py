@@ -448,4 +448,12 @@ def register_engine_pool(runtime, name: str,
         inst.methods = {mn: method for mn in methods}
         pool.add_replica(iid, bridge)
     runtime.engine_backends[name] = pool
+    # publish each replica's mirror now that the backend is installed:
+    # engine gauges (tier label, saturation) must reach the ClusterView
+    # before first traffic, or an idle replica stays invisible to
+    # tier/shed policies until something routes to it by accident
+    for iid in iids:
+        ctrl = runtime.controller_of(iid)
+        if ctrl is not None:
+            ctrl._publish_metrics()
     return stub

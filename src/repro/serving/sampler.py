@@ -1,12 +1,13 @@
-"""Token sampling."""
+"""Token sampling + speculative-decode rejection sampling."""
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclass(frozen=True)
@@ -32,3 +33,85 @@ def sample(logits: jnp.ndarray, params: SamplingParams,
         kth = jax.lax.top_k(logits, params.top_k)[0][..., -1:]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
     return jax.random.categorical(rng, logits).astype(jnp.int32)
+
+
+# ------------------------------------------------- speculative verification
+def target_probs(logits: jnp.ndarray, params: SamplingParams) -> np.ndarray:
+    """The distribution :func:`sample` draws from, as explicit probabilities.
+
+    logits [..., V] -> float32 probabilities [..., V] after temperature
+    scaling and top-k filtering.  ``temperature <= 0`` returns the argmax
+    point mass (greedy is a distribution too, which keeps the accept rule
+    uniform across both modes)."""
+    logits = np.asarray(logits, dtype=np.float32)
+    if params.temperature <= 0.0:
+        out = np.zeros_like(logits)
+        idx = np.argmax(logits, axis=-1)
+        np.put_along_axis(out, idx[..., None], 1.0, axis=-1)
+        return out
+    logits = logits / params.temperature
+    if params.top_k > 0:
+        kth = np.sort(logits, axis=-1)[..., -params.top_k][..., None]
+        logits = np.where(logits < kth, -np.inf, logits)
+    logits = logits - logits.max(axis=-1, keepdims=True)
+    e = np.exp(logits)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def speculative_verify(
+        logits: jnp.ndarray, draft_tokens: List[int],
+        params: SamplingParams, rng: Optional[jax.Array],
+        draft_probs: Optional[np.ndarray] = None) -> Tuple[List[int], int]:
+    """Batched rejection sampling over one verified draft chunk.
+
+    ``logits`` [k+1, V]: target logits where row ``j`` is the next-token
+    distribution after consuming the committed prefix plus
+    ``draft_tokens[:j]`` — exactly what one ragged ``decode_chunk`` /
+    ``decode_chunk_paged`` call over ``[prev_token, d_1..d_k]`` returns.
+    ``draft_probs`` [k, V] is the proposal distribution each draft token was
+    sampled from; ``None`` declares a deterministic (argmax) draft, i.e. a
+    point mass at ``draft_tokens[j]``.
+
+    Returns ``(tokens, n_accepted)``: the accepted draft prefix followed by
+    exactly one correction/bonus token.  Greedy (``temperature <= 0``)
+    accepts the longest prefix where the target argmax equals the draft and
+    emits the argmax at the first divergence — bitwise the non-speculative
+    greedy sequence.  Stochastic uses the standard accept-with-p/q,
+    resample-from-max(p-q, 0) rule (Leviathan et al.), which preserves the
+    target distribution exactly for *any* proposal; draws come from ``rng``
+    (per-position ``fold_in``, so draws are independent of batch
+    composition and of how many positions end up accepted)."""
+    k = len(draft_tokens)
+    if params.temperature <= 0.0:
+        greedy = np.argmax(np.asarray(logits, dtype=np.float32), axis=-1)
+        out: List[int] = []
+        for j in range(k):
+            if int(greedy[j]) != int(draft_tokens[j]):
+                return out + [int(greedy[j])], j
+            out.append(int(draft_tokens[j]))
+        return out + [int(greedy[k])], k
+
+    p = target_probs(logits, params)                      # [k+1, V]
+    out = []
+    for j in range(k):
+        d = int(draft_tokens[j])
+        q_d = 1.0 if draft_probs is None else float(draft_probs[j, d])
+        u = float(jax.random.uniform(jax.random.fold_in(rng, j)))
+        if q_d > 0.0 and u < min(1.0, float(p[j, d]) / q_d):
+            out.append(d)
+            continue
+        # rejected: resample from the normalized residual max(p - q, 0)
+        q_row = np.zeros_like(p[j]) if draft_probs is None else draft_probs[j]
+        if draft_probs is None:
+            q_row = q_row.copy()
+            q_row[d] = 1.0
+        resid = np.maximum(p[j] - q_row, 0.0)
+        total = float(resid.sum())
+        row = resid / total if total > 0.0 else p[j]
+        key = jax.random.fold_in(rng, 1000 + j)
+        tok = int(jax.random.choice(key, row.shape[0], p=jnp.asarray(row)))
+        return out + [tok], j
+    # every draft accepted: bonus token from the final target row
+    key = jax.random.fold_in(rng, 1000 + k)
+    tok = int(jax.random.choice(key, p.shape[1], p=jnp.asarray(p[k])))
+    return out + [tok], k

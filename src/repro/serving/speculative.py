@@ -1,0 +1,177 @@
+"""Draft engine for speculative decoding on the paged data plane.
+
+A small-tier model proposes ``k`` greedy tokens per scheduling round for
+each decoding slot; the target engine verifies all ``k+1`` positions in one
+ragged ``decode_chunk_paged`` call and accepts a prefix (see
+``serving/sampler.speculative_verify``).  The draft runs on its own dense
+``decode_chunk`` cache, slot-aligned with the target's batch slots, so
+draft catch-up and proposal steps batch across slots exactly like the
+target's chunked data plane.
+
+Proposals are deterministic (argmax), i.e. the proposal distribution is a
+point mass — the accept rule then reduces to "accept with probability
+p(d)" and the residual resample stays unbiased, so no draft RNG and no
+draft logits ever cross to the verifier.  The draft may be *any*
+tokenizer-compatible config: an independently trained small tier, a
+distilled shadow of the target, or a layer-truncated view of the target's
+own parameters (``truncated_draft`` below — zero extra training, the
+LayerSkip-style self-speculation baseline).
+
+Per-slot state is a token ``stream`` (everything the target consumed plus
+the draft's own proposals) and a ``consumed`` watermark (how much of the
+stream is in the draft cache).  Rollback after a rejected tail is just
+truncating the stream and rewinding ``cache["pos"]`` — attention masks by
+position, so stale K/V past the watermark is unreachable.  That trick
+requires a non-windowed attention draft (ring caches lose clobbered slots
+on rewind), which ``wire_draft`` in ``serving.engine`` enforces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_CHUNK = 16     # max draft catch-up feed width per call
+
+
+class DraftEngine:
+    """Slot-aligned greedy proposer over a dense ``decode_chunk`` cache."""
+
+    def __init__(self, model, params, *, max_batch: int, max_seq: int):
+        if model.cfg.sliding_window:
+            raise ValueError("draft model must be non-windowed "
+                             "(rollback rewinds cache positions)")
+        if model.decode_chunk is None:
+            raise ValueError("draft model has no fused decode_chunk")
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.cache = model.init_cache(max_batch, max_seq)
+        self._stream: List[List[int]] = [[] for _ in range(max_batch)]
+        self._consumed = [0] * max_batch
+
+        def _step(params, toks, valid, cache):
+            logits, cache = model.decode_chunk(params, toks, valid, cache)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+        self._step = jax.jit(_step)
+
+    # ------------------------------------------------------------- protocol
+    def observe(self, slot: int, tokens: List[int]) -> None:
+        """Extend the slot's stream with tokens the target consumed."""
+        self._stream[slot].extend(int(t) for t in tokens)
+
+    def rollback(self, slot: int, n_stream: int) -> None:
+        """Truncate the slot's stream to its first ``n_stream`` tokens (the
+        part the verifier kept); rewind the cache watermark to match."""
+        del self._stream[slot][n_stream:]
+        if self._consumed[slot] > n_stream:
+            self._consumed[slot] = n_stream
+            self.cache["pos"] = self.cache["pos"].at[slot].set(n_stream)
+
+    def reset(self, slot: int) -> None:
+        self._stream[slot] = []
+        self._consumed[slot] = 0
+        self.cache["pos"] = self.cache["pos"].at[slot].set(0)
+
+    def propose(self, want: Dict[int, int]) -> Dict[int, List[int]]:
+        """Propose ``want[slot]`` greedy tokens per slot, batched.
+
+        Feeds each slot's unconsumed stream (catch-up), then extends it
+        autoregressively; every iteration is one ragged ``decode_chunk``
+        over all still-working slots.  The final proposal is appended to
+        the stream but not fed — the verifier's outcome decides (via
+        :meth:`rollback`) whether it survives."""
+        props: Dict[int, List[int]] = {s: [] for s in want}
+        for s, k in want.items():
+            if self._consumed[s] >= len(self._stream[s]):
+                # generation only happens off a fed position: the caller
+                # must observe() the next consumed token before proposing
+                raise ValueError(f"slot {s}: nothing pending to extend")
+            if len(self._stream[s]) + k - 1 > self.max_seq:
+                raise ValueError(f"slot {s}: stream would exceed draft "
+                                 f"max_seq {self.max_seq}")
+        while True:
+            feeds = {}
+            for s, k in want.items():
+                if len(props[s]) >= k:
+                    continue
+                fs = self._stream[s][self._consumed[s]:]
+                feeds[s] = fs[:_CHUNK]
+            if not feeds:
+                break
+            width = max(len(f) for f in feeds.values())
+            width = 1 << (width - 1).bit_length() if width > 1 else 1
+            toks = np.zeros((self.max_batch, width), np.int32)
+            valid = np.zeros((self.max_batch,), np.int32)
+            for s, fs in feeds.items():
+                toks[s, :len(fs)] = fs
+                valid[s] = len(fs)
+            greedy, self.cache = self._step(
+                self.params, jnp.asarray(toks), jnp.asarray(valid),
+                self.cache)
+            greedy = np.asarray(greedy)
+            for s, fs in feeds.items():
+                self._consumed[s] += len(fs)
+                if self._consumed[s] == len(self._stream[s]):
+                    d = int(greedy[s, len(fs) - 1])
+                    props[s].append(d)
+                    self._stream[s].append(d)
+        return props
+
+
+def distill_draft(draft, dparams, target, tparams, data_fn, *,
+                  steps: int = 250, lr: float = 3e-3, seed: int = 0):
+    """Distill ``draft`` toward the target's greedy decisions: minimize
+    cross-entropy between the draft's logits and ``argmax`` of the target's,
+    over contexts drawn from ``data_fn(key) -> [B, S] int32`` (use the
+    serving distribution — acceptance is an on-policy property).  This is
+    the "distilled shadow" draft: unlike :func:`truncated_draft` alone it
+    tracks what the target *does*, not just what its early layers compute,
+    which is what closes the argmax-agreement gap that acceptance pays
+    for.  Returns the trained draft params."""
+    from ..training.optimizer import AdamW, constant_schedule
+
+    tfwd = jax.jit(lambda t: _logits(target, tparams, t))
+
+    def loss(dp, toks, labels):
+        lp = jax.nn.log_softmax(
+            _logits(draft, dp, toks).astype(jnp.float32), axis=-1)
+        return -jnp.mean(jnp.take_along_axis(lp, labels[..., None], axis=-1))
+
+    opt = AdamW(learning_rate=constant_schedule(lr), weight_decay=0.0)
+    state = opt.init(dparams)
+    step = jax.jit(lambda dp, st, toks, labels: opt.update(
+        jax.grad(loss)(dp, toks, labels), st, dp))
+    key = jax.random.PRNGKey(seed)
+    for _ in range(steps):
+        key, sub = jax.random.split(key)
+        toks = data_fn(sub)
+        dparams, state = step(dparams, state, toks,
+                              jnp.argmax(tfwd(toks), axis=-1))
+    return dparams
+
+
+def _logits(model, params, toks):
+    out = model.forward(params, {"tokens": toks})
+    return out[0] if isinstance(out, tuple) else out
+
+
+def truncated_draft(model, params, n_layers: int):
+    """A layer-truncated self-draft: the target's own first ``n_layers``
+    layers plus its embedding/unembedding and final norm, as an independent
+    small-tier model (LayerSkip-style self-speculation — no training, same
+    tokenizer by construction).  Returns ``(draft_model, draft_params)``."""
+    from ..models.model import build_model
+    cfg = dataclasses.replace(model.cfg, n_layers=n_layers)
+    draft = build_model(cfg)
+    dparams = dict(params)
+    dparams["layers"] = jax.tree_util.tree_map(
+        lambda x: x[:n_layers], params["layers"])
+    return draft, dparams

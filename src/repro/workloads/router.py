@@ -121,6 +121,8 @@ def build_pool_runtime(*, replicas: int = 3, arch: str = "qwen3_0_6b",
                        prefill_chunk: int = 8, max_queue: int = 0,
                        max_retries: int = 0, retry_backoff: float = 0.05,
                        prefix_sharing: bool = True,
+                       tiers=None, tier_archs=None,
+                       draft_layers: int = 0, spec_k: int = 3,
                        decode=None, seed: int = 0) -> NalarRuntime:
     """One ``llm`` agent type backed by an ``EnginePool`` of real replicas.
 
@@ -144,6 +146,16 @@ def build_pool_runtime(*, replicas: int = 3, arch: str = "qwen3_0_6b",
     ``prefix_sharing`` — cross-session KV prefix index with copy-on-write
     pages (``False`` = the baseline that re-prefills identical system
     prompts per session).
+
+    Model-tier knobs (the spec-decode benchmark's routing row): ``tiers``
+    is a per-replica tier label list (``len == replicas``; ``None`` = an
+    untiered pool) and ``tier_archs`` maps a tier label to the smoke arch
+    its replicas load (labels absent from the map fall back to ``arch``).
+    Pair with a ``TierRoutePolicy`` and ``model_tier`` work hints (see
+    :func:`tiered_driver`) for just-in-time routing of cheap steps to
+    small-tier replicas.  ``draft_layers > 0`` arms every replica whose
+    model has more layers than that with a layer-truncated self-draft
+    (speculative decoding, ``spec_k`` proposals per round).
     """
     import jax
 
@@ -158,19 +170,33 @@ def build_pool_runtime(*, replicas: int = 3, arch: str = "qwen3_0_6b",
                       seed=seed)
     rt.router.mode = router_mode
     rt.router.kv_affinity = kv_affinity
-    cfg = get_smoke_config(arch)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(seed))
+    built = {}
+
+    def _built(a):
+        if a not in built:
+            c = get_smoke_config(a)
+            m = build_model(c)
+            built[a] = (m, m.init(jax.random.PRNGKey(seed)))
+        return built[a]
+
     engines = []
     for i in range(replicas):
         mb = max_batch
         if heterogeneous and i == replicas - 1:
             mb = max(1, max_batch // 2)
+        tier = tiers[i] if tiers else ""
+        model, params = _built((tier_archs or {}).get(tier, arch))
+        kw = {}
+        if 0 < draft_layers < model.cfg.n_layers:
+            from ..serving.speculative import truncated_draft
+            dm, dp = truncated_draft(model, params, draft_layers)
+            kw = dict(draft_model=dm, draft_params=dp, spec_k=spec_k)
         engines.append(InferenceEngine(model, params, max_batch=mb,
                                        max_seq=max_seq,
                                        prefill_chunk=prefill_chunk,
                                        max_queue=max_queue,
-                                       prefix_sharing=prefix_sharing))
+                                       prefix_sharing=prefix_sharing,
+                                       tier=tier, **kw))
     register_engine_pool(
         rt, "llm", engines,
         sampling=SamplingParams(max_new_tokens=max_new_tokens),
@@ -187,6 +213,16 @@ def routed_driver(query: str, in_tokens: int, out_tokens: int) -> str:
     agent = "code_llm" if branch == "code" else "chat_llm"
     return rt.stub(agent).generate(
         query, _hint={"in_tokens": in_tokens, "out_tokens": out_tokens}).value()
+
+
+def tiered_driver(query: str, tier: str, out_tokens: int) -> str:
+    """Pool driver that stamps the just-in-time ``model_tier`` hint: the
+    caller (an agent program that knows a classify/extract step is cheap)
+    names the tier it wants, and the Router's tier table — installed by
+    ``TierRoutePolicy`` — steers the call there, shed watermark permitting."""
+    rt = current_runtime()
+    return rt.stub("llm").generate(
+        query, _hint={"model_tier": tier, "out_tokens": out_tokens}).value()
 
 
 def run_router(sys_cfg: SystemConfig, *, rps: float = 80.0,
