@@ -19,7 +19,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from . import (failure_injection, fig9_financial, fig9_router,  # noqa: E402
                fig9_swe, fig10_control_loop, paged_decode, pool_routing,
-               sec62_policies, spec_decode, sustained_rps, table4_two_level)
+               sec62_policies, spec_decode, straggler_hedging, sustained_rps,
+               table4_two_level)
 
 BENCHES = {
     "fig9a_financial": fig9_financial,
@@ -41,6 +42,9 @@ BENCHES = {
     # speculative decoding (self-draft, fused multi-token verify) +
     # model-tier routing: tokens/step gain and goodput-per-FLOP
     "spec_decode": spec_decode,
+    # injected 10x-slow replica: hedged dispatch p99 cut vs hedging off,
+    # hedge-budget overhead, deadline expiry under tight budgets
+    "straggler_hedging": straggler_hedging,
 }
 
 
@@ -88,6 +92,9 @@ def main() -> None:
     if "spec_decode" in all_rows:
         spec_decode.write_record(all_rows["spec_decode"],
                                  "full" if args.full else "quick")
+    if "straggler_hedging" in all_rows:
+        straggler_hedging.write_record(all_rows["straggler_hedging"],
+                                       "full" if args.full else "quick")
     print(f"done,benches,{len(all_rows)}")
 
 

@@ -1,0 +1,221 @@
+"""Straggler-hedging benchmark — deadline propagation + hedged dispatch
+against an injected slow replica (fig. 9-style tail experiment).
+
+The fault: one of four replicas of an ``llm`` agent pool runs its steps
+**10x slower** (``repro.serving.chaos.slow_instance`` — the SimKernel-
+deterministic straggler injection).  Least-ETA routing avoids the
+straggler once its slowness is *observed*, but every request that lands
+on it before then is trapped for the full degraded service time — that
+is the tail the paper's hedging policy exists to cut.
+
+Three configurations, identical workload and seed:
+
+* ``hedge_off``  — slack deadlines, no HedgePolicy: trapped requests run
+  the straggler to completion; p99 is the straggler's service time.
+* ``hedge_on``   — slack deadlines + ``HedgePolicy``: once a future has
+  been running ~2x the pool's typical service time, the global
+  controller dispatches a duplicate to a below-watermark sibling;
+  first completion wins, so trapped requests resolve at roughly
+  (hedge delay + sibling service).  The policy's budget caps extra
+  dispatches at ~10%.
+* ``tight_deadline`` — no hedging, per-request deadlines shorter than
+  the straggler's service time: trapped requests fail
+  ``DeadlineExceeded`` (launch-time expiry for queued work; late
+  completion otherwise) instead of silently blowing the tail, and the
+  ``expired`` counter reaches the global controller's ``InstanceView``.
+
+Deterministic (SimKernel + fixed seed), so the claim check is exact:
+
+    PYTHONPATH=src python benchmarks/straggler_hedging.py            # table
+    PYTHONPATH=src python benchmarks/straggler_hedging.py --smoke    # CI
+    PYTHONPATH=src python -m benchmarks.run --only straggler_hedging
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import random
+import sys
+from typing import Dict, List, Optional
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import (AgentSpec, Directives, FixedLatency,  # noqa: E402
+                        HedgePolicy, NalarRuntime, emulated)
+from repro.core.policy import default_policies  # noqa: E402
+from repro.core.runtime import current_runtime  # noqa: E402
+from repro.serving.chaos import slow_instance  # noqa: E402
+
+SERVICE_S = 0.25        # healthy per-call service time
+STRAGGLER_FACTOR = 10.0  # the injected fault: one replica 10x slower
+REPLICAS = 4
+
+
+def _driver(query: str) -> str:
+    rt = current_runtime()
+    return rt.stub("llm").generate(
+        query, _hint={"est_service": SERVICE_S}).value()
+
+
+def run_straggler(hedging: bool, *, deadline_s: Optional[float] = 20.0,
+                  requests: int = 48, window: float = 6.0,
+                  seed: int = 11) -> Dict[str, float]:
+    policies = default_policies()
+    if hedging:
+        policies.policies.append(HedgePolicy(
+            factor=2.0, min_delay=2.0 * SERVICE_S, budget_frac=0.10,
+            agent_types=("llm",)))
+    rt = NalarRuntime(
+        simulate=True,
+        nodes={f"n{i}": {"GPU": 4} for i in range(REPLICAS)},
+        policy=policies, control_interval=0.25, seed=seed)
+    rt.router.mode = "least_eta"
+    rt.register_agent(AgentSpec(
+        name="llm",
+        methods={"generate": emulated(FixedLatency(SERVICE_S),
+                                      lambda q, **kw: f"gen({q})")},
+        directives=Directives(max_instances=REPLICAS, min_instances=1,
+                              resources={"GPU": 1})),
+        instances=REPLICAS)
+    victim = rt.instances_of_type("llm")[0]
+    slow_instance(rt, victim, factor=STRAGGLER_FACTOR)
+
+    rng = random.Random(seed)
+    rt.start()
+    t = 0.0
+    for i in range(requests):
+        t += rng.expovariate(requests / window)
+        rt.submit_request(_driver, f"q{i}", delay=t, deadline_s=deadline_s)
+    rt.run(max_time=window + 60.0)
+
+    summary = rt.telemetry.summary()
+    dl = rt.telemetry.deadline_outcomes()
+    view = rt.global_controller.collect_view(full=True)
+    view_expired = sum(iv.expired + iv.engine_expired
+                      for iv in view.instances.values())
+    inst_expired = sum(i.metrics.expired for i in rt._instances.values())
+    recs = list(rt.telemetry.requests.values())
+    completed = sum(1 for r in recs if r.finished_at >= 0 and not r.failed)
+    out = {
+        "bench": "straggler_hedging",
+        "system": ("hedge_on" if hedging else
+                   "hedge_off" if deadline_s is None or deadline_s > 5
+                   else "tight_deadline"),
+        "requests": len(recs),
+        "completed": completed,
+        "deadline_s": deadline_s if deadline_s is not None else -1.0,
+        "deadline_missed": dl["deadline_missed"],
+        "unfinished": dl["unfinished"],
+        "p50_s": summary.get("p50", float("nan")),
+        "p99_s": summary.get("p99", float("nan")),
+        "max_s": summary.get("max", float("nan")),
+        "hedges": rt.hedges_issued,
+        "hedge_overhead": rt.hedges_issued / max(1, len(recs)),
+        "expired": inst_expired,
+        "expired_in_view": view_expired,
+    }
+    rt.shutdown()
+    return out
+
+
+def run(quick: bool = True) -> List[Dict]:
+    n = 48 if quick else 192
+    w = 6.0 if quick else 24.0
+    return [
+        run_straggler(False, requests=n, window=w),
+        run_straggler(True, requests=n, window=w),
+        # tight deadlines under a burst: arrivals compressed 4x so queue
+        # wait alone blows the 1 s budget — exercises launch-time expiry
+        # (controller drops queued work whose deadline already passed)
+        # on top of trapped-on-straggler late completions
+        run_straggler(False, deadline_s=1.0, requests=n, window=w / 4),
+    ]
+
+
+def derive(rows: List[Dict]) -> List[str]:
+    by = {r["system"]: r for r in rows}
+    out = []
+    for mode, r in by.items():
+        out.append(f"straggler,{mode},p99_s,{r['p99_s']:.3f}")
+        out.append(f"straggler,{mode},hedge_overhead,"
+                   f"{r['hedge_overhead']:.3f}")
+        out.append(f"straggler,{mode},deadline_missed,"
+                   f"{r['deadline_missed']}")
+    on, off = by.get("hedge_on"), by.get("hedge_off")
+    tight = by.get("tight_deadline")
+    if on and off:
+        ratio = off["p99_s"] / max(1e-9, on["p99_s"])
+        out.append(f"straggler,claim,p99_cut_x,{ratio:.2f}")
+        out.append(f"straggler,claim,p99_cut_ge_2x,{int(ratio >= 2.0)}")
+        out.append(f"straggler,claim,overhead_le_10pct,"
+                   f"{int(on['hedge_overhead'] <= 0.10)}")
+        out.append(f"straggler,claim,no_misses_at_slack_deadlines,"
+                   f"{int(on['deadline_missed'] == 0 and off['deadline_missed'] == 0)}")
+    if tight:
+        out.append(f"straggler,claim,tight_deadlines_enforced,"
+                   f"{int(tight['deadline_missed'] > 0)}")
+        out.append(f"straggler,claim,expired_visible_in_view,"
+                   f"{int(tight['expired_in_view'] == tight['expired'])}")
+    return out
+
+
+def write_record(rows: List[Dict], mode: str) -> None:
+    by = {r["system"]: r for r in rows}
+    on, off = by["hedge_on"], by["hedge_off"]
+    payload = {
+        "bench": "straggler_hedging",
+        "mode": mode,
+        "straggler_factor": STRAGGLER_FACTOR,
+        "p99_off_s": round(off["p99_s"], 4),
+        "p99_on_s": round(on["p99_s"], 4),
+        "p99_cut_x": round(off["p99_s"] / max(1e-9, on["p99_s"]), 2),
+        "hedge_overhead": round(on["hedge_overhead"], 4),
+        "deadline_missed_at_slack": on["deadline_missed"]
+        + off["deadline_missed"],
+        "derived": derive(rows),
+        "rows": rows,
+    }
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_straggler.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=str)
+        f.write("\n")
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    rows = run(quick=True)
+    for row in rows:
+        print(row)
+    for line in derive(rows):
+        print(line)
+    if not smoke:
+        write_record(rows, "quick")
+        return
+    by = {r["system"]: r for r in rows}
+    on, off, tight = (by["hedge_on"], by["hedge_off"],
+                      by["tight_deadline"])
+    assert off["p99_s"] > on["p99_s"], \
+        "hedging must cut p99 under an injected straggler"
+    assert off["p99_s"] / on["p99_s"] >= 2.0, \
+        f"p99 cut {off['p99_s'] / on['p99_s']:.2f}x < 2x"
+    assert on["hedge_overhead"] <= 0.10, \
+        f"hedge overhead {on['hedge_overhead']:.3f} > 10%"
+    assert on["hedges"] >= 1, "hedging on must actually hedge"
+    assert on["deadline_missed"] == 0 and off["deadline_missed"] == 0, \
+        "slack deadlines must not be missed"
+    assert tight["deadline_missed"] > 0, \
+        "tight deadlines must be enforced against the straggler"
+    assert tight["expired"] > 0, \
+        "burst + tight deadlines must trigger launch-time expiry"
+    assert tight["expired_in_view"] == tight["expired"], \
+        "expired counters must reach the global controller's view"
+    print(f"straggler_hedging --smoke: OK "
+          f"(p99 off={off['p99_s']:.2f}s on={on['p99_s']:.2f}s, "
+          f"{on['hedges']} hedges, "
+          f"overhead={on['hedge_overhead']:.1%})")
+
+
+if __name__ == "__main__":
+    main()

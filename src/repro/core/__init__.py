@@ -17,11 +17,12 @@ from .directives import Directives
 from .executor import (AgentInstance, EmulatedMethod, EngineBackedMethod,
                        FixedLatency, LatencyModel, LLMLatency,
                        LognormalLatency)
-from .future import (Future, FutureCancelled, FutureMetadata, FutureState,
-                     FutureTable, InstanceDied)
+from .future import (DeadlineExceeded, Future, FutureCancelled,
+                     FutureMetadata, FutureState, FutureTable, InstanceDied)
 from .kv_registry import KVRegistry, Residency
 from .node_store import NodeStore, StoreCluster
-from .policy import (Action, ActionSink, ClusterView, HighPrioritySessionPolicy,
+from .policy import (Action, ActionSink, ClusterView, HedgePolicy,
+                     HighPrioritySessionPolicy,
                      HoLMitigationPolicy, InstanceView, KVAffinityPolicy,
                      LoadBalancePolicy, LPTPolicy, LPTSchedule, Policy,
                      PolicyChain, ResourceReassignmentPolicy, RetryPolicy,
@@ -36,10 +37,11 @@ from .telemetry import Telemetry
 
 __all__ = [
     "AgentInstance", "AgentSpec", "Action", "ActionSink", "ClusterView",
-    "ComponentController", "Directives", "EmulatedMethod",
+    "ComponentController", "DeadlineExceeded", "Directives", "EmulatedMethod",
     "EngineBackedMethod", "FixedLatency",
     "Future", "FutureCancelled", "FutureMetadata", "FutureState",
-    "FutureTable", "GlobalController", "HighPrioritySessionPolicy",
+    "FutureTable", "GlobalController", "HedgePolicy",
+    "HighPrioritySessionPolicy",
     "HoLMitigationPolicy", "InstanceDied",
     "InstanceView", "KVAffinityPolicy", "Kernel", "KVRegistry",
     "LatencyModel", "LLMLatency",

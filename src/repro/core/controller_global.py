@@ -200,6 +200,7 @@ class GlobalController:
                  reason=rec.reason,
                  error=repr(rec.error))
             for rec in rt.pending_escalations()]
+        view.hedge_candidates = rt.hedge_candidates()
 
     def handle_escalations(self) -> None:
         """Off-cycle retry round, nudged by ``runtime.escalate``.
@@ -320,6 +321,8 @@ class GlobalController:
                 rt.provision_instance(p["agent_type"], p["node"])
             elif a.kind == "retry_future":
                 rt.apply_retry(p["fid"], p["instance"])
+            elif a.kind == "hedge_future":
+                rt.apply_hedge(p["fid"], p["instance"])
             elif a.kind == "fail_future":
                 rt.fail_escalated(p["fid"], p.get("reason", ""))
             elif a.kind == "blacklist":

@@ -20,8 +20,8 @@ from contextlib import contextmanager
 from typing import Any, Dict, List, Optional
 
 from .executor import AgentInstance, EmulatedMethod, EngineBackedMethod
-from .future import (Future, FutureCancelled, FutureState, InstanceDied,
-                     TERMINAL_STATES, resolve_args)
+from .future import (DeadlineExceeded, Future, FutureCancelled, FutureState,
+                     InstanceDied, TERMINAL_STATES, resolve_args)
 
 
 class LocalSchedule:
@@ -158,6 +158,21 @@ class ComponentController:
 
     def _execute(self, batch: List[Future]) -> None:
         now = self.kernel.now()
+        # launch-time deadline check: work whose deadline already passed is
+        # worthless — resolve it DeadlineExceeded (terminal, never retried)
+        # instead of burning the executor on it
+        expired = [f for f in batch
+                   if 0 <= f.meta.deadline <= now]
+        if expired:
+            batch = [f for f in batch if f not in expired]
+            for f in expired:
+                self.inst.metrics.expired += 1
+                self._complete(f, error=DeadlineExceeded(
+                    f"future {f.fid} ({f.meta.agent_type}.{f.meta.method}) "
+                    f"deadline {f.meta.deadline:.3f} passed at launch "
+                    f"(now {now:.3f})"))
+            if not batch:
+                return
         for f in batch:
             f._set_state(FutureState.RUNNING)
             f._run_id += 1      # fences stale completions of older attempts
@@ -191,8 +206,20 @@ class ComponentController:
             done_any = False
             for f, run_id in runs:
                 if f.state != FutureState.RUNNING or f._run_id != run_id:
-                    continue  # preempted/migrated/retried mid-flight
+                    # preempted/migrated/retried mid-flight — or the losing
+                    # half of a hedged pair (already resolved elsewhere).
+                    # A resolved loser occupied this instance until *now*,
+                    # so only now does its running entry clear (migrated /
+                    # retried futures are live elsewhere: leave them alone)
+                    if f.available:
+                        self.detach_running(f)
+                    continue
                 done_any = True
+                if f.meta.executor != self.inst.instance_id:
+                    # hedged duplicate completing first: attribute the win
+                    # to the instance that actually produced the value
+                    self.runtime.futures.set_executor(
+                        f, self.inst.instance_id)
                 try:
                     self.runtime.enter_agent_context(f, self.inst)
                     args, kwargs = resolve_args(f.args, f.kwargs)
@@ -298,6 +325,13 @@ class ComponentController:
             self._publish_metrics()
             self._maybe_dispatch()
             return
+        if fut.state in (FutureState.READY, FutureState.FAILED):
+            # already resolved — the winning half of a hedged pair got here
+            # first; drop the loser's late result (its epoch was never opened:
+            # only leaf methods may race, and leaves journal no state)
+            self._publish_metrics()
+            self._maybe_dispatch()
+            return
         if error is not None:
             # failed attempt: its managed-state writes never happened
             # (exactly-once contract — rollback precedes any re-execution)
@@ -313,6 +347,7 @@ class ComponentController:
             self.inst.metrics.completed += 1
             fut.materialize(value, now)
         self._push_consumers(fut)
+        self.runtime.on_future_resolved(fut)
         self.runtime.telemetry.on_future_done(fut, self.inst, now)
         self._publish_metrics()
         self._maybe_dispatch()
@@ -369,8 +404,10 @@ class ComponentController:
         controller's RetryPolicy (budget exhausted / instance death).  False
         means the failure is terminal and the caller should ``fail`` it.
         """
-        if isinstance(error, FutureCancelled):
-            return False        # cancellation is never retried
+        if isinstance(error, (FutureCancelled, DeadlineExceeded)):
+            # cancellation is never retried; expired work is worthless after
+            # its deadline — neither burns retry budget
+            return False
         budget = self._retry_budget(fut)
         if budget <= 0 or not self._retryable(error):
             return False
@@ -419,6 +456,7 @@ class ComponentController:
         self.inst.metrics.cancelled += 1
         with self._metrics_batch():
             self._push_consumers(fut)
+            self.runtime.on_future_resolved(fut)
             self.runtime.telemetry.on_future_done(fut, self.inst, now)
             self._publish_metrics()
             self._maybe_dispatch()
@@ -643,6 +681,7 @@ class ComponentController:
             "failed": m.failed,
             "retries": m.retries,
             "cancelled": m.cancelled,
+            "expired": m.expired,
             "alive": self.inst.alive,
             "waiting_sessions": list(self.inst.waiting_sessions),
             "updated_at": self.kernel.now(),

@@ -45,6 +45,14 @@ class Directives:
     retryable: Any = True
     # Base backoff in (virtual) seconds; attempt k waits backoff * 2^k.
     retry_backoff: float = 0.05
+    # ---- latency-fault handling ---------------------------------------------
+    # Per-call deadline budget in (kernel) seconds: every future of this agent
+    # gets an absolute deadline of create-time + deadline_s, and child calls
+    # inherit the parent's *remaining* budget (the effective deadline is the
+    # min of the inherited one and this budget).  Expired futures fail with a
+    # non-retryable DeadlineExceeded.  A per-call ``_hint={"deadline_s": x}``
+    # overrides this budget.  None = no deadline.
+    deadline_s: Optional[float] = None
 
     def validate(self) -> None:
         if self.batchable and self.uses_managed_state:
@@ -60,6 +68,8 @@ class Directives:
             raise ValueError("max_retries must be >= 0")
         if self.retry_backoff < 0:
             raise ValueError("retry_backoff must be >= 0")
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError("deadline_s must be > 0 when set")
 
     def merged(self, **overrides) -> "Directives":
         d = Directives(**{**self.__dict__, **overrides})

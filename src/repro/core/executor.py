@@ -135,10 +135,12 @@ class EngineBackedMethod:
 class InstanceMetrics:
     completed: int = 0
     failed: int = 0
-    # failure-handling telemetry: local re-attempts started here, and
-    # futures cancelled while queued/running here
+    # failure-handling telemetry: local re-attempts started here, futures
+    # cancelled while queued/running here, and futures resolved
+    # DeadlineExceeded at launch time here
     retries: int = 0
     cancelled: int = 0
+    expired: int = 0
     busy_until: float = 0.0
     total_busy: float = 0.0
     queue_len: int = 0

@@ -54,6 +54,14 @@ class InstanceDied(RuntimeError):
     pointless on a dead executor."""
 
 
+class DeadlineExceeded(RuntimeError):
+    """The future's deadline passed before (or while) it executed.
+
+    Like cancellation this is a *terminal* resolution: the work is worthless
+    after the deadline, so the retry ladder never re-dispatches an expired
+    future and no retry budget is burned."""
+
+
 @dataclass
 class FutureMetadata:
     """Mutable coordination metadata (Table 3)."""
@@ -67,6 +75,10 @@ class FutureMetadata:
     agent_type: str = ""       # agent/tool that computes this future
     method: str = ""
     priority: float = 0.0      # higher = more urgent
+    # absolute deadline in kernel time; -1.0 = none.  Stamped at creation
+    # (min of the call's own budget and the caller's inherited remaining
+    # budget) and enforced at launch, at engine admission, and mid-decode.
+    deadline: float = -1.0
     created_at: float = 0.0
     scheduled_at: float = -1.0
     started_at: float = -1.0

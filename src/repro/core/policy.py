@@ -49,6 +49,10 @@ class InstanceView:
     # failure-handling telemetry (mirrors InstanceMetrics)
     retries: int = 0
     cancelled: int = 0
+    # deadline enforcement: futures resolved DeadlineExceeded at launch on
+    # this instance, and engine requests expired at admission/mid-decode
+    expired: int = 0
+    engine_expired: int = 0
     # data-plane backpressure (engine-backed instances only): wait-queue
     # depth, depth as a fraction of the admission bound (0.0 = unbounded or
     # empty, >= 1.0 = hard-rejecting), and rejections so far.  Policies use
@@ -101,6 +105,9 @@ class ClusterView:
     escalated: List[Dict[str, Any]] = field(default_factory=list)
     # instances the runtime will no longer route to (dead replicas)
     blacklisted: set = field(default_factory=set)
+    # in-flight leaf futures eligible for a hedged duplicate: dicts with
+    # fid/instance/agent_type/session/elapsed (consumed by HedgePolicy)
+    hedge_candidates: List[Dict[str, Any]] = field(default_factory=list)
     # --- delta-maintenance internals (incremental view collection) ---
     # raw (unpruned) waiting_sessions per instance as last read from its
     # mirror, plus the reverse index session -> instances naming it; kept so
@@ -158,6 +165,8 @@ class ClusterView:
             inflight=int(m.get("inflight", 0)),
             retries=int(m.get("retries", 0)),
             cancelled=int(m.get("cancelled", 0)),
+            expired=int(m.get("expired", 0)),
+            engine_expired=int(m.get("engine_expired", 0)),
             engine_queue=int(m.get("engine_queue", 0)),
             engine_saturation=float(m.get("engine_saturation", 0.0)),
             engine_rejects=int(m.get("engine_rejects", 0)),
@@ -290,6 +299,12 @@ class ActionSink:
     def blacklist(self, instance: str) -> None:
         """Remove ``instance`` from every routing decision from now on."""
         self.actions.append(Action("blacklist", dict(instance=instance)))
+
+    def hedge_future(self, fid: str, instance: str) -> None:
+        """Dispatch a duplicate of a straggling in-flight future on
+        ``instance`` (first completion wins; the loser is cancelled)."""
+        self.actions.append(Action("hedge_future", dict(fid=fid,
+                                                        instance=instance)))
 
 
 class Policy:
@@ -609,6 +624,81 @@ class RetryPolicy(Policy):
             if dst is None:
                 dst = min(cands, key=lambda iv: iv.eta(view.now))
             act.retry_future(rec["fid"], dst.instance_id)
+
+
+class HedgePolicy(Policy):
+    """Hedged dispatch against stragglers (latency faults as a §4.2 policy).
+
+    A replica that is merely *slow* — not dead — stalls every dependent
+    future without tripping the retry ladder.  Each round this policy scans
+    ``ClusterView.hedge_candidates`` (in-flight leaf futures) and, when one
+    has been running ``factor``× longer than the pool's typical service time
+    (the *median* of the type's per-replica EMAs, so a straggler's own
+    inflated EMA cannot mask it), emits ``hedge_future`` to launch a
+    duplicate on the least-loaded below-watermark sibling.  Run-id fencing
+    and the terminal-state completion guard make first-completion-wins safe;
+    the runtime cancels the loser.
+
+    Two brakes bound the extra work: a global budget (total hedges stay
+    under ``budget_frac`` of pool-wide completions, so steady state pays at
+    most ~``budget_frac`` extra dispatches) and the shed watermark (no
+    sibling below it → no hedge: duplicating work into a saturated pool
+    trades one tail for a worse one — composes with PR-5 admission shedding
+    rather than fighting it).
+    """
+
+    name = "hedge"
+
+    def __init__(self, factor: float = 3.0, min_delay: float = 0.05,
+                 budget_frac: float = 0.1, shed_watermark: float = 0.75,
+                 agent_types: Optional[List[str]] = None,
+                 max_per_round: int = 8) -> None:
+        self.factor = factor
+        self.min_delay = min_delay
+        self.budget_frac = budget_frac
+        self.shed_watermark = shed_watermark
+        self.agent_types = agent_types
+        self.max_per_round = max_per_round
+        self.issued = 0
+
+    def _typical_service(self, view: ClusterView, agent_type: str) -> float:
+        emas = sorted(iv.ema_service
+                      for iv in view.instances_of(agent_type)
+                      if iv.ema_service > 0)
+        if not emas:
+            return 0.0
+        return emas[len(emas) // 2]
+
+    def step(self, view: ClusterView, act: ActionSink) -> None:
+        cands = view.hedge_candidates
+        if not cands:
+            return
+        completed = sum(iv.completed for iv in view.instances.values())
+        # budget brake: never more than budget_frac of all completions (a
+        # small floor lets hedging start before completions accumulate)
+        budget = max(2.0, self.budget_frac * completed)
+        this_round = 0
+        for c in sorted(cands, key=lambda c: -c["elapsed"]):
+            if self.issued >= budget or this_round >= self.max_per_round:
+                return
+            at = c["agent_type"]
+            if self.agent_types and at not in self.agent_types:
+                continue
+            typical = self._typical_service(view, at)
+            delay = max(self.min_delay, self.factor * typical)
+            if c["elapsed"] < delay:
+                continue
+            siblings = [iv for iv in view.instances_of(at)
+                        if iv.instance_id != c["instance"]
+                        and iv.instance_id not in view.blacklisted
+                        and iv.engine_saturation < self.shed_watermark]
+            if not siblings:
+                continue        # pool saturated: shed the hedge entirely
+            dst = min(siblings, key=lambda iv: (iv.eta(view.now),
+                                                iv.instance_id))
+            act.hedge_future(c["fid"], dst.instance_id)
+            self.issued += 1
+            this_round += 1
 
 
 class HighPrioritySessionPolicy(Policy):

@@ -17,12 +17,13 @@ from .clock import Kernel, RealTimeKernel, SimKernel
 from .controller_global import GlobalController
 from .controller_local import ComponentController
 from .directives import Directives
-from .executor import AgentInstance
-from .future import Future, FutureState, FutureTable
+from .executor import AgentInstance, EmulatedMethod, EngineBackedMethod
+from .future import DeadlineExceeded, Future, FutureState, FutureTable
 from .kv_registry import KVRegistry
 from .node_store import StoreCluster
 from .policy import Policy, default_policies
-from .session import SessionRegistry, clear_context, get_context, set_context
+from .session import (SessionRegistry, clear_context, get_context,
+                      get_current_deadline, set_context, set_current_deadline)
 from .state import SessionStateStore
 from .stubs import AgentSpec, Stub
 from .telemetry import Telemetry
@@ -264,6 +265,14 @@ class NalarRuntime:
         self._esc_lock = threading.Lock()
         self.escalations: Dict[str, EscalationRecord] = {}
         self.blacklist: set = set()
+        # hedged dispatch (latency-fault handling): fid -> (src, dst) for
+        # futures currently racing a duplicate attempt.  First completion
+        # wins (terminal-state guard in complete_async); the loser is
+        # cancelled/detached by on_future_resolved.
+        self._hedge_lock = threading.Lock()
+        self._hedges: Dict[str, tuple] = {}
+        self._hedge_claimed: set = set()
+        self.hedges_issued = 0
         self._shutdown_hooks: List[Callable[[], None]] = []
         self.global_controller = GlobalController(
             self, policy or default_policies(), interval=control_interval)
@@ -573,6 +582,121 @@ class NalarRuntime:
         """Never route to ``instance_id`` again (dead/poisoned replica)."""
         self.blacklist.add(instance_id)
 
+    # ------------------------------------------------------- hedged dispatch
+    def hedge_candidates(self) -> List[Dict[str, Any]]:
+        """In-flight *leaf* futures eligible for a hedged duplicate: running
+        on a live instance, not already hedged.  The global controller feeds
+        this into ``ClusterView.hedge_candidates`` each round; HedgePolicy
+        compares ``elapsed`` against the pool's typical service time."""
+        now = self.kernel.now()
+        with self._hedge_lock:
+            hedged = set(self._hedges)
+        out: List[Dict[str, Any]] = []
+        for iid, ctrl in list(self._controllers.items()):
+            inst = ctrl.inst
+            if not inst.alive:
+                continue
+            for f in list(inst.running):
+                if (f.available or f.fid in hedged
+                        or f.state != FutureState.RUNNING):
+                    continue
+                method = inst.methods.get(f.meta.method)
+                if not isinstance(method, (EngineBackedMethod,
+                                           EmulatedMethod)):
+                    continue    # composite bodies cannot race (shared epoch)
+                out.append(dict(fid=f.fid, instance=iid,
+                                agent_type=inst.agent_type,
+                                session=f.meta.session_id,
+                                elapsed=now - f.meta.started_at))
+        return out
+
+    def apply_hedge(self, fid: str, dst_instance: str) -> bool:
+        """Enact a HedgePolicy ``hedge_future`` decision: launch a duplicate
+        of the straggling in-flight future on ``dst_instance``.
+
+        The duplicate shares the original's run id — first completion wins
+        through ``complete_async``'s terminal-state guard, and the loser's
+        late result is dropped.  Only leaf methods (engine-backed or
+        emulated) may race: a composite body would double-open the attempt's
+        state epoch."""
+        fut = self.futures.get(fid)
+        if fut is None or fut.state != FutureState.RUNNING:
+            return False
+        src = fut.meta.executor
+        if src == dst_instance:
+            return False
+        ctrl = self._controllers.get(dst_instance)
+        if (ctrl is None or not ctrl.inst.alive
+                or dst_instance in self.blacklist):
+            return False
+        method = ctrl.inst.methods.get(fut.meta.method)
+        if not isinstance(method, (EngineBackedMethod, EmulatedMethod)):
+            return False
+        with self._hedge_lock:
+            if fid in self._hedges:
+                return False
+            self._hedges[fid] = (src, dst_instance)
+            self.hedges_issued += 1
+        with ctrl._lock:
+            ctrl.inst.running.append(fut)
+        try:
+            if isinstance(method, EngineBackedMethod):
+                method.launch([fut], ctrl)
+            else:
+                ctrl._execute_emulated([fut], method)
+        except BaseException:  # noqa: BLE001 — duplicate submit failed
+            with self._hedge_lock:
+                self._hedges.pop(fid, None)
+            ctrl.detach_running(fut)
+            return False
+        ctrl._publish_metrics()
+        return True
+
+    def on_future_resolved(self, fut: Future) -> None:
+        """Resolution hook: if ``fut`` was hedged, cancel/clean up the losing
+        duplicate — detach it from both instances' running sets and abort the
+        engine-side request so its slot and KV pages free up."""
+        if not self._hedges:
+            return
+        with self._hedge_lock:
+            rec = self._hedges.pop(fut.fid, None)
+            self._hedge_claimed.discard(fut.fid)
+        if rec is None:
+            return
+        src_iid, dst_iid = rec
+
+        # deferred: we are inside a controller's completion path — touching
+        # the sibling controller's bookkeeping here would re-enter its lock
+        def cleanup() -> None:
+            backend = self.engine_backends.get(fut.meta.agent_type)
+            if backend is None:
+                # emulated loser: its own completion event detaches it when
+                # the service time elapses — the instance genuinely was busy
+                # with the duplicate until then, so don't free it early
+                return
+            for iid in (src_iid, dst_iid):
+                ctrl = self._controllers.get(iid)
+                if ctrl is not None:
+                    ctrl.detach_running(fut)
+                if hasattr(backend, "cancel_inflight"):
+                    backend.cancel_inflight(fut.fid, iid)
+
+        self.kernel.schedule(0.0, cleanup, tag=f"hedge-cleanup:{fut.fid}")
+
+    def claim_hedge_completion(self, fid: str) -> bool:
+        """First-completion fence for hedged engine calls.  The winning
+        bridge claims before extending the transcript / resolving the
+        future; the simultaneous loser sees False and must stand down
+        (drop its result entirely).  Unhedged futures always claim —
+        the normal single-completion path is unaffected."""
+        with self._hedge_lock:
+            if fid not in self._hedges:
+                return True
+            if fid in self._hedge_claimed:
+                return False
+            self._hedge_claimed.add(fid)
+            return True
+
     def cancel_future(self, fut: Future, reason: str = "cancelled") -> bool:
         """Cancel a future wherever it currently is — parked, queued, or in
         flight.  Queued work is dequeued; in-flight work keeps running but
@@ -615,7 +739,7 @@ class NalarRuntime:
             spec.directives.validate()
 
     def enter_agent_context(self, fut: Future, inst: AgentInstance) -> None:
-        prev = get_context()
+        prev = get_context() + (get_current_deadline(),)
         stack = getattr(self._agent_ctx, "stack", None)
         if stack is None:
             stack = []
@@ -623,6 +747,9 @@ class NalarRuntime:
         stack.append(prev)
         set_context(fut.meta.session_id, fut.meta.request_id,
                     inst.instance_id)
+        # child calls made by this execution inherit the running future's
+        # remaining deadline budget (stubs read it and take the min)
+        set_current_deadline(fut.meta.deadline)
         # open the attempt's state epoch: managed-state writes made by this
         # execution are journaled under (fid, attempt) so a failed attempt
         # rolls back before any retry (exactly-once across retries)
@@ -632,28 +759,39 @@ class NalarRuntime:
         self.state_store.end_epoch_binding()
         stack = getattr(self._agent_ctx, "stack", None)
         if stack:
-            sid, rid, caller = stack.pop()
+            sid, rid, caller, deadline = stack.pop()
             set_context(sid, rid, caller)
+            set_current_deadline(deadline)
         else:
             clear_context()
 
     # --------------------------------------------------------------- drivers
     def submit_request(self, driver_fn: Callable[..., Any], *args,
                        session: Optional[str] = None, priority: float = 0.0,
-                       delay: float = 0.0,
+                       delay: float = 0.0, deadline_s: Optional[float] = None,
                        on_done: Optional[Callable[[Any, Optional[BaseException]], None]] = None,
                        **kwargs) -> str:
-        """Run a workflow driver as a request (optionally after ``delay``)."""
+        """Run a workflow driver as a request (optionally after ``delay``).
+
+        ``deadline_s`` gives the whole request a budget: every future created
+        by the driver (and transitively by agents it calls) inherits the
+        remaining budget as an absolute deadline."""
         if session is None:
             session = self.sessions.new_session(self.kernel.now(),
                                                 priority).session_id
         rid = self.sessions.new_request(session)
 
         def launch() -> None:
-            self.telemetry.start_request(rid, session, self.kernel.now())
+            self.telemetry.start_request(
+                rid, session, self.kernel.now(),
+                deadline_s=deadline_s if deadline_s is not None else -1.0)
 
             def body() -> None:
                 set_context(session, rid, f"driver:{rid}")
+                abs_deadline = -1.0
+                if deadline_s is not None:
+                    abs_deadline = self.kernel.now() + deadline_s
+                    set_current_deadline(abs_deadline)
                 err: Optional[BaseException] = None
                 out: Any = None
                 try:
@@ -662,8 +800,13 @@ class NalarRuntime:
                     err = e
                 finally:
                     clear_context()
+                    # the real deadline outcome: a stub call expired, or
+                    # the driver finished after its budget ran out
+                    missed = isinstance(err, DeadlineExceeded) or (
+                        0 <= abs_deadline < self.kernel.now())
                     self.telemetry.end_request(rid, self.kernel.now(),
-                                               failed=err is not None)
+                                               failed=err is not None,
+                                               deadline_exceeded=missed)
                 if on_done is not None:
                     on_done(out, err)
 

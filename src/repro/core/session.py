@@ -99,6 +99,22 @@ def get_context() -> tuple:
 
 
 def clear_context() -> None:
-    for a in ("session_id", "request_id", "caller"):
+    for a in ("session_id", "request_id", "caller", "deadline"):
         if hasattr(_ctx, a):
             delattr(_ctx, a)
+
+
+# The current code's absolute deadline (kernel time), or -1.0 when none.
+# Stubs read it so child calls inherit the parent's *remaining* budget; the
+# runtime sets it when entering an agent context (from the running future's
+# metadata) and drivers seed it via ``submit_request(deadline_s=...)``.
+def set_current_deadline(deadline: float) -> None:
+    if deadline is None or deadline < 0:
+        if hasattr(_ctx, "deadline"):
+            delattr(_ctx, "deadline")
+    else:
+        _ctx.deadline = deadline
+
+
+def get_current_deadline() -> float:
+    return getattr(_ctx, "deadline", -1.0)

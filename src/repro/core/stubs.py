@@ -14,8 +14,8 @@ Two entry points:
   (PyYAML-free; the declarations are flat).
 
 Stub calls strip an optional ``_hint`` kwarg ({"in_tokens", "out_tokens",
-"est_service", "graph_depth", "retry", "max_retries", ...}) used by cost
-models and scheduling policies — never seen by user code.  Two hints feed
+"est_service", "graph_depth", "retry", "max_retries", "deadline_s", ...})
+used by cost models and scheduling policies — never seen by user code.  Two hints feed
 the runtime's retry ladder: ``"max_retries"`` is the explicit per-call
 budget (overrides the agent directive; 0 disables retries for this call),
 and a *truthy* ``"retry"`` doubles as the budget for convenience —
@@ -31,7 +31,7 @@ from typing import Any, Callable, Dict, List, Optional
 from .directives import Directives
 from .executor import EmulatedMethod
 from .future import Future, FutureMetadata, extract_dependencies
-from .session import get_context
+from .session import get_context, get_current_deadline
 
 
 @dataclass
@@ -133,6 +133,15 @@ class Stub:
             now = rt.kernel.now()
             sess = rt.sessions.get(sid)
             prio = sess.priority_for(self._spec.name) if sess else 0.0
+            # effective deadline = min(own budget, caller's remaining budget).
+            # The inherited deadline is already absolute (the parent's), so a
+            # child can never outlive its parent's budget; a tighter per-call
+            # ``deadline_s`` (hint or directive) shrinks it further.
+            budget = hint.get("deadline_s", self._spec.directives.deadline_s)
+            deadline = get_current_deadline()
+            if budget is not None and budget >= 0:
+                own = now + float(budget)
+                deadline = own if deadline < 0 else min(deadline, own)
             meta = FutureMetadata(
                 dependencies=extract_dependencies(args, kwargs),
                 creator=caller,
@@ -141,6 +150,7 @@ class Stub:
                 agent_type=self._spec.name,
                 method=method,
                 priority=prio,
+                deadline=deadline,
                 created_at=now,
                 work_hint=dict(hint),
             )

@@ -48,6 +48,12 @@ class RequestRecord:
     submitted_at: float
     finished_at: float = -1.0
     failed: bool = False
+    # end-to-end budget the request was submitted with (-1 = none) and the
+    # real outcome: the driver failed DeadlineExceeded, or completed after
+    # the budget ran out.  Benchmarks report this instead of inferring
+    # "unfinished == timed out".
+    deadline_s: float = -1.0
+    deadline_exceeded: bool = False
     stages: List[FutureRecord] = field(default_factory=list)
 
     @property
@@ -92,16 +98,34 @@ class Telemetry:
         self.control_rounds: "deque[ControlRoundRecord]" = deque(maxlen=4096)
         self.futures_done = 0
 
-    def start_request(self, request_id: str, session_id: str, now: float) -> None:
+    def start_request(self, request_id: str, session_id: str, now: float,
+                      deadline_s: float = -1.0) -> None:
         with self._lock:
-            self.requests[request_id] = RequestRecord(request_id, session_id, now)
+            self.requests[request_id] = RequestRecord(
+                request_id, session_id, now, deadline_s=deadline_s)
 
-    def end_request(self, request_id: str, now: float, failed: bool = False) -> None:
+    def end_request(self, request_id: str, now: float, failed: bool = False,
+                    deadline_exceeded: bool = False) -> None:
         with self._lock:
             r = self.requests.get(request_id)
             if r is not None:
                 r.finished_at = now
                 r.failed = failed
+                r.deadline_exceeded = deadline_exceeded
+
+    def deadline_outcomes(self) -> Dict[str, int]:
+        """Real per-request deadline accounting: requests submitted with a
+        budget, how many missed it (failed DeadlineExceeded or finished
+        late), and how many never finished at all."""
+        with self._lock:
+            recs = list(self.requests.values())
+        with_deadline = [r for r in recs if r.deadline_s >= 0]
+        return {
+            "requests": len(recs),
+            "with_deadline": len(with_deadline),
+            "deadline_missed": sum(r.deadline_exceeded for r in recs),
+            "unfinished": sum(r.finished_at < 0 for r in recs),
+        }
 
     def on_future_done(self, fut, inst, now: float) -> None:
         rec = FutureRecord(

@@ -20,6 +20,7 @@ import heapq
 import itertools
 import threading
 from dataclasses import dataclass, field
+from time import monotonic as _monotonic
 from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
@@ -38,6 +39,17 @@ class EngineOverloaded(RuntimeError):
     """
 
 
+class RequestExpired(RuntimeError):
+    """Admission rejected: the request's deadline already passed.
+
+    Distinct from :class:`EngineOverloaded` so callers can tell backpressure
+    from deadline misses.  Retryable at the engine layer (another replica
+    might still race the deadline after clock skew), but the NALAR bridge
+    converts it into the runtime's non-retryable ``DeadlineExceeded`` —
+    expired agent work is worthless and must not burn retry budget.
+    """
+
+
 @dataclass
 class Request:
     request_id: str
@@ -52,9 +64,15 @@ class Request:
     # by the NALAR engine bridge when ``prompt`` is only the continuation
     # suffix of a longer transcript.
     fallback_prompt: Optional[np.ndarray] = None
+    # absolute wall-clock (time.monotonic) deadline; -1.0 = none.  Enforced
+    # at admission (push + pop) and mid-decode by the step loop, which
+    # preempts the slot and reclaims its KV pages.
+    deadline_wall: float = -1.0
     # filled during execution
     generated: List[int] = field(default_factory=list)
     finished: bool = False
+    # the request was preempted/rejected because its deadline passed
+    expired: bool = False
     # wall-clock (time.monotonic) stamps taken by the engine itself, so TTFT
     # is measured on one clock regardless of which kernel created the request
     submitted_wall: float = -1.0
@@ -69,7 +87,8 @@ class Request:
     @staticmethod
     def make(prompt, session_id: str = "", sampling: Optional[SamplingParams] = None,
              priority: float = 0.0, now: float = 0.0,
-             fallback_prompt=None, **extras) -> "Request":
+             fallback_prompt=None, deadline_wall: float = -1.0,
+             **extras) -> "Request":
         return Request(
             request_id=f"req{next(_req_ids)}",
             session_id=session_id or f"sess-req{next(_req_ids)}",
@@ -80,6 +99,7 @@ class Request:
             submitted_at=now,
             fallback_prompt=(None if fallback_prompt is None
                              else np.asarray(fallback_prompt, np.int32)),
+            deadline_wall=deadline_wall,
         )
 
 
@@ -106,11 +126,20 @@ class WaitQueue:
         self._seq = itertools.count()          # FIFO tie-break, stable heap
         self.maxsize = int(maxsize)
         self.rejected = 0
+        self.expired_rejects = 0
+        # wall clock for deadline checks; swappable for deterministic tests
+        self.clock: Callable[[], float] = _monotonic
         self.order_key: Callable[[Request], Any] = (
             lambda r: (-r.priority, r.submitted_at))
 
     def push(self, req: Request) -> None:
         with self._lock:
+            if 0 <= req.deadline_wall <= self.clock():
+                self.expired_rejects += 1
+                req.expired = True
+                raise RequestExpired(
+                    f"request {req.request_id} deadline passed before "
+                    f"admission")
             if self.maxsize and len(self._heap) >= self.maxsize:
                 self.rejected += 1
                 raise EngineOverloaded(
@@ -124,6 +153,19 @@ class WaitQueue:
             if not self._heap:
                 return None
             return heapq.heappop(self._heap)[2]
+
+    def remove(self, request_id: str) -> Optional[Request]:
+        """Withdraw one waiting request by id (hedge-loser cancellation).
+        O(n) scan + heapify — cancellation is rare by construction (hedge
+        budget caps it), so simplicity beats an index here."""
+        with self._lock:
+            for idx, entry in enumerate(self._heap):
+                if entry[2].request_id == request_id:
+                    self._heap[idx] = self._heap[-1]
+                    self._heap.pop()
+                    heapq.heapify(self._heap)
+                    return entry[2]
+        return None
 
     def clear(self) -> int:
         with self._lock:

@@ -26,6 +26,7 @@ here, keeping the core runtime importable without JAX.
 
 from __future__ import annotations
 
+import logging
 import threading
 import time
 import zlib
@@ -37,12 +38,15 @@ import numpy as np
 
 from ..core.directives import Directives
 from ..core.executor import EngineBackedMethod
-from ..core.future import Future, InstanceDied, resolve_args
+from ..core.future import (DeadlineExceeded, Future, InstanceDied,
+                           resolve_args)
 from ..core.state import SessionTranscript
 from ..core.stubs import AgentSpec
-from .batching import Request
+from .batching import Request, RequestExpired
 from .engine import InferenceEngine
 from .sampler import SamplingParams
+
+log = logging.getLogger(__name__)
 
 
 def hash_tokenize(text: Any, vocab_size: int) -> List[int]:
@@ -95,6 +99,7 @@ class EngineBridge:
         self._cv = threading.Condition()
         self._pending = 0
         self._stop = False
+        self._draining = False
         # request_id -> (future, controller): for failure propagation when
         # the pump loop itself dies (engine bug, OOM, ...)
         self._inflight: Dict[str, Tuple[Future, Any]] = {}
@@ -111,7 +116,7 @@ class EngineBridge:
             target=self._pump, daemon=True,
             name=f"engine-pump:{engine.instance_id}")
         self._thread.start()
-        runtime.add_shutdown_hook(self.stop)
+        runtime.add_shutdown_hook(self.drain)
 
     # ------------------------------------------------------------- lifecycle
     def attach(self, instance_id: str, node_id: str) -> None:
@@ -126,6 +131,33 @@ class EngineBridge:
             self._stop = True
             self._cv.notify_all()
         self._thread.join(timeout=5.0)
+        if self._thread.is_alive():
+            # never silently abandon a wedged pump: the daemon thread will
+            # die with the process, but the operator must know it leaked
+            log.warning("engine pump %s did not stop within 5s; "
+                        "abandoning daemon thread", self.engine.instance_id)
+
+    def drain(self, timeout: float = 5.0) -> int:
+        """Graceful shutdown: stop admitting new futures, keep pumping until
+        in-flight work completes (or ``timeout`` passes), then fail-fast
+        whatever remains through the normal failure path instead of leaking
+        it, and finally stop the pump thread.  Returns the number of
+        requests failed-fast (0 = clean drain)."""
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            self._draining = True
+            while self._pending > 0 and time.monotonic() < deadline:
+                self._cv.wait(timeout=0.1)
+            leftover = self._pending
+        failed = 0
+        if leftover:
+            log.warning("engine bridge %s drained with %d requests still "
+                        "in flight; failing them fast",
+                        self.engine.instance_id, leftover)
+            failed = self.fail_inflight(InstanceDied(
+                f"engine {self.engine.instance_id} shut down mid-flight"))
+        self.stop()
+        return failed
 
     def fail_inflight(self, error: BaseException) -> int:
         """Fail every in-flight and session-queued future with ``error`` and
@@ -164,6 +196,31 @@ class EngineBridge:
             except Exception:  # noqa: BLE001 — best-effort re-home
                 pass
         return len(dead)
+
+    def cancel_inflight(self, fid: str, instance_id: str = "") -> bool:
+        """Withdraw one in-flight future's engine request (hedge-loser
+        cancellation): the winning replica already resolved the future, so
+        this engine's copy is pure waste — pull it from the wait queue or
+        vacate its batch slot (reclaiming the slot and its KV pages), drop
+        the completion callback, and release the session's ordering slot.
+        Returns True if a request was actually withdrawn."""
+        if instance_id and instance_id != self.engine.instance_id:
+            return False
+        with self._cv:
+            rid = cancel_sid = None
+            for r, (f, _c) in self._inflight.items():
+                if f.fid == fid:
+                    rid, cancel_sid = r, f.meta.session_id
+                    break
+            if rid is None:
+                return False
+            self._inflight.pop(rid, None)
+            self._pending -= 1
+            self._cv.notify_all()
+        self.engine.cancel_request(rid)
+        if cancel_sid:
+            self._advance_session(cancel_sid)
+        return True
 
     def on_replica_killed(self, instance_id: str) -> int:
         """Fault-injection hook (``runtime.kill_instance(..., hard=True)``):
@@ -287,6 +344,11 @@ class EngineBridge:
         # from when the bridge hands the request over, even if the engine
         # is mid-step when the submission lands
         req.submitted_wall = time.monotonic()
+        if fut.meta.deadline >= 0:
+            # kernel time -> engine wall clock: same absolute instant, so a
+            # hedged duplicate on a sibling engine expires simultaneously
+            req.deadline_wall = (time.monotonic()
+                                 + (fut.meta.deadline - self.rt.kernel.now()))
         # run-id fence: if the replica dies and the future is retried on a
         # sibling, a late completion from this engine must not resolve it
         run_id = fut._run_id
@@ -296,7 +358,29 @@ class EngineBridge:
                 self._pending -= 1
                 self._inflight.pop(r.request_id, None)
                 self._cv.notify_all()
+            if not self.rt.claim_hedge_completion(fut.fid):
+                # hedge loser finishing in the winner's resolution window:
+                # the winning replica owns the transcript and the future;
+                # just release this bridge's per-session slot
+                if sid:
+                    self._advance_session(sid)
+                return
+            if fut.meta.executor != self.engine.instance_id:
+                # hedged duplicate completing first: attribute the win to
+                # the replica that actually produced the value
+                self.rt.futures.set_executor(fut, self.engine.instance_id)
             value = err = None
+            if r.expired:
+                # the engine preempted (or rejected) this request because
+                # its deadline passed: non-retryable by design, and the
+                # partial tokens never reach the transcript
+                err = DeadlineExceeded(
+                    f"request {r.request_id} exceeded its deadline on "
+                    f"{self.engine.instance_id}")
+                if sid:
+                    self._advance_session(sid)
+                controller.complete_async(fut, error=err, expect_run=run_id)
+                return
             try:
                 # decode FIRST: if make_value raises, the attempt failed and
                 # its tokens must never reach the transcript — a retry would
@@ -333,7 +417,7 @@ class EngineBridge:
                 controller.complete_async(fut, error=e, expect_run=run_id)
 
         with self._cv:
-            if self._stop:
+            if self._stop or self._draining:
                 raise RuntimeError("engine bridge is stopped")
             self._pending += 1
             self._inflight[req.request_id] = (fut, controller)
@@ -343,6 +427,14 @@ class EngineBridge:
             # ladder — a *retryable* failure (backoff locally, escalate to
             # the RetryPolicy for a reroute) instead of unbounded queueing.
             self.engine.submit_async(req, on_done)
+        except RequestExpired as e:
+            with self._cv:
+                self._pending -= 1
+                self._inflight.pop(req.request_id, None)
+            # expired work is worthless: convert the engine's retryable
+            # admission error into the runtime's terminal DeadlineExceeded
+            # so the retry ladder never re-arms it
+            raise DeadlineExceeded(str(e)) from e
         except BaseException:
             with self._cv:
                 self._pending -= 1
@@ -393,6 +485,7 @@ class EngineBridge:
             "engine_shared_prefix_hits": e.metrics.shared_prefix_hits,
             "engine_shared_prefix_tokens": e.metrics.shared_prefix_tokens,
             "engine_tier": getattr(e, "tier", ""),
+            "engine_expired": e.metrics.expired,
             "engine_spec_acceptance": e.metrics.spec_acceptance,
             "engine_decode_tokens_per_step":
                 e.metrics.decode_tokens_per_step,

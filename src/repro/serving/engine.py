@@ -46,7 +46,8 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..models.model import Model
-from .batching import EngineOverloaded, Request, WaitQueue, bucket_len
+from .batching import (EngineOverloaded, Request, RequestExpired, WaitQueue,
+                       bucket_len)
 from .kv_cache import PagedKVPool, StateCachePool
 from .sampler import SamplingParams, sample, speculative_verify
 
@@ -89,6 +90,9 @@ class EngineMetrics:
     spec_rounds: int = 0
     spec_proposed: int = 0
     spec_accepted: int = 0
+    # requests dropped because their deadline passed: rejected at admission
+    # (push/pop) or preempted mid-decode with slot + KV pages reclaimed
+    expired: int = 0
 
     @property
     def spec_acceptance(self) -> float:
@@ -165,6 +169,9 @@ class InferenceEngine:
         self.instance_id = instance_id
         self.kv_registry = kv_registry
         self.metrics = EngineMetrics()
+        # optional fault injector (repro.serving.chaos.ChaosConfig-driven);
+        # when set, step() calls chaos.before_step(engine) outside the lock
+        self.chaos: Optional[Any] = None
         # prompt tokens consumed per slot per step while prefilling;
         # 0 = legacy monolithic bucket prefill at admission
         self.prefill_chunk = int(prefill_chunk)
@@ -347,13 +354,17 @@ class InferenceEngine:
     # ----------------------------------------------------------- submission
     def submit(self, req: Request) -> str:
         """Queue ``req``.  Raises :class:`EngineOverloaded` when the bounded
-        wait queue is at capacity (backpressure — callers retry or shed)."""
+        wait queue is at capacity (backpressure — callers retry or shed) and
+        :class:`RequestExpired` when the request's deadline already passed."""
         if req.submitted_wall < 0:
             req.submitted_wall = time.monotonic()
         try:
             self.queue.push(req)
         except EngineOverloaded:
             self.metrics.admission_rejects += 1
+            raise
+        except RequestExpired:
+            self.metrics.expired += 1
             raise
         return req.request_id
 
@@ -576,6 +587,19 @@ class InferenceEngine:
             if req is None:
                 return
             now = time.monotonic()
+            while 0 <= req.deadline_wall <= now:
+                # expired while waiting: never occupy a slot.  Finished
+                # with expired=True so the bridge callback still fires and
+                # can resolve the future DeadlineExceeded.
+                req.expired = True
+                req.finished = True
+                req.finished_at = now
+                self.metrics.expired += 1
+                with self._done_lock:
+                    self._finished.append(req)
+                req = self.queue.pop_next()
+                if req is None:
+                    return
             if (self._paged and req.session_id
                     and req.session_id in self._slot_sid.values()):
                 # the session's pages are already the live in-place write
@@ -923,11 +947,27 @@ class InferenceEngine:
         to ``prefill_chunk`` prompt tokens via masked sub-steps against the
         same compiled decode fn.  Returns #active sequences.
         """
+        if self.chaos is not None:
+            self.chaos.before_step(self)
         with self._lock:
             self._admit()
+            now = time.monotonic()
+            expired = [i for i in range(self.max_batch)
+                       if self._active_mask[i] and self.slots[i] is not None
+                       and 0 <= self.slots[i].deadline_wall <= now]
+            for i in expired:
+                # mid-decode preemption: the deadline passed, so further
+                # tokens are worthless.  _finish_slot vacates through the
+                # normal COW-safe path (unprotect + page release), the slot
+                # is free for the next admission this very step.
+                self.slots[i].expired = True
+                self._finish_slot(i, now)
+            if expired:
+                self._admit()
             active = [i for i in range(self.max_batch) if self._active_mask[i]]
             if not active:
                 self.metrics.queued = len(self.queue)
+                self.metrics.active = 0
                 return 0
             pending = self._pending_prompt
             prefilling = any(pending.get(i) for i in active)
@@ -1307,6 +1347,20 @@ class InferenceEngine:
         req = self.slots[slot]
         req.finished = True
         req.finished_at = now
+        if req.expired:
+            # deadline preemption: the partial generation is worthless and
+            # its tokens never reach the transcript, so don't leave a warm
+            # session cache behind (a later session-affine resume would
+            # continue from divergent history) — reclaim slot and pages
+            self.metrics.expired += 1
+            self._vacate_slot(slot)
+            if req.session_id:
+                self.pool.release(req.session_id)
+            with self._done_lock:
+                self._finished.append(req)
+                if len(self._finished) > self.finished_cap:
+                    self._trim_finished()
+            return
         self.metrics.completed += 1
         # persist session cache for prefix reuse on follow-ups
         if self._paged:
@@ -1372,6 +1426,35 @@ class InferenceEngine:
             kept = kept[overflow:]
         self._finished = kept
 
+    def cancel_request(self, request_id: str) -> bool:
+        """Abandon one request (hedge loser / caller gone): remove it from
+        the wait queue, or vacate its batch slot mid-decode — the slot and
+        its protected KV pages are reclaimed through the normal vacate
+        path.  The request is NOT delivered to ``_finished`` and its
+        completion callback is dropped: the caller already resolved the
+        future elsewhere.  Returns True if the request was found."""
+        with self._lock:
+            with self._done_lock:
+                self._callbacks.pop(request_id, None)
+            req = self.queue.remove(request_id)
+            if req is not None:
+                self.metrics.queued = len(self.queue)
+                return True
+            for slot in range(self.max_batch):
+                r = self.slots[slot]
+                if r is not None and r.request_id == request_id:
+                    self._vacate_slot(slot)
+                    if r.session_id:
+                        # the abandoned decode already extended this
+                        # session's cache with tokens that will never reach
+                        # the transcript (the winner's did) — a later
+                        # session-affine resume here would continue from
+                        # divergent history, so drop the cache outright
+                        self.pool.release(r.session_id)
+                    self.metrics.active = int(self._active_mask.sum())
+                    return True
+        return False
+
     def abort_all(self) -> int:
         """Clear the wait queue and vacate every slot (replica death /
         bridge ``fail_inflight``): results will never be delivered, and a
@@ -1418,6 +1501,8 @@ class InferenceEngine:
                 "queue_limit": self.max_queue,
                 "queue_saturation": self.saturation(),
                 "admission_rejects": self.queue.rejected,
+                "expired": m.expired,
+                "expired_rejects": self.queue.expired_rejects,
                 "prefill_chunk": self.prefill_chunk,
                 "paged_decode": self._paged,
                 "paged_kernel": self._paged and self._paged_kernel,

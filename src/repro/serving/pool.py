@@ -373,6 +373,13 @@ class EnginePool:
         dst_ctrl.submit(fut)
         return 1
 
+    def cancel_inflight(self, fid: str, instance_id: str = "") -> bool:
+        """Hedge-loser cancellation resolved to the owning replica bridge."""
+        bridge = self.bridge_of(instance_id)
+        if bridge is not None:
+            return bridge.cancel_inflight(fid, instance_id)
+        return False
+
     # ------------------------------------------------------------- telemetry
     def saturation_of(self, instance_id: str) -> float:
         """Wait-queue saturation of one replica (Router shed hook)."""

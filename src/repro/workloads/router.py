@@ -241,13 +241,21 @@ def run_router(sys_cfg: SystemConfig, *, rps: float = 80.0,
         q = f"{'code' if is_code else 'chat'} query {i}"
         in_tok = rng.randint(400, 1600)
         out_tok = rng.randint(150, 450) if is_code else rng.randint(40, 160)
-        rt.submit_request(routed_driver, q, in_tok, out_tok, delay=t)
+        rt.submit_request(routed_driver, q, in_tok, out_tok, delay=t,
+                          deadline_s=timeout_s)
         i += 1
     rt.run(max_time=duration + timeout_s)
     out = rt.telemetry.summary()
-    finished = [r for r in rt.telemetry.requests.values() if r.finished_at >= 0]
-    out["timeouts"] = len(rt.telemetry.requests) - len(finished)
-    out["timeout_rate"] = out["timeouts"] / max(len(rt.telemetry.requests), 1)
+    # real per-request deadline outcomes from telemetry (each request was
+    # submitted with deadline_s=timeout_s), not "unfinished == timed out":
+    # a request that failed DeadlineExceeded or completed past its budget
+    # is a timeout even though it finished, and an unfinished request at
+    # the horizon is counted separately as such.
+    dl = rt.telemetry.deadline_outcomes()
+    out["timeouts"] = dl["deadline_missed"] + dl["unfinished"]
+    out["deadline_missed"] = dl["deadline_missed"]
+    out["unfinished"] = dl["unfinished"]
+    out["timeout_rate"] = out["timeouts"] / max(dl["requests"], 1)
     out["system"] = sys_cfg.name
     out["rps"] = rps
     return out

@@ -24,6 +24,7 @@ from typing import Dict
 from ..core import (AgentSpec, Directives, FixedLatency, LLMLatency,
                     LognormalLatency, NalarRuntime, emulated)
 from ..core.runtime import current_runtime
+from ..core.session import get_current_deadline
 from .baselines import SystemConfig
 
 
@@ -109,9 +110,16 @@ def swe_driver(request: str, n_subtasks: int, max_retries: int = 4) -> int:
                 retries[i] += 1
                 futures[i] = implement(subtasks[i], retries[i])
         if not progressed:
+            # block on one unfinished stage — within the request's remaining
+            # deadline budget if it was submitted with one (the 600 s cap is
+            # only the no-deadline fallback, not a hard-coded wait)
+            deadline = get_current_deadline()
+            budget = 600.0
+            if deadline >= 0:
+                budget = max(0.0, min(budget, deadline - rt.kernel.now()))
             for i, f in futures.items():
                 if i not in done:
-                    f.value(timeout=600)
+                    f.value(timeout=budget)
                     break
     return attempts
 

@@ -10,14 +10,19 @@ Covers, on the deterministic SimKernel:
  * cancellation of queued / parked / running / engine-in-flight futures
    (the ``complete_async`` CANCELLED-guard regression);
  * bounded FutureTable (GC of resolved futures + node-store mirrors);
- * retry telemetry (metrics counters, ``retry#n`` trace marks).
+ * retry telemetry (metrics counters, ``retry#n`` trace marks);
+ * deadline propagation (inherited remaining budgets, launch-time expiry
+   as a terminal non-retryable failure) and hedged dispatch (first
+   completion wins, the loser never double-materializes, engine-side
+   cancellation releases slots and KV pages).
 """
 
 import pytest
 
-from repro.core import (AgentSpec, Directives, FixedLatency, FutureCancelled,
-                        FutureState, InstanceDied, ManagedDict, ManagedList,
-                        NalarRuntime, deployment, emulated, get_context)
+from repro.core import (AgentSpec, DeadlineExceeded, Directives, FixedLatency,
+                        FutureCancelled, FutureState, InstanceDied,
+                        ManagedDict, ManagedList, NalarRuntime, deployment,
+                        emulated, get_context)
 from repro.core.debug import format_trace
 from repro.core.runtime import current_runtime
 from repro.core.state import SessionTranscript
@@ -627,3 +632,318 @@ def test_retry_counters_surface_in_cluster_view():
     iid = rt.instances_of_type("stateful")[0]
     assert view.instances[iid].retries == 1
     assert view.instances[iid].cancelled == 0
+
+
+# ---------------------------------------------------------------- deadlines
+def test_launch_time_expiry_is_terminal_and_burns_no_retry_budget():
+    """A queued future whose deadline passes before it launches fails
+    ``DeadlineExceeded`` immediately — no execution, no retry attempts,
+    and the ``expired`` counter (not ``failed``-via-retries) records it."""
+    rt = two_node_rt()
+    rt.register_agent(AgentSpec(
+        name="e",
+        methods={"run": emulated(FixedLatency(0.5), lambda x: x)},
+        directives=Directives(max_retries=3, max_instances=1,
+                              resources={"CPU": 1})), instances=1)
+
+    def driver():
+        r = current_runtime()
+        f1 = r.stub("e").run(1)
+        # queued behind f1 (0.5 s service) with a 0.3 s budget: its launch
+        # slot opens only after its deadline has passed
+        f2 = r.stub("e").run(2, _hint={"deadline_s": 0.3})
+        v1 = f1.value()
+        with pytest.raises(DeadlineExceeded):
+            f2.value()
+        return v1, f2.state, f2.meta.attempt, f2.meta.escalations
+
+    v1, state, attempt, esc = deployment.main(driver, runtime=rt)
+    assert v1 == 1
+    assert state == FutureState.FAILED      # terminal — never re-armed
+    assert attempt == 0 and esc == 0        # no retry budget burned
+    inst = rt.instance(rt.instances_of_type("e")[0])
+    assert inst.metrics.expired == 1
+    assert inst.metrics.retries == 0
+
+
+def test_expired_future_never_rearms_despite_retry_budget():
+    """DeadlineExceeded raised *during* execution is non-retryable even
+    when the directive's retry budget is untouched."""
+    rt = two_node_rt()
+    calls = {"n": 0}
+
+    def work():
+        calls["n"] += 1
+        raise DeadlineExceeded("budget spent downstream")
+
+    rt.register_agent(AgentSpec(
+        name="e",
+        methods={"run": emulated(FixedLatency(0.02), work)},
+        directives=Directives(max_retries=5, max_instances=2,
+                              resources={"CPU": 1})), instances=2)
+
+    def driver():
+        f = current_runtime().stub("e").run()
+        with pytest.raises(DeadlineExceeded):
+            f.value()
+        return f.meta.attempt, f.meta.escalations
+
+    attempt, esc = deployment.main(driver, runtime=rt)
+    assert calls["n"] == 1                  # executed exactly once
+    assert attempt == 0 and esc == 0
+
+
+def test_child_call_inherits_remaining_deadline_budget():
+    """The request-level budget propagates: a child future's absolute
+    deadline is the parent's, and a narrower per-call budget shrinks it."""
+    rt = two_node_rt()
+    rt.register_agent(AgentSpec(
+        name="e",
+        methods={"run": emulated(FixedLatency(0.05), lambda x: x)},
+        directives=Directives(resources={"CPU": 1})), instances=1)
+    out = {}
+
+    def driver():
+        r = current_runtime()
+        t0 = r.kernel.now()
+        f_inherit = r.stub("e").run(1)
+        f_narrow = r.stub("e").run(2, _hint={"deadline_s": 1.0})
+        out["inherit"] = f_inherit.meta.deadline
+        out["narrow"] = f_narrow.meta.deadline
+        out["t0"] = t0
+        f_inherit.value(), f_narrow.value()
+
+    rt.start()
+    rt.submit_request(driver, deadline_s=10.0)
+    rt.run()
+    assert out["inherit"] == pytest.approx(10.0)       # parent's absolute
+    assert out["narrow"] == pytest.approx(out["t0"] + 1.0)  # min() applies
+
+
+def test_deadline_outcomes_in_telemetry():
+    rt = two_node_rt()
+    rt.register_agent(AgentSpec(
+        name="e",
+        methods={"run": emulated(FixedLatency(0.4), lambda x: x)},
+        directives=Directives(resources={"CPU": 1})), instances=1)
+
+    def ok():
+        current_runtime().stub("e").run(1).value()
+
+    def late():
+        current_runtime().stub("e").run(2).value()   # 0.4 s > 0.1 s budget
+
+    rt.start()
+    rt.submit_request(ok, deadline_s=5.0)
+    rt.submit_request(late, delay=1.0, deadline_s=0.1)
+    rt.run()
+    dl = rt.telemetry.deadline_outcomes()
+    assert dl["requests"] == 2 and dl["with_deadline"] == 2
+    assert dl["deadline_missed"] == 1 and dl["unfinished"] == 0
+
+
+# ------------------------------------------------------------------ hedging
+def hedged_rt(service=0.2, straggler_factor=50.0):
+    """Three replicas, one slowed 50x.  The HedgePolicy compares a
+    candidate's elapsed time against the *median* replica EMA, so the two
+    healthy replicas must carry warm EMAs before the straggler's inflated
+    one can be outvoted — drivers warm them up first."""
+    from repro.core import HedgePolicy
+    from repro.core.policy import default_policies
+    from repro.serving.chaos import slow_instance
+    chain = default_policies()
+    chain.policies.append(HedgePolicy(
+        factor=2.0, min_delay=0.5, budget_frac=1.0, agent_types=("e",)))
+    rt = NalarRuntime(simulate=True,
+                      nodes={"n0": {"CPU": 16}, "n1": {"CPU": 16}},
+                      policy=chain, control_interval=0.25)
+    runs = {"n": 0}
+
+    def work(x):
+        runs["n"] += 1
+        return x * 2
+
+    rt.register_agent(AgentSpec(
+        name="e",
+        methods={"run": emulated(FixedLatency(service), work)},
+        directives=Directives(max_instances=3, resources={"CPU": 1})),
+        instances=3)
+    victim = rt.instances_of_type("e")[0]
+    slow_instance(rt, victim, factor=straggler_factor)
+    return rt, victim, runs
+
+
+def test_hedged_pair_first_completion_wins_never_double_materializes():
+    """A future trapped on a straggler gets a hedged duplicate; a sibling
+    wins, and the straggler's (much later) natural completion must neither
+    re-materialize nor perturb the resolved future."""
+    rt, victim, runs = hedged_rt()
+    healthy = [i for i in rt.instances_of_type("e") if i != victim]
+
+    def driver():
+        r = current_runtime()
+        sid = get_context()[0]
+        for iid in healthy:                 # warm sibling EMAs
+            r.router.pin(sid, "e", iid)
+            r.stub("e").run(0).value()
+        r.router.pin(sid, "e", victim)      # trap the call on the straggler
+        f = r.stub("e").run(21)
+        r.router.unpin(sid, "e")
+        t0 = r.kernel.now()
+        v = f.value()                       # hedge winner resolves it
+        t_won = r.kernel.now() - t0
+        winner = f.meta.executor
+        run_id = f._run_id
+        r.kernel.sleep(15.0)                # straggler (10 s) finishes too
+        assert f.value() == v               # still the winner's result
+        assert f.meta.executor == winner
+        assert f._run_id == run_id          # never re-armed
+        return v, t_won, winner
+
+    v, t_won, winner = deployment.main(driver, runtime=rt)
+    assert v == 42
+    assert winner != victim                 # a sibling won
+    assert t_won < 2.0                      # rescued, not straggler-bound
+    assert rt.hedges_issued == 1
+    # 2 warmups + the winning duplicate: the straggler held its slot for
+    # the full 10 s but its late completion event found the future already
+    # resolved and dropped the body without ever invoking compute —
+    # exactly one materialization, no double-execution of the user fn
+    assert runs["n"] == 3
+    assert rt.telemetry.deadline_outcomes()["requests"] == 1
+
+
+def test_unhedged_future_claims_its_own_completion():
+    rt, victim, _ = hedged_rt()
+    f_fid = "nonexistent-fid"
+    assert rt.claim_hedge_completion(f_fid)     # unhedged: always claims
+
+
+def test_hedge_claim_fence_is_single_winner():
+    rt, victim, _ = hedged_rt()
+    rt._hedges["fid-x"] = (victim, "e:1")
+    assert rt.claim_hedge_completion("fid-x")       # first claim wins
+    assert not rt.claim_hedge_completion("fid-x")   # second stands down
+    rt._hedges.pop("fid-x", None)
+
+
+# ------------------------------------------- engine-side cancellation/expiry
+@pytest.fixture(scope="module")
+def small_engine_setup():
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    cfg = get_smoke_config("qwen3_0_6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(model, params, **kw):
+    from repro.serving import InferenceEngine
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("prefix_sharing", False)   # exact free-page accounting
+    return InferenceEngine(model, params, **kw)
+
+
+def test_cancel_request_releases_slot_and_kv_pages(small_engine_setup):
+    """The hedge loser's cancellation path: ``cancel_request`` on an
+    actively-decoding request vacates its slot and returns its protected
+    KV pages to the pool — no callback, no finished record."""
+    from repro.serving import Request, SamplingParams
+    cfg, model, params = small_engine_setup
+    eng = _engine(model, params)
+    free0 = eng.pool.free_pages()
+    fired = []
+    req = Request.make(list(range(8)),
+                       sampling=SamplingParams(max_new_tokens=32))
+    eng.submit_async(req, on_done=lambda r: fired.append(r))
+    eng.step()                              # prefill: slot + pages held
+    eng.step()                              # decoding
+    assert eng.metrics.active == 1
+    assert eng.pool.free_pages() < free0
+    assert eng.cancel_request(req.request_id)
+    assert eng.metrics.active == 0
+    assert eng.pool.free_pages() == free0   # pages fully reclaimed
+    eng.run_until_idle()
+    eng.drain_completions()
+    assert fired == []                      # loser never reports back
+    assert not eng.cancel_request(req.request_id)   # idempotent
+
+
+def test_cancel_request_removes_queued_request(small_engine_setup):
+    from repro.serving import Request, SamplingParams
+    cfg, model, params = small_engine_setup
+    eng = _engine(model, params, max_batch=1)
+    r1 = Request.make(list(range(6)),
+                      sampling=SamplingParams(max_new_tokens=4))
+    r2 = Request.make(list(range(6, 12)),
+                      sampling=SamplingParams(max_new_tokens=4))
+    eng.submit(r1)
+    eng.submit(r2)
+    eng.step()                              # r1 admitted, r2 still queued
+    assert eng.metrics.queued == 1
+    assert eng.cancel_request(r2.request_id)
+    assert eng.metrics.queued == 0
+    eng.run_until_idle()
+    assert r1.finished and not r2.finished
+
+
+def test_engine_preempts_expired_slot_mid_decode(small_engine_setup):
+    """Deadline enforcement inside the step loop: an in-flight request
+    whose wall deadline passes is preempted — slot vacated, pages
+    reclaimed, ``expired`` counted, completion delivered as expired."""
+    import time as _time
+
+    from repro.serving import Request, SamplingParams
+    cfg, model, params = small_engine_setup
+    eng = _engine(model, params)
+    free0 = eng.pool.free_pages()
+    req = Request.make(list(range(8)),
+                       sampling=SamplingParams(max_new_tokens=256))
+    req.deadline_wall = _time.monotonic() + 60.0
+    eng.submit(req)
+    eng.step()
+    assert eng.metrics.active == 1
+    req.deadline_wall = _time.monotonic() - 0.001   # budget just ran out
+    eng.step()
+    assert req.expired and req.finished
+    assert eng.metrics.expired == 1
+    assert eng.metrics.active == 0
+    assert eng.pool.free_pages() == free0
+    assert req in eng.poll_finished()       # delivered, marked expired
+
+
+def test_engine_rejects_expired_at_admission(small_engine_setup):
+    import time as _time
+
+    from repro.serving import Request, RequestExpired, SamplingParams
+    cfg, model, params = small_engine_setup
+    eng = _engine(model, params)
+    req = Request.make(list(range(4)),
+                       sampling=SamplingParams(max_new_tokens=4))
+    req.deadline_wall = _time.monotonic() - 1.0
+    with pytest.raises(RequestExpired):
+        eng.submit(req)
+    assert eng.metrics.expired == 1
+    assert eng.queue.expired_rejects == 1
+
+
+def test_waitqueue_expiry_uses_swappable_clock():
+    from repro.serving import Request, RequestExpired, SamplingParams
+    from repro.serving.batching import WaitQueue
+    q = WaitQueue()
+    t = [0.0]
+    q.clock = lambda: t[0]
+    r = Request.make([1, 2, 3], sampling=SamplingParams(max_new_tokens=1))
+    r.deadline_wall = 5.0
+    q.push(r)                               # t=0: admitted
+    assert q.pop_next() is r
+    t[0] = 6.0
+    r2 = Request.make([4, 5], sampling=SamplingParams(max_new_tokens=1))
+    r2.deadline_wall = 5.0
+    with pytest.raises(RequestExpired):
+        q.push(r2)                          # t=6 > deadline: rejected
+    assert q.expired_rejects == 1 and r2.expired
