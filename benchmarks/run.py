@@ -19,8 +19,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from . import (failure_injection, fig9_financial, fig9_router,  # noqa: E402
                fig9_swe, fig10_control_loop, paged_decode, pool_routing,
-               sec62_policies, spec_decode, straggler_hedging, sustained_rps,
-               table4_two_level)
+               sec62_policies, spec_decode, straggler_hedging, streaming,
+               sustained_rps, table4_two_level)
 
 BENCHES = {
     "fig9a_financial": fig9_financial,
@@ -45,6 +45,9 @@ BENCHES = {
     # injected 10x-slow replica: hedged dispatch p99 cut vs hedging off,
     # hedge-budget overhead, deadline expiry under tight budgets
     "straggler_hedging": straggler_hedging,
+    # incremental futures: classifier starts on the first streamed tokens;
+    # streamed-vs-completion p99 + TTFT, byte-identical outputs
+    "streaming": streaming,
 }
 
 
@@ -95,6 +98,9 @@ def main() -> None:
     if "straggler_hedging" in all_rows:
         straggler_hedging.write_record(all_rows["straggler_hedging"],
                                        "full" if args.full else "quick")
+    if "streaming" in all_rows:
+        streaming.write_record(all_rows["streaming"],
+                               "full" if args.full else "quick")
     print(f"done,benches,{len(all_rows)}")
 
 

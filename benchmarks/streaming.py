@@ -1,0 +1,204 @@
+"""Token-streaming data-plane benchmark — inter-step pipelining on real
+engines, wall-clock time.
+
+The workload is the streamed-router workflow (``workloads/router.py``): a
+draft generation, a classifier that needs only the first few output tokens,
+and a branch refinement issued once the classifier decides.  Two modes,
+identical prompts / seed / greedy decode:
+
+* ``completion`` — the baseline all-or-nothing future: the classifier
+  parks until the draft fully resolves, so the critical path is
+  ``draft + classify + refine`` laid end to end.
+* ``streamed``   — the classifier declares ``stream_min_tokens`` and is
+  dispatched as soon as that many tokens exist in the draft future's
+  chunk log; classify and the refine generation overlap the draft's
+  remaining decode steps.
+
+Because decode is greedy, both modes must produce **byte-identical**
+outputs (same branch decision, same draft tokens, same refine tokens) —
+the benchmark asserts it.  The paper-claim check is the latency shape:
+streamed p99 end-to-end beats completion-only, and TTFT (stamped by
+telemetry at the first accepted chunk) sits well inside e2e.
+
+    PYTHONPATH=src python benchmarks/streaming.py            # table
+    PYTHONPATH=src python benchmarks/streaming.py --smoke    # CI assertions
+    PYTHONPATH=src python -m benchmarks.run --only streaming
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.workloads.router import (add_stream_classifier,  # noqa: E402
+                                    build_pool_runtime,
+                                    completion_routed_driver,
+                                    streamed_routed_driver)
+
+OUT_TOKENS = 24      # draft length — long tail for the branch to overlap
+STREAM_MIN = 6       # classifier starts once this many draft tokens exist
+REFINE_TOKENS = 6
+CLASSIFY_S = 0.02
+
+
+def _warm(rt) -> None:
+    """Compile prefill/decode shapes up front so JIT time does not pollute
+    the mode comparison (same trick as benchmarks/pool_routing.py)."""
+    from repro.serving import SamplingParams
+    pool = rt.engine_backends["llm"]
+    for iid in pool.instance_ids:
+        engine = pool.bridge_of(iid).engine
+        for b in (16, 32):
+            sid = f"warmup:{iid}:{b}"
+            engine.generate(list(range(b - 1)), session_id=sid,
+                            sampling=SamplingParams(max_new_tokens=2))
+            engine.pool.release(sid)
+            if engine.kv_registry is not None:
+                engine.kv_registry.release(sid)
+
+
+def run_streaming(streamed: bool, *, requests: int = 6, gap: float = 0.25,
+                  seed: int = 0, timeout_s: float = 300.0) -> Dict:
+    rt = build_pool_runtime(replicas=2, max_batch=4,
+                            max_new_tokens=OUT_TOKENS, seed=seed)
+    add_stream_classifier(rt, latency=CLASSIFY_S, k=STREAM_MIN)
+    _warm(rt)
+    outputs: Dict[int, Dict] = {}
+    errors: List[str] = []
+
+    rt.start()
+    for i in range(requests):
+        def cb(out, err, i=i):
+            if err is not None:
+                errors.append(f"req{i}: {err!r}")
+            else:
+                outputs[i] = out
+        q = f"stream bench query {i} with a little extra context"
+        if streamed:
+            rt.submit_request(streamed_routed_driver, q, OUT_TOKENS,
+                              STREAM_MIN, REFINE_TOKENS,
+                              delay=i * gap, deadline_s=timeout_s,
+                              on_done=cb)
+        else:
+            rt.submit_request(completion_routed_driver, q, OUT_TOKENS,
+                              REFINE_TOKENS, delay=i * gap,
+                              deadline_s=timeout_s, on_done=cb)
+    time.sleep(requests * gap + 0.5)     # let every arrival timer fire
+    rt.run()
+
+    summary = rt.telemetry.summary()
+    dl = rt.telemetry.deadline_outcomes()
+    row = {
+        "bench": "streaming",
+        "system": "streamed" if streamed else "completion",
+        "requests": requests,
+        "completed": len(outputs),
+        "errors": len(errors),
+        "p50_s": summary.get("p50", float("nan")),
+        "p99_s": summary.get("p99", float("nan")),
+        "ttft_p50_s": dl.get("ttft_p50", float("nan")),
+        "ttft_p99_s": dl.get("ttft_p99", float("nan")),
+        "outputs": {str(i): outputs[i] for i in sorted(outputs)},
+        "error_detail": errors,
+    }
+    rt.shutdown()
+    return row
+
+
+def run(quick: bool = True) -> List[Dict]:
+    n = 6 if quick else 16
+    return [run_streaming(False, requests=n),
+            run_streaming(True, requests=n)]
+
+
+def _byte_identical(rows: List[Dict]) -> bool:
+    by = {r["system"]: r for r in rows}
+    a, b = by["completion"]["outputs"], by["streamed"]["outputs"]
+    return a.keys() == b.keys() and all(a[k] == b[k] for k in a)
+
+
+def derive(rows: List[Dict]) -> List[str]:
+    by = {r["system"]: r for r in rows}
+    out = []
+    for mode, r in by.items():
+        out.append(f"streaming,{mode},p50_s,{r['p50_s']:.3f}")
+        out.append(f"streaming,{mode},p99_s,{r['p99_s']:.3f}")
+        out.append(f"streaming,{mode},ttft_p50_s,{r['ttft_p50_s']:.3f}")
+        out.append(f"streaming,{mode},ttft_p99_s,{r['ttft_p99_s']:.3f}")
+    comp, strm = by.get("completion"), by.get("streamed")
+    if comp and strm:
+        out.append(f"streaming,claim,outputs_byte_identical,"
+                   f"{int(_byte_identical(rows))}")
+        out.append(f"streaming,claim,streamed_p99_lt_completion,"
+                   f"{int(strm['p99_s'] < comp['p99_s'])}")
+        out.append(f"streaming,claim,p99_cut_s,"
+                   f"{comp['p99_s'] - strm['p99_s']:.3f}")
+        out.append(f"streaming,claim,ttft_inside_e2e,"
+                   f"{int(strm['ttft_p50_s'] < strm['p50_s'])}")
+        out.append(f"streaming,claim,no_errors,"
+                   f"{int(comp['errors'] == 0 and strm['errors'] == 0)}")
+    return out
+
+
+def write_record(rows: List[Dict], mode: str) -> None:
+    by = {r["system"]: r for r in rows}
+    comp, strm = by["completion"], by["streamed"]
+    payload = {
+        "bench": "streaming",
+        "mode": mode,
+        "out_tokens": OUT_TOKENS,
+        "stream_min_tokens": STREAM_MIN,
+        "p99_completion_s": round(comp["p99_s"], 4),
+        "p99_streamed_s": round(strm["p99_s"], 4),
+        "p99_cut_s": round(comp["p99_s"] - strm["p99_s"], 4),
+        "ttft_p50_s": round(strm["ttft_p50_s"], 4),
+        "ttft_p99_s": round(strm["ttft_p99_s"], 4),
+        "outputs_byte_identical": _byte_identical(rows),
+        "derived": derive(rows),
+        "rows": rows,
+    }
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_streaming.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=str)
+        f.write("\n")
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    rows = run(quick=True)
+    for row in rows:
+        slim = {k: v for k, v in row.items()
+                if k not in ("outputs", "error_detail")}
+        print(slim)
+    for line in derive(rows):
+        print(line)
+    if not smoke:
+        write_record(rows, "quick")
+        return
+    by = {r["system"]: r for r in rows}
+    comp, strm = by["completion"], by["streamed"]
+    assert comp["errors"] == 0 and strm["errors"] == 0, \
+        (comp["error_detail"], strm["error_detail"])
+    assert comp["completed"] == comp["requests"], "completion mode dropped work"
+    assert strm["completed"] == strm["requests"], "streamed mode dropped work"
+    assert _byte_identical(rows), \
+        "streamed and completion modes must produce byte-identical outputs"
+    assert strm["p99_s"] < comp["p99_s"], \
+        (f"partial-output early start must cut p99: streamed "
+         f"{strm['p99_s']:.3f}s vs completion {comp['p99_s']:.3f}s")
+    assert strm["ttft_p50_s"] > 0, "TTFT must be stamped from chunk arrivals"
+    assert strm["ttft_p50_s"] < strm["p50_s"], \
+        "first streamed chunk must land well before e2e completion"
+    print(f"streaming --smoke: OK (p99 completion={comp['p99_s']:.3f}s "
+          f"streamed={strm['p99_s']:.3f}s, "
+          f"ttft_p50={strm['ttft_p50_s']:.3f}s, outputs byte-identical)")
+
+
+if __name__ == "__main__":
+    main()

@@ -86,6 +86,14 @@ class ComponentController:
         fut.meta.scheduled_at = self.kernel.now()
         fut._set_state(FutureState.SCHEDULED)
         pending = set(fut.unresolved_deps(self.runtime.futures))
+        # a consumer declared with stream_min_tokens can start on partial
+        # output: deps that have already streamed enough don't park it
+        smin = fut.meta.work_hint.get("stream_min_tokens")
+        if pending and smin is not None:
+            for dep_fid in list(pending):
+                dep = self.runtime.futures.get(dep_fid)
+                if dep is not None and dep.streamed() >= int(smin):
+                    pending.discard(dep_fid)
         with self._metrics_batch():
             with self._lock:
                 if pending:
@@ -107,6 +115,34 @@ class ComponentController:
                     fut = self.runtime.futures.get(fid)
                     if fut is not None:
                         ready.append(fut)
+        with self._metrics_batch():
+            for fut in ready:
+                with self._lock:
+                    self._enqueue(fut)
+            if ready:
+                self._maybe_dispatch()
+
+    def on_dep_partial(self, dep_fid: str, streamed: int) -> None:
+        """Partial availability: a streaming producer appended a chunk.
+
+        Parked futures whose ``stream_min_tokens`` hint is satisfied treat
+        the dependency as ready-enough and dispatch; ``resolve_args`` then
+        substitutes the dep's ``partial()`` snapshot at execution time."""
+        ready: List[Future] = []
+        with self._lock:
+            for fid, deps in list(self._parked.items()):
+                if dep_fid not in deps:
+                    continue
+                fut = self.runtime.futures.get(fid)
+                if fut is None:
+                    continue
+                smin = fut.meta.work_hint.get("stream_min_tokens")
+                if smin is None or streamed < int(smin):
+                    continue
+                deps.discard(dep_fid)
+                if not deps:
+                    del self._parked[fid]
+                    ready.append(fut)
         with self._metrics_batch():
             for fut in ready:
                 with self._lock:
@@ -222,7 +258,9 @@ class ComponentController:
                         f, self.inst.instance_id)
                 try:
                     self.runtime.enter_agent_context(f, self.inst)
-                    args, kwargs = resolve_args(f.args, f.kwargs)
+                    args, kwargs = resolve_args(
+                        f.args, f.kwargs,
+                        stream_min=f.meta.work_hint.get("stream_min_tokens"))
                     value = method.compute(*args, **kwargs)
                     self._complete(f, value=value)
                 except BaseException as e:  # noqa: BLE001 — fault reporting (§5)
@@ -280,7 +318,9 @@ class ComponentController:
             start = self.kernel.now()
             try:
                 self.runtime.enter_agent_context(fut, self.inst)
-                args, kwargs = resolve_args(fut.args, fut.kwargs)
+                args, kwargs = resolve_args(
+                    fut.args, fut.kwargs,
+                    stream_min=fut.meta.work_hint.get("stream_min_tokens"))
                 value = fn(*args, **kwargs)
                 err: Optional[BaseException] = None
             except BaseException as e:  # noqa: BLE001

@@ -106,6 +106,8 @@ class Future:
         "fid", "meta", "_state", "_value", "_error", "_ready_evt",
         "_runtime", "_lock", "args", "kwargs", "_run_id",
         "_table", "_live_indexed",
+        "_chunks", "_chunk_gen", "_stream_tokens", "_chunk_evt",
+        "_stream_owner",
     )
 
     def __init__(self, runtime: Any, meta: FutureMetadata,
@@ -131,6 +133,23 @@ class Future:
         # per-session live counters and secondary indexes
         self._table: Optional["FutureTable"] = None
         self._live_indexed = False
+        # ---- incremental streaming (STREAMING sub-state of RUNNING) ----
+        # Append-only chunk log for the CURRENT attempt.  Each entry is a
+        # list of token ids emitted by one engine step.  A retry truncates
+        # the log back to the attempt boundary (all entries belong to the
+        # attempt that appended them — exactly-once mirrors state epochs)
+        # and bumps ``_chunk_gen`` so live iterators rewind their cursor.
+        self._chunks: List[list] = []
+        self._chunk_gen = 0
+        self._stream_tokens = 0          # total tokens across self._chunks
+        # eventcount: replaced with a fresh Event on every append/terminal
+        # transition; waiters capture it under the lock, then block on it
+        self._chunk_evt = threading.Event()
+        # stream ownership: the first producer (engine instance id) to
+        # append claims the stream; a concurrently-running hedge duplicate
+        # shares the run id, so the run fence alone cannot stop it from
+        # interleaving tokens — owner mismatch rejects its appends
+        self._stream_owner: Optional[str] = None
 
     # ------------------------------------------------------------ public API
     @property
@@ -149,6 +168,152 @@ class Future:
         if self._error is not None:
             raise self._error
         return self._value
+
+    # ------------------------------------------------------------- streaming
+    @property
+    def streaming(self) -> bool:
+        """True while partial output exists but the future is unresolved —
+        the STREAMING sub-state of RUNNING (orthogonal to the lifecycle
+        enum: materialize/fail/cancel/retry machinery is unchanged)."""
+        return bool(self._chunks) and self._state not in TERMINAL_STATES
+
+    def streamed(self) -> int:
+        """Tokens streamed so far in the current attempt (non-blocking)."""
+        return self._stream_tokens
+
+    def partial(self) -> list:
+        """Snapshot of all tokens streamed so far (current attempt only).
+
+        Non-blocking; valid in any state.  After READY the log has been
+        sealed to the full output, so ``partial()`` equals the final token
+        sequence for engine-backed calls."""
+        with self._lock:
+            out: list = []
+            for c in self._chunks:
+                out.extend(c)
+            return out
+
+    def wait_streamed(self, n: int, timeout: Optional[float] = None) -> int:
+        """Block until ≥ ``n`` tokens have streamed or the future resolves.
+
+        Returns the streamed count (callers should check ``available`` on
+        return: terminal resolution also wakes this wait, so a short answer
+        or a failure returns with fewer than ``n`` tokens).  ``timeout``
+        bounds each successive wait for progress."""
+        self._runtime.register_consumer(self)
+        while True:
+            with self._lock:
+                if (self._stream_tokens >= n
+                        or self._state in TERMINAL_STATES):
+                    return self._stream_tokens
+                evt = self._chunk_evt
+            if not self._runtime.kernel.wait_event(evt, timeout):
+                raise TimeoutError(
+                    f"future {self.fid}: no stream progress within {timeout}s")
+
+    def iter_chunks(self, timeout: Optional[float] = None):
+        """Yield token chunks in order until the future resolves.
+
+        Terminates cleanly at READY (after draining the sealed log) and
+        raises the stored error at FAILED/CANCELLED, so consumers blocked
+        mid-stream observe a drain/cancel as a fast failure instead of a
+        hang.  A mid-stream retry truncates the log back to the attempt
+        boundary; live iterators detect the generation bump and rewind to
+        re-observe the fresh attempt (greedy decode re-streams identical
+        tokens).  ``timeout`` bounds the wait for each successive chunk."""
+        self._runtime.register_consumer(self)
+        i = 0
+        gen = self._chunk_gen
+        while True:
+            with self._lock:
+                if gen != self._chunk_gen:      # retry rewound the log
+                    gen = self._chunk_gen
+                    i = 0
+                if i < len(self._chunks):
+                    chunk, evt = self._chunks[i], None
+                    i += 1
+                elif self._state in TERMINAL_STATES:
+                    chunk, evt = None, False
+                else:
+                    chunk, evt = None, self._chunk_evt
+            if evt is None:
+                yield chunk
+            elif evt is False:
+                if self._error is not None:
+                    raise self._error
+                return
+            elif not self._runtime.kernel.wait_event(evt, timeout):
+                raise TimeoutError(
+                    f"future {self.fid}: no chunk within {timeout}s")
+
+    def append_chunk(self, chunk: list, now: float = 0.0,
+                     expect_run: Optional[int] = None,
+                     owner: str = "") -> bool:
+        """Append one engine step's tokens to the stream (runtime-internal).
+
+        Fenced twice: ``expect_run`` rejects appends captured under a
+        superseded attempt (retry/preemption), and ``owner`` rejects a
+        hedge duplicate racing the stream's first producer (hedges share
+        the run id, so the run fence alone cannot order them).  Returns
+        False when the append was rejected or the future is resolved."""
+        with self._lock:
+            if self._state in TERMINAL_STATES:
+                return False
+            if expect_run is not None and self._run_id != expect_run:
+                return False
+            if owner:
+                if self._stream_owner is None:
+                    self._stream_owner = owner
+                elif self._stream_owner != owner:
+                    return False
+            self._chunks.append(list(chunk))
+            self._stream_tokens += len(chunk)
+            evt, self._chunk_evt = self._chunk_evt, threading.Event()
+        self._runtime.kernel.notify(evt)
+        notify_partial = getattr(self._runtime, "on_future_partial", None)
+        if notify_partial is not None:
+            notify_partial(self)
+        return True
+
+    def seal_stream(self, tokens: list, owner: str = "",
+                    expect_run: Optional[int] = None) -> None:
+        """Reconcile the chunk log with the final token sequence.
+
+        Called by the winning completion just before materialization: the
+        common case appends the not-yet-streamed tail as a last chunk.  If
+        the log disagrees with ``tokens`` (a hedge loser streamed first and
+        claimed ownership), it is truncated and replaced wholesale — the
+        generation bump makes live iterators rewind onto the winner's
+        tokens, so the stream a consumer assembles is always byte-identical
+        to the completion value."""
+        with self._lock:
+            if self._state in TERMINAL_STATES:
+                return
+            if expect_run is not None and self._run_id != expect_run:
+                return
+            have: list = []
+            for c in self._chunks:
+                have.extend(c)
+            if ((owner and self._stream_owner not in (None, owner))
+                    or have != list(tokens[:len(have)])):
+                self._chunks.clear()
+                self._stream_tokens = 0
+                self._chunk_gen += 1
+                have = []
+            if owner:
+                self._stream_owner = owner
+            tail = list(tokens[len(have):])
+            if tail:
+                self._chunks.append(tail)
+                self._stream_tokens += len(tail)
+            evt, self._chunk_evt = self._chunk_evt, threading.Event()
+        self._runtime.kernel.notify(evt)
+
+    def _wake_stream_waiters_locked(self) -> threading.Event:
+        """Swap in a fresh chunk event; caller must hold ``_lock`` and
+        notify the returned event after releasing it."""
+        evt, self._chunk_evt = self._chunk_evt, threading.Event()
+        return evt
 
     # ------------------------------------------------------- runtime-internal
     @property
@@ -173,7 +338,9 @@ class Future:
             self._value = value
             self._state = FutureState.READY
             self.meta.ready_at = now
+            chunk_evt = self._wake_stream_waiters_locked()
         self._notify_resolved()
+        self._runtime.kernel.notify(chunk_evt)
         self._runtime.kernel.notify(self._ready_evt)
 
     def fail(self, error: BaseException, now: float) -> None:
@@ -183,7 +350,9 @@ class Future:
             self._error = error
             self._state = FutureState.FAILED
             self.meta.ready_at = now
+            chunk_evt = self._wake_stream_waiters_locked()
         self._notify_resolved()
+        self._runtime.kernel.notify(chunk_evt)
         self._runtime.kernel.notify(self._ready_evt)
 
     def cancel(self, now: float, reason: str = "cancelled") -> bool:
@@ -202,7 +371,9 @@ class Future:
                 f"cancelled: {reason}")
             self._state = FutureState.CANCELLED
             self.meta.ready_at = now
+            chunk_evt = self._wake_stream_waiters_locked()
         self._notify_resolved()
+        self._runtime.kernel.notify(chunk_evt)
         self._runtime.kernel.notify(self._ready_evt)
         return True
 
@@ -231,6 +402,18 @@ class Future:
                 # the future had terminally failed (its waiters already woke
                 # and observed the error); new waiters need a fresh event
                 self._ready_evt = threading.Event()
+            # truncate the stream back to the attempt boundary: every
+            # logged chunk belongs to the superseded attempt, so the retry
+            # re-streams from scratch.  The generation bump rewinds live
+            # iterators; waking them here lets blocked consumers observe
+            # the rewind instead of waiting on a dead event.
+            if self._chunks:
+                self._chunks.clear()
+                self._stream_tokens = 0
+                self._chunk_gen += 1
+            self._stream_owner = None
+            chunk_evt = self._wake_stream_waiters_locked()
+        self._runtime.kernel.notify(chunk_evt)
         if revived:
             self._notify_revived()
         return True
@@ -469,14 +652,27 @@ class FutureTable:
         return dead
 
 
-def resolve_args(args: tuple, kwargs: dict) -> tuple:
+def resolve_args(args: tuple, kwargs: dict,
+                 stream_min: Optional[int] = None) -> tuple:
     """Replace Future objects in call args with their materialized values.
 
     Called by the executing component controller once all dependencies are
     ready (push-based: the values have already arrived).
+
+    ``stream_min`` is the consumer's ``stream_min_tokens`` hint: a still-
+    running dependency that has streamed at least that many tokens is
+    substituted with its ``partial()`` token snapshot instead of blocking —
+    the consumer declared it can start on partial output.  Fully-resolved
+    dependencies substitute their value as usual (callers accepting partial
+    input must handle both shapes).
     """
     def r(x: Any) -> Any:
         if isinstance(x, Future):
+            if not x.available and stream_min is not None:
+                partial = x.partial()
+                assert len(partial) >= stream_min, (
+                    "partial dependency dispatched below stream_min_tokens")
+                return partial
             assert x.available, "dependency not materialized before execution"
             return x.value()
         if isinstance(x, (list, tuple)):

@@ -510,6 +510,27 @@ class NalarRuntime:
                     self.net_latency(src, ctrl.inst.node_id),
                     lambda c=ctrl, f=fut.fid: c.on_dep_ready(f))
 
+    def on_future_partial(self, fut: Future) -> None:
+        """A streaming producer appended a chunk to ``fut``.
+
+        Partial counterpart of :meth:`push_ready`: consumer controllers get
+        a chance to unpark dependents whose ``stream_min_tokens`` hint is
+        now satisfied, so inter-step pipelining starts before the producer
+        resolves.  Fired per chunk — chunk counts are bounded by
+        ``max_new_tokens``, and controllers ignore deps they aren't parked
+        on, so the fan-out stays cheap."""
+        if not fut.meta.consumers:
+            return
+        streamed = fut.streamed()
+        src = self.node_of_instance(fut.meta.executor or fut.meta.creator)
+        for consumer in list(fut.meta.consumers):
+            ctrl = self._controllers.get(consumer)
+            if ctrl is not None:
+                self.kernel.schedule(
+                    self.net_latency(src, ctrl.inst.node_id),
+                    lambda c=ctrl, f=fut.fid, n=streamed:
+                        c.on_dep_partial(f, n))
+
     def escalate(self, fut: Future, error: BaseException, src_instance: str,
                  reason: str) -> bool:
         """Rung 2 of the retry ladder: park the future (PENDING) for the

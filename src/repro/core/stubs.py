@@ -21,6 +21,15 @@ budget (overrides the agent directive; 0 disables retries for this call),
 and a *truthy* ``"retry"`` doubles as the budget for convenience —
 ``{"retry": 0}`` stays a pure scheduling signal (LPT re-entrance for
 driver-managed retry loops) and leaves the directive in force.
+
+Streaming hints: ``"stream_min_tokens": n`` declares the call can start on
+partial input — the controller dispatches it as soon as every Future
+dependency has streamed ≥ n tokens (the dep substitutes its ``partial()``
+token snapshot; a dep that resolves first substitutes its value as usual).
+``"session_id"`` overrides the context session for this one call, detaching
+it from the caller's per-session ordering — a pipelined side-step (e.g. a
+classifier racing its upstream generator) must not queue behind the very
+call it consumes partial output from.
 """
 
 from __future__ import annotations
@@ -129,6 +138,8 @@ class Stub:
         def call(*args, **kwargs) -> Future:
             hint = kwargs.pop("_hint", {}) or {}
             sid, rid, caller = get_context()
+            if hint.get("session_id") is not None:
+                sid = str(hint["session_id"])
             rt = self._runtime
             now = rt.kernel.now()
             sess = rt.sessions.get(sid)

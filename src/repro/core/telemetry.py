@@ -54,11 +54,20 @@ class RequestRecord:
     # "unfinished == timed out".
     deadline_s: float = -1.0
     deadline_exceeded: bool = False
+    # when the request's FIRST streamed chunk reached a future (-1 = the
+    # request never streamed).  Workload-level TTFT: engines stamp their own
+    # per-request first_token_at, but that never left per-engine metrics.
+    first_output_at: float = -1.0
     stages: List[FutureRecord] = field(default_factory=list)
 
     @property
     def latency(self) -> float:
         return self.finished_at - self.submitted_at if self.finished_at >= 0 else -1.0
+
+    @property
+    def ttft(self) -> float:
+        return (self.first_output_at - self.submitted_at
+                if self.first_output_at >= 0 else -1.0)
 
 
 @dataclass
@@ -113,18 +122,38 @@ class Telemetry:
                 r.failed = failed
                 r.deadline_exceeded = deadline_exceeded
 
-    def deadline_outcomes(self) -> Dict[str, int]:
+    def on_first_output(self, request_id: str, now: float) -> None:
+        """Stamp TTFT from the first streamed chunk (idempotent: only the
+        earliest stamp sticks — later chunks and hedge duplicates no-op)."""
+        with self._lock:
+            r = self.requests.get(request_id)
+            if r is not None and r.first_output_at < 0:
+                r.first_output_at = now
+
+    def deadline_outcomes(self) -> Dict[str, float]:
         """Real per-request deadline accounting: requests submitted with a
         budget, how many missed it (failed DeadlineExceeded or finished
-        late), and how many never finished at all."""
+        late), how many never finished at all — plus workload-level TTFT
+        percentiles from the streamed first-chunk stamps."""
         with self._lock:
             recs = list(self.requests.values())
         with_deadline = [r for r in recs if r.deadline_s >= 0]
+        ttfts = sorted(r.ttft for r in recs if r.first_output_at >= 0)
+
+        def pct(p: float) -> float:
+            if not ttfts:
+                return float("nan")
+            return ttfts[min(len(ttfts) - 1,
+                             int(round(p / 100.0 * (len(ttfts) - 1))))]
+
         return {
             "requests": len(recs),
             "with_deadline": len(with_deadline),
             "deadline_missed": sum(r.deadline_exceeded for r in recs),
             "unfinished": sum(r.finished_at < 0 for r in recs),
+            "ttft_n": len(ttfts),
+            "ttft_p50": pct(50),
+            "ttft_p99": pct(99),
         }
 
     def on_future_done(self, fut, inst, now: float) -> None:

@@ -83,6 +83,10 @@ class Request:
     # "fused" / "masked") — observability for tests and benchmarks that
     # must assert which data plane actually served them
     decode_path: str = ""
+    # tokens already emitted as stream chunks (prefix length of
+    # ``generated``); maintained by the engine's step loop so each drain
+    # delivers exactly the tokens appended since the previous one
+    streamed: int = 0
 
     @staticmethod
     def make(prompt, session_id: str = "", sampling: Optional[SamplingParams] = None,

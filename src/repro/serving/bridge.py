@@ -168,7 +168,10 @@ class EngineBridge:
         Used when the engine itself dies (pump-loop crash) and when the
         replica is hard-killed (fault injection): either way the engine's
         results will never arrive, so the futures must travel the retry
-        ladder now rather than hang."""
+        ladder now rather than hang.  Partially-streamed requests fail the
+        same way: ``Future.fail`` wakes blocked chunk iterators, which
+        terminate by raising the failure — a consumer mid-stream observes a
+        drain/crash as a fast error, never a hang."""
         with self._cv:
             dead = list(self._inflight.values())
             dead += [(f, c) for q in self._session_q.values()
@@ -308,13 +311,20 @@ class EngineBridge:
 
     def _submit_now(self, fut: Future, controller,
                     method: "EngineMethod") -> None:
-        args, kwargs = resolve_args(fut.args, fut.kwargs)
+        args, kwargs = resolve_args(
+            fut.args, fut.kwargs,
+            stream_min=fut.meta.work_hint.get("stream_min_tokens"))
         vocab = self.engine.cfg.vocab_size
         new_tokens = [int(t) % vocab for t in method.encode(*args, **kwargs)]
 
         hint = fut.meta.work_hint
         max_new = int(hint.get("out_tokens", method.sampling.max_new_tokens))
         sampling = replace(method.sampling, max_new_tokens=max_new)
+        if "temperature" in hint:
+            # per-call sampling override (the HTTP front end forwards the
+            # OpenAI request's temperature; 0 = greedy)
+            sampling = replace(sampling,
+                              temperature=float(hint["temperature"]))
 
         sid = fut.meta.session_id
         iid = self.engine.instance_id
@@ -352,6 +362,17 @@ class EngineBridge:
         # run-id fence: if the replica dies and the future is retried on a
         # sibling, a late completion from this engine must not resolve it
         run_id = fut._run_id
+
+        def on_chunk(r: Request, chunk: List[int]) -> None:
+            # per-step tokens -> incremental future updates.  Doubly fenced:
+            # expect_run drops chunks from a superseded attempt (retry /
+            # preemption), owner drops a hedge duplicate racing the stream's
+            # first producer (hedges share the run id).  The first accepted
+            # chunk stamps workload-level TTFT.
+            if fut.append_chunk(chunk, now=self.rt.kernel.now(),
+                                expect_run=run_id, owner=iid):
+                self.rt.telemetry.on_first_output(fut.meta.request_id,
+                                                  self.rt.kernel.now())
 
         def on_done(r: Request) -> None:
             with self._cv:
@@ -399,6 +420,14 @@ class EngineBridge:
                                            max_tokens=self.engine.max_seq)
             except BaseException as e:  # noqa: BLE001 — fault reporting (§5)
                 err = e
+            if err is None:
+                # reconcile the chunk log with the final tokens before
+                # materializing: the common case appends the unstreamed
+                # tail; a hedge race that let the loser claim the stream is
+                # truncated and replaced with the winner's tokens, so
+                # consumers always assemble exactly the completion value
+                fut.seal_stream([int(t) for t in r.generated], owner=iid,
+                                expect_run=run_id)
             # deactivate the session BEFORE resolving the future: a caller
             # that migrates the session the moment ``value()`` returns must
             # see it idle, not spuriously deferred behind a request that has
@@ -426,7 +455,7 @@ class EngineBridge:
             # The exception travels back through launch() into the retry
             # ladder — a *retryable* failure (backoff locally, escalate to
             # the RetryPolicy for a reroute) instead of unbounded queueing.
-            self.engine.submit_async(req, on_done)
+            self.engine.submit_async(req, on_done, on_chunk)
         except RequestExpired as e:
             with self._cv:
                 self._pending -= 1

@@ -350,6 +350,13 @@ class InferenceEngine:
         # outside the step lock so they may re-enter submit().
         self._callbacks: Dict[str, Callable[[Request], None]] = {}
         self._finished: List[Request] = []
+        # token-streaming plumbing: per-request chunk callbacks plus the
+        # pending (request, chunk) pairs each step emitted.  Chunks are
+        # buffered under _done_lock at the end of step()/_finish_slot and
+        # delivered by drain_completions — off the step lock, before the
+        # completion callback of the same request.
+        self._stream_cbs: Dict[str, Callable[[Request, List[int]], None]] = {}
+        self._stream_pending: List[tuple] = []
 
     # ----------------------------------------------------------- submission
     def submit(self, req: Request) -> str:
@@ -369,18 +376,25 @@ class InferenceEngine:
         return req.request_id
 
     def submit_async(self, req: Request,
-                     on_done: Optional[Callable[[Request], None]] = None) -> str:
+                     on_done: Optional[Callable[[Request], None]] = None,
+                     on_chunk: Optional[
+                         Callable[[Request, List[int]], None]] = None) -> str:
         """Queue ``req``; ``on_done(req)`` fires from ``drain_completions``
-        after the request finishes (the NALAR future-resolution hook)."""
-        if on_done is not None:
-            with self._done_lock:
+        after the request finishes (the NALAR future-resolution hook).
+        ``on_chunk(req, tokens)`` fires from the same drain for every batch
+        of tokens the request's slot emitted since the previous drain —
+        in order, and always before the request's ``on_done``."""
+        with self._done_lock:
+            if on_done is not None:
                 self._callbacks[req.request_id] = on_done
+            if on_chunk is not None:
+                self._stream_cbs[req.request_id] = on_chunk
         try:
             return self.submit(req)
         except BaseException:
-            if on_done is not None:     # rejected: no completion will fire
-                with self._done_lock:
-                    self._callbacks.pop(req.request_id, None)
+            with self._done_lock:       # rejected: no completion will fire
+                self._callbacks.pop(req.request_id, None)
+                self._stream_cbs.pop(req.request_id, None)
             raise
 
     def poll_finished(self) -> List[Request]:
@@ -390,11 +404,21 @@ class InferenceEngine:
         return out
 
     def drain_completions(self) -> int:
-        """Fire completion callbacks for finished requests.  Called by the
-        bridge pump thread after each step(), outside the engine lock."""
+        """Fire stream-chunk then completion callbacks for work the step
+        loop emitted.  Called by the bridge pump thread after each step(),
+        outside the engine lock — chunk callbacks for a request always fire
+        before (and never after) its completion callback."""
         with self._done_lock:
+            chunks, self._stream_pending = self._stream_pending, []
+            ccbs = [(r, c, self._stream_cbs.get(r.request_id))
+                    for r, c in chunks]
             done, self._finished = self._finished, []
             cbs = [(r, self._callbacks.pop(r.request_id, None)) for r in done]
+            for r in done:
+                self._stream_cbs.pop(r.request_id, None)
+        for req, chunk, ccb in ccbs:
+            if ccb is not None:
+                ccb(req, chunk)
         for req, cb in cbs:
             if cb is not None:
                 cb(req)
@@ -745,6 +769,7 @@ class InferenceEngine:
                         req.finished = True
                         req.finished_at = time.monotonic()
                         self.metrics.completed += 1
+                        self._emit_stream(req)
                         with self._done_lock:
                             self._finished.append(req)
                         continue
@@ -993,9 +1018,26 @@ class InferenceEngine:
                     done = True
                 if done:
                     self._finish_slot(i, now)
+                else:
+                    self._emit_stream(req)
             self.metrics.queued = len(self.queue)
             self.metrics.active = int(self._active_mask.sum())
             return len(active)
+
+    def _emit_stream(self, req: Request) -> None:
+        """Buffer the tokens this request's slot appended since the last
+        emission as one stream chunk (caller holds the step lock; delivery
+        happens off it, in ``drain_completions``).  Only requests with a
+        registered chunk callback buffer anything, so sync callers and
+        abandoned requests cost nothing."""
+        n = len(req.generated)
+        if n <= req.streamed:
+            return
+        chunk = [int(t) for t in req.generated[req.streamed:]]
+        req.streamed = n
+        with self._done_lock:
+            if req.request_id in self._stream_cbs:
+                self._stream_pending.append((req, chunk))
 
     def _step_paged(self, active: List[int], budget: int) -> set:
         """One paged-native fused step.
@@ -1347,6 +1389,12 @@ class InferenceEngine:
         req = self.slots[slot]
         req.finished = True
         req.finished_at = now
+        if not req.expired:
+            # flush the final tokens as a last chunk BEFORE delivery, so a
+            # consumer's chunk stream concatenates to exactly the completion
+            # value.  Expired requests emit nothing further: their partial
+            # generation is worthless past the deadline.
+            self._emit_stream(req)
         if req.expired:
             # deadline preemption: the partial generation is worthless and
             # its tokens never reach the transcript, so don't leave a warm
@@ -1436,6 +1484,10 @@ class InferenceEngine:
         with self._lock:
             with self._done_lock:
                 self._callbacks.pop(request_id, None)
+                self._stream_cbs.pop(request_id, None)
+                self._stream_pending = [
+                    (r, c) for r, c in self._stream_pending
+                    if r.request_id != request_id]
             req = self.queue.remove(request_id)
             if req is not None:
                 self.metrics.queued = len(self.queue)
@@ -1470,6 +1522,8 @@ class InferenceEngine:
             self._slot_tokens.clear()
             with self._done_lock:
                 self._callbacks.clear()
+                self._stream_cbs.clear()
+                self._stream_pending.clear()
             self.metrics.queued = 0
             self.metrics.active = 0
             return n

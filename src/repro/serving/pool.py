@@ -134,6 +134,23 @@ class EnginePool:
                 out.append(iid)
         return out
 
+    def drain(self, timeout: float = 5.0) -> int:
+        """Graceful pool shutdown: drain every replica's bridge (stop
+        admitting, wait for in-flight work, fail-fast leftovers).  Futures
+        mid-stream when their replica's timeout hits fail like any other
+        in-flight work — their chunk iterators wake with the failure, so
+        HTTP streams and pipelined consumers terminate promptly instead of
+        hanging on a half-delivered answer.  Returns total futures
+        failed-fast (0 = clean drain)."""
+        failed = 0
+        for iid in self.instance_ids:
+            bridge = self.bridge_of(iid)
+            if bridge is not None:
+                failed += bridge.drain(timeout)
+        if failed:
+            self._bump("failed_inflight", failed)
+        return failed
+
     # ------------------------------------------------------- replica failure
     def on_replica_killed(self, instance_id: str) -> None:
         """Fault-injection hook: ``runtime.kill_instance(iid, hard=True)``.
@@ -191,6 +208,12 @@ class EnginePool:
         destination, or the session lives on neither replica).  If the
         session has an in-flight call on the source, the move is scheduled
         to run the moment that call resolves and 1 is returned.
+
+        Streaming composes with deferral for free: a partially-streamed
+        in-flight call keeps streaming from the source until it completes
+        (its chunks carry the source's owner fence), and only then does the
+        session re-home — a consumer's chunk iterator never straddles two
+        replicas mid-attempt.
         """
         if not session_id:
             return 0

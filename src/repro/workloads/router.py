@@ -207,6 +207,81 @@ def build_pool_runtime(*, replicas: int = 3, arch: str = "qwen3_0_6b",
     return rt
 
 
+def classify_tokens(out, k: int = 10) -> str:
+    """Branch from the first ``k`` output tokens only.
+
+    Accepts either a partial token list (the streamed path hands the
+    classifier ``Future.partial()`` — a plain prefix of token ids) or the
+    full engine result (the completion path hands the resolved value, which
+    carries ``.tokens``).  Depending only on the first ``k`` tokens is what
+    makes the two paths decide identically: greedy decode regenerates the
+    same prefix, so a router that looked past position ``k`` would be the
+    only source of divergence.
+    """
+    toks = list(getattr(out, "tokens", out))[:k]
+    return "code" if sum(int(t) for t in toks) % 2 else "chat"
+
+
+def add_stream_classifier(rt: NalarRuntime, *, latency: float = 0.02,
+                          k: int = 10) -> None:
+    """Register the pipelining classifier on a pool runtime.
+
+    An emulated CPU agent (works on real-time kernels, same as
+    :func:`build_engine_runtime`'s router) whose one method classifies from
+    the first ``k`` tokens — the downstream consumer of the streaming data
+    plane's ``stream_min_tokens`` hint.
+    """
+    rt.register_agent(AgentSpec(
+        name="classifier",
+        methods={"classify": emulated(
+            FixedLatency(latency), lambda out: classify_tokens(out, k))},
+        directives=Directives(max_instances=2, resources={"CPU": 1}),
+    ), instances=1)
+
+
+def streamed_routed_driver(query: str, out_tokens: int = 24,
+                           stream_min: int = 10,
+                           refine_tokens: int = 6) -> Dict[str, object]:
+    """Route on partial output: the classifier starts after ``stream_min``
+    streamed tokens, so the branch call overlaps the tail of the upstream
+    generation instead of queueing behind it.
+
+    The branch call detaches from the driver session (``session_id: ""``):
+    the per-session ordering that keeps multi-turn transcripts consistent
+    would otherwise park it behind the still-streaming draft — the very
+    call it is pipelining past.
+    """
+    rt = current_runtime()
+    draft = rt.stub("llm").generate(query, _hint={"out_tokens": out_tokens})
+    branch = rt.stub("classifier").classify(
+        draft, _hint={"stream_min_tokens": stream_min}).value()
+    refine = rt.stub("llm").generate(
+        f"{branch} follow-up: {query}",
+        _hint={"out_tokens": refine_tokens, "session_id": ""})
+    d = draft.value()
+    r = refine.value()
+    return {"branch": branch, "draft": [int(t) for t in d.tokens],
+            "refine": [int(t) for t in r.tokens]}
+
+
+def completion_routed_driver(query: str, out_tokens: int = 24,
+                             refine_tokens: int = 6) -> Dict[str, object]:
+    """Baseline twin of :func:`streamed_routed_driver`: identical workflow,
+    no streaming hints — the classifier waits for the draft to resolve
+    fully, and the branch call starts only after.  Greedy decode makes the
+    two drivers' outputs byte-identical; only the overlap differs."""
+    rt = current_runtime()
+    draft = rt.stub("llm").generate(query, _hint={"out_tokens": out_tokens})
+    branch = rt.stub("classifier").classify(draft).value()
+    refine = rt.stub("llm").generate(
+        f"{branch} follow-up: {query}",
+        _hint={"out_tokens": refine_tokens, "session_id": ""})
+    d = draft.value()
+    r = refine.value()
+    return {"branch": branch, "draft": [int(t) for t in d.tokens],
+            "refine": [int(t) for t in r.tokens]}
+
+
 def routed_driver(query: str, in_tokens: int, out_tokens: int) -> str:
     rt = current_runtime()
     branch = rt.stub("router").classify(query).value()

@@ -1,0 +1,382 @@
+"""Token-streaming data plane: incremental futures end to end.
+
+Covers the tentpole contract:
+ * ``Future`` grows an append-only chunk log — ``partial()`` /
+   ``wait_streamed()`` / ``iter_chunks()`` compose with materialize /
+   fail / cancel / ``reset_for_retry`` (retry truncates the log back to
+   the attempt boundary, exactly-once);
+ * run-id + stream-owner double fencing: a hedged loser and a superseded
+   attempt can never interleave stale tokens into the winner's chunk log;
+ * the engine emits per-slot chunks incrementally and their concatenation
+   is byte-identical to the completed generation;
+ * ``stream_min_tokens`` unparks a consumer on partial availability, so a
+   classifier starts before its upstream resolves;
+ * streamed and completion-only drivers produce byte-identical outputs
+   (greedy decode) through the real engine pool;
+ * TTFT is stamped from the first accepted chunk and surfaces in
+   ``Telemetry.deadline_outcomes()``;
+ * ``EngineBridge.drain()`` with partially-streamed in-flight requests
+   fails leftovers fast — blocked chunk iterators raise, never hang;
+ * the OpenAI-compatible SSE endpoint delivers incrementally with final
+   text byte-identical to the non-streaming response (real TCP client).
+"""
+
+import threading
+import time
+
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (AgentSpec, Directives, FixedLatency, NalarRuntime,
+                        deployment, emulated)
+from repro.core.future import (Future, FutureMetadata, InstanceDied,
+                               resolve_args)
+from repro.core.runtime import current_runtime
+from repro.models import build_model
+from repro.serving import (InferenceEngine, Request, SamplingParams,
+                           register_engine_agent)
+from repro.workloads.router import (add_stream_classifier, classify_tokens,
+                                    build_pool_runtime,
+                                    completion_routed_driver,
+                                    streamed_routed_driver)
+
+
+@pytest.fixture(scope="module")
+def model_setup():
+    cfg = get_smoke_config("qwen3_0_6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def pool_rt():
+    rt = build_pool_runtime(replicas=2, max_batch=4, max_new_tokens=16,
+                            seed=0)
+    add_stream_classifier(rt, latency=0.01, k=4)
+    rt.start()
+    yield rt
+    rt.shutdown()
+
+
+def make_rt():
+    """Real-time kernel, no engines — chunk events are plain wall-clock
+    waits, so the unit tests can drive futures from arbitrary threads."""
+    return NalarRuntime(simulate=False)
+
+
+def mk_future(rt):
+    f = Future(rt, FutureMetadata())
+    rt.futures.add(f)
+    return f
+
+
+# ------------------------------------------------------------ chunk-log unit
+def test_append_partial_order_and_state():
+    rt = make_rt()
+    f = mk_future(rt)
+    assert not f.streaming and f.streamed() == 0 and f.partial() == []
+    assert f.append_chunk([1, 2])
+    assert f.append_chunk([3])
+    assert f.streaming and f.streamed() == 3 and f.partial() == [1, 2, 3]
+    f.materialize("v", now=0.0)
+    assert not f.streaming                 # STREAMING is a RUNNING sub-state
+    assert f.partial() == [1, 2, 3]        # log survives materialization
+    assert not f.append_chunk([4])         # terminal: appends rejected
+    assert f.partial() == [1, 2, 3]
+
+
+def test_wait_streamed_wakes_on_chunks_and_on_terminal():
+    rt = make_rt()
+    f = mk_future(rt)
+    threading.Timer(0.05, lambda: f.append_chunk([7, 8])).start()
+    assert f.wait_streamed(2, timeout=10.0) >= 2
+    # terminal resolution wakes a waiter that will never get n tokens
+    threading.Timer(0.05, lambda: f.fail(RuntimeError("boom"), 0.0)).start()
+    got = f.wait_streamed(99, timeout=10.0)
+    assert got == 2 and f.available
+
+
+def test_iter_chunks_drains_seals_and_terminates():
+    rt = make_rt()
+    f = mk_future(rt)
+    f.append_chunk([1])
+    f.append_chunk([2, 3])
+    f.seal_stream([1, 2, 3, 4, 5])         # completion appends unstreamed tail
+    f.materialize("done", now=0.0)
+    got = list(f.iter_chunks(timeout=5.0))
+    assert [t for c in got for t in c] == [1, 2, 3, 4, 5]
+    assert f.partial() == [1, 2, 3, 4, 5]
+
+
+def test_iter_chunks_raises_on_midstream_failure():
+    rt = make_rt()
+    f = mk_future(rt)
+    f.append_chunk([1])
+    seen, errs = [], []
+
+    def consume():
+        try:
+            for c in f.iter_chunks(timeout=10.0):
+                seen.append(list(c))
+        except RuntimeError as e:
+            errs.append(e)
+    t = threading.Thread(target=consume)
+    t.start()
+    time.sleep(0.05)
+    f.fail(RuntimeError("engine died"), now=0.0)
+    t.join(timeout=10.0)
+    assert not t.is_alive(), "iterator hung across a failure"
+    assert seen == [[1]] and len(errs) == 1
+
+
+def test_iter_chunks_timeout_on_stalled_stream():
+    rt = make_rt()
+    f = mk_future(rt)
+    it = f.iter_chunks(timeout=0.05)
+    with pytest.raises(TimeoutError):
+        next(it)
+
+
+# --------------------------------------------------- fencing (satellite 1)
+def test_retry_truncates_log_and_fences_stale_appends():
+    rt = make_rt()
+    f = mk_future(rt)
+    stale_run = f._run_id
+    assert f.append_chunk([9, 9], expect_run=stale_run)
+    assert f.reset_for_retry(1.0)
+    # the attempt boundary: log truncated, retry streams from scratch
+    assert f.partial() == [] and f.streamed() == 0 and not f.streaming
+    # zombie producer of the superseded attempt: fenced out
+    assert not f.append_chunk([9], expect_run=stale_run)
+    assert f.append_chunk([1, 2], expect_run=f._run_id)
+    assert f.partial() == [1, 2]
+
+
+def test_hedge_loser_cannot_interleave_with_stream_owner():
+    rt = make_rt()
+    f = mk_future(rt)
+    run = f._run_id
+    assert f.append_chunk([1], expect_run=run, owner="engine-A")
+    # hedge duplicate shares the run id — only the owner fence stops it
+    assert not f.append_chunk([9], expect_run=run, owner="engine-B")
+    assert f.append_chunk([2], expect_run=run, owner="engine-A")
+    assert f.partial() == [1, 2]
+    # winner A seals: pure tail append, no truncation
+    f.seal_stream([1, 2, 3], owner="engine-A", expect_run=run)
+    assert f.partial() == [1, 2, 3]
+
+
+def test_seal_by_winner_replaces_losers_claimed_stream():
+    rt = make_rt()
+    f = mk_future(rt)
+    run = f._run_id
+    # the loser won the race to first append and claimed the stream
+    assert f.append_chunk([9, 9], expect_run=run, owner="engine-B")
+    gen_before = f._chunk_gen
+    # hedge winner completes first: seal truncates the foreign prefix and
+    # replaces it wholesale so consumers assemble exactly the winning value
+    f.seal_stream([1, 2, 3], owner="engine-A", expect_run=run)
+    assert f.partial() == [1, 2, 3]
+    assert f._chunk_gen == gen_before + 1   # live iterators rewind
+    f.materialize("w", now=0.0)
+    assert [t for c in f.iter_chunks(timeout=5.0) for t in c] == [1, 2, 3]
+
+
+def test_live_iterator_rewinds_across_retry():
+    rt = make_rt()
+    f = mk_future(rt)
+    got = []
+
+    def consume():
+        for c in f.iter_chunks(timeout=10.0):
+            got.append(list(c))
+    t = threading.Thread(target=consume)
+    f.append_chunk([9, 9])                 # doomed first attempt
+    t.start()
+    time.sleep(0.05)
+    assert f.reset_for_retry(1.0)
+    f.append_chunk([1, 2])                 # the retry re-streams
+    f.append_chunk([3])
+    f.seal_stream([1, 2, 3])
+    f.materialize("v", now=2.0)
+    t.join(timeout=10.0)
+    assert not t.is_alive()
+    # the rewind re-delivered the fresh attempt from index 0
+    assert got[0] == [9, 9] and got[-2:] == [[1, 2], [3]]
+    assert f.partial() == [1, 2, 3]
+
+
+def test_resolve_args_substitutes_partial_for_streaming_dep():
+    rt = make_rt()
+    f = mk_future(rt)
+    f.append_chunk([5, 6, 7])
+    args, kwargs = resolve_args((f, "x"), {"k": 1}, stream_min=2)
+    assert args == ([5, 6, 7], "x") and kwargs == {"k": 1}
+    f.materialize("full", now=0.0)
+    args, _ = resolve_args((f,), {})       # resolved dep: value as usual
+    assert args == ("full",)
+
+
+# ------------------------------------------------- controller partial wakeup
+def test_stream_min_tokens_unparks_consumer_before_dep_resolves():
+    rt = make_rt()
+    rt.register_agent(AgentSpec(
+        name="classifier",
+        methods={"classify": emulated(
+            FixedLatency(0.01), lambda toks: f"n={len(list(toks))}")},
+        directives=Directives(max_instances=2, resources={"CPU": 1}),
+    ), instances=1)
+
+    def driver():
+        r = current_runtime()
+        src = mk_future(r)
+        fut = r.stub("classifier").classify(
+            src, _hint={"stream_min_tokens": 3})
+        time.sleep(0.2)
+        assert not fut.available, "consumer ran with no streamed input"
+        src.append_chunk([1, 2])
+        time.sleep(0.2)
+        assert not fut.available, "consumer ran below stream_min_tokens"
+        src.append_chunk([3])
+        out = fut.value(timeout=30.0)
+        # the classifier consumed the partial snapshot while the upstream
+        # was still unresolved — that is the inter-step pipelining claim
+        assert not src.available
+        src.materialize("full", now=r.kernel.now())
+        return out
+
+    assert deployment.main(driver, runtime=rt) == "n=3"
+
+
+def test_classify_tokens_partial_and_result_agree():
+    class R:
+        tokens = [4, 1, 3, 2, 9, 9, 9]
+    assert classify_tokens(R(), k=4) == classify_tokens([4, 1, 3, 2], k=4)
+    assert classify_tokens([2, 2], k=4) == "chat"     # even sum
+    assert classify_tokens([2, 3], k=4) == "code"     # odd sum
+
+
+# --------------------------------------------------------------- engine layer
+def test_engine_emits_incremental_chunks(model_setup):
+    cfg, model, params = model_setup
+    engine = InferenceEngine(model, params, max_batch=2, max_seq=64)
+    chunks, done = [], []
+    req = Request.make(list(range(5)),
+                       sampling=SamplingParams(max_new_tokens=4))
+    engine.submit_async(req, on_done=done.append,
+                        on_chunk=lambda r, c: chunks.append(list(c)))
+    for _ in range(200):
+        if done:
+            break
+        engine.step()
+        engine.drain_completions()
+    assert done == [req] and len(req.generated) == 4
+    # incremental: one chunk per decode step, not one final blob
+    assert len(chunks) >= 2
+    assert [t for c in chunks for t in c] == list(req.generated)
+    assert req.streamed == len(req.generated)
+
+
+def test_engine_without_chunk_callback_unchanged(model_setup):
+    cfg, model, params = model_setup
+    engine = InferenceEngine(model, params, max_batch=2, max_seq=64)
+    done = []
+    req = Request.make(list(range(4)),
+                       sampling=SamplingParams(max_new_tokens=3))
+    engine.submit_async(req, on_done=done.append)
+    engine.run_until_idle()
+    engine.drain_completions()
+    assert done == [req] and len(req.generated) == 3
+
+
+# ------------------------------------------------------------ pool end-to-end
+def _run_request(rt, driver, *args, timeout=240.0):
+    box, evt = {}, threading.Event()
+
+    def cb(out, err):
+        box["out"], box["err"] = out, err
+        evt.set()
+    rt.submit_request(driver, *args, on_done=cb)
+    assert evt.wait(timeout), "request did not complete"
+    if box["err"] is not None:
+        raise box["err"]
+    return box["out"]
+
+
+def test_streamed_and_completion_drivers_byte_identical(pool_rt):
+    q = "byte identical probe query"
+    comp = _run_request(pool_rt, completion_routed_driver, q, 12, 4)
+    strm = _run_request(pool_rt, streamed_routed_driver, q, 12, 4, 4)
+    assert comp == strm                     # branch + draft + refine tokens
+    assert len(comp["draft"]) == 12 and len(comp["refine"]) == 4
+
+
+def test_chunks_concatenate_to_completion_value_and_ttft(pool_rt):
+    def driver():
+        r = current_runtime()
+        fut = r.stub("llm").generate("chunk concat probe",
+                                     _hint={"out_tokens": 8})
+        got = [list(c) for c in fut.iter_chunks(timeout=120.0)]
+        v = fut.value()
+        return got, [int(t) for t in v.tokens]
+
+    got, toks = _run_request(pool_rt, driver)
+    assert [t for c in got for t in c] == toks and len(toks) == 8
+    assert len(got) >= 2                    # streamed, not one sealed blob
+    dl = pool_rt.telemetry.deadline_outcomes()
+    # satellite: TTFT stamped from the first accepted chunk append
+    assert dl["ttft_n"] >= 1
+    assert 0 < dl["ttft_p50"] <= dl["ttft_p99"]
+
+
+# ------------------------------------------------- drain mid-stream (sat. 3)
+def test_drain_fails_partially_streamed_requests_fast(model_setup):
+    cfg, model, params = model_setup
+    rt = NalarRuntime(simulate=False)
+    engine = InferenceEngine(model, params, max_batch=2, max_seq=256)
+    register_engine_agent(rt, "llm", engine,
+                          sampling=SamplingParams(max_new_tokens=192))
+    bridge = rt.engine_backends["llm"]
+    rt.start()
+    box, started = {}, threading.Event()
+
+    def driver():
+        r = current_runtime()
+        fut = r.stub("llm").generate("long streaming request",
+                                     _hint={"out_tokens": 192})
+        box["fut"] = fut
+        started.set()
+        try:
+            for _ in fut.iter_chunks(timeout=60.0):
+                pass
+            return "completed"
+        except InstanceDied:
+            return "iterator-raised"
+
+    rt.submit_request(driver, on_done=lambda out, err: box.update(
+        out=out, err=err, done=True))
+    assert started.wait(120.0)
+    fut = box["fut"]
+    fut.wait_streamed(1, timeout=120.0)     # request is now mid-stream
+    t0 = time.monotonic()
+    failed = bridge.drain(timeout=0.2)
+    assert failed == 1                      # the leftover was failed fast
+    deadline = time.monotonic() + 30.0
+    while "done" not in box and time.monotonic() < deadline:
+        time.sleep(0.02)
+    assert box.get("done"), "consumer hung after drain"
+    assert box["err"] is None and box["out"] == "iterator-raised"
+    assert time.monotonic() - t0 < 10.0
+    with pytest.raises(InstanceDied):
+        fut.value()
+    rt.shutdown()
+
+
+# ----------------------------------------------------------- HTTP front end
+def test_openai_endpoint_streams_and_matches_nonstreaming():
+    from repro.launch.serve import selftest
+    # ephemeral port, real TCP client; asserts >1 incremental content
+    # event, monotonic seqs, and streamed == non-streamed final text
+    selftest(replicas=1, max_new=8)
